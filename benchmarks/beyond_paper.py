@@ -1,0 +1,64 @@
+"""Beyond-paper ablations: extensions the paper lists as future work
+(§6), implemented and measured against the FedTune baseline.
+
+  guided      — Oort-lite utility-based participant selection
+  smallest    — deadline-style selection (bounds the CompT straggler term)
+  int8-upload — compressed client deltas (TransL upload / 4)
+  adaptive    — FedTune with magnitude-scaled steps (paper's noted
+                'change hyper-parameters with adaptive degrees')
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BenchSettings, emit, fedtune_for, improvement,
+                               run_fl)
+from repro.core.preferences import Preference
+
+PREF = Preference(0.25, 0.25, 0.25, 0.25)
+
+
+def _run(settings, label, *, selection="random", compression=None,
+         adaptive=False, tuner_on=True):
+    import jax
+    from benchmarks.common import DATASETS, small_model
+    from repro.core import CostModel
+    from repro.federated import FLConfig, FLServer, get_aggregator
+    from repro.optim.optimizers import get_optimizer
+
+    ds = DATASETS["emnist"](reduced=not settings.full, seed=0)
+    model = small_model("emnist")
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    cm = CostModel(flops_per_example=2 * n_params, param_count=n_params)
+    tuner = fedtune_for(PREF, settings.m0, settings.e0,
+                        adaptive=adaptive) if tuner_on else None
+    server = FLServer(
+        model, ds, get_aggregator("fedavg"),
+        get_optimizer("sgd", settings.lr, momentum=0.9), cm,
+        FLConfig(m=settings.m0, e=settings.e0, batch_size=10,
+                 target_accuracy=settings.target_accuracy,
+                 max_rounds=settings.max_rounds, eval_points=512,
+                 selection=selection, compression=compression),
+        tuner=tuner)
+    res = server.run()
+    return res
+
+
+def main(settings: BenchSettings):
+    base = _run(settings, "baseline", tuner_on=False)
+    emit("beyond/baseline-fixed", 0.0,
+         f"rounds={base.rounds};acc={base.final_accuracy:.3f}")
+    for label, kw in {
+        "fedtune": {},
+        "fedtune+guided": {"selection": "guided"},
+        "fedtune+smallest": {"selection": "smallest"},
+        "fedtune+int8upload": {"compression": "int8"},
+        "fedtune+adaptive": {"adaptive": True},
+    }.items():
+        res = _run(settings, label, **kw)
+        gain = improvement(PREF, base.total_cost, res.total_cost)
+        emit(f"beyond/{label}", 0.0,
+             f"gain={gain:+.2f}%;rounds={res.rounds};"
+             f"acc={res.final_accuracy:.3f};M={res.final_m};E={res.final_e:g}")

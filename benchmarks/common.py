@@ -1,0 +1,98 @@
+"""Shared benchmark plumbing.
+
+All FL benchmarks run at REDUCED scale by default so the whole suite
+finishes on one CPU core (synthetic reduced datasets, small MLP/ResNet);
+pass ``--full`` to benchmarks.run for paper-scale settings.  Every benchmark
+prints ``name,us_per_call,derived`` CSV rows via ``emit``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel, FedTune, FedTuneConfig, Preference
+from repro.core.tuner import HyperParams, Tuner
+from repro.data import (cifar100_like, emnist_like, speech_command_like)
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+DATASETS = {
+    "speech_command": speech_command_like,
+    "emnist": emnist_like,
+    "cifar100": cifar100_like,
+}
+
+
+@dataclass
+class BenchSettings:
+    full: bool = False
+    seeds: int = 1
+    max_rounds: int = 120
+    target_accuracy: float = 0.5
+    m0: int = 5
+    e0: float = 2.0
+    lr: float = 0.03
+    batch_size: int = 10
+
+
+def small_model(dataset_name: str, reduced: bool = True):
+    """The benchmark workhorse: a small MLP sized to the dataset."""
+    shapes = {"speech_command": (16 * 16, 10), "emnist": (28 * 28, 16),
+              "cifar100": (16 * 16 * 3, 20)}
+    in_dim, n_classes = shapes[dataset_name]
+    cfg = MLPConfig(name=f"mlp_{dataset_name}", in_dim=in_dim,
+                    hidden=(48,), n_classes=n_classes)
+    return build_model(cfg)
+
+
+def run_fl(dataset_name: str, settings: BenchSettings, *,
+           tuner: Optional[Tuner] = None, aggregator: str = "fedavg",
+           m: Optional[int] = None, e: Optional[float] = None,
+           seed: int = 0, model=None, target: Optional[float] = None,
+           max_rounds: Optional[int] = None):
+    ds = DATASETS[dataset_name](reduced=not settings.full, seed=seed)
+    model = model or small_model(dataset_name)
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    flops = model.flops_per_example or 2 * n_params
+    cm = CostModel(flops_per_example=flops, param_count=n_params)
+    server = FLServer(
+        model, ds, get_aggregator(aggregator),
+        get_optimizer("sgd", settings.lr, momentum=0.9), cm,
+        FLConfig(m=m if m is not None else settings.m0,
+                 e=e if e is not None else settings.e0,
+                 batch_size=settings.batch_size,
+                 target_accuracy=target if target is not None
+                 else settings.target_accuracy,
+                 max_rounds=max_rounds or settings.max_rounds,
+                 eval_points=512, seed=seed),
+        tuner=tuner)
+    t0 = time.perf_counter()
+    res = server.run()
+    res.wall = time.perf_counter() - t0
+    return res
+
+
+def fedtune_for(pref: Preference, m0: int, e0: float, *,
+                penalty: float = 10.0, adaptive: bool = False) -> FedTune:
+    return FedTune(FedTuneConfig(preference=pref, penalty=penalty,
+                                 adaptive_step=adaptive),
+                   HyperParams(m0, e0))
+
+
+def improvement(pref: Preference, fixed_cost, tuned_cost) -> float:
+    """Positive percentage = FedTune reduced the weighted overhead
+    (paper's '+x%' convention = -I(fixed, tuned) * 100)."""
+    return -100.0 * tuned_cost.weighted_relative_to(fixed_cost, pref)

@@ -1,0 +1,24 @@
+"""Paper Table 6: FedTune across aggregation algorithms."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BenchSettings, emit, fedtune_for, improvement,
+                               run_fl)
+from repro.core.preferences import PAPER_PREFERENCES
+
+
+def main(settings: BenchSettings, prefs=None):
+    prefs = prefs or PAPER_PREFERENCES[:6]
+    for aggregator in ("fedavg", "fednova", "fedadagrad"):
+        base = run_fl("emnist", settings, aggregator=aggregator)
+        gains = []
+        for pref in prefs:
+            tuner = fedtune_for(pref, settings.m0, settings.e0)
+            res = run_fl("emnist", settings, tuner=tuner,
+                         aggregator=aggregator)
+            gains.append(improvement(pref, base.total_cost, res.total_cost))
+        emit(f"table6/{aggregator}", base.wall * 1e6,
+             f"mean_gain={np.mean(gains):+.2f}%;std={np.std(gains):.2f};"
+             f"base_acc={base.final_accuracy:.3f}")

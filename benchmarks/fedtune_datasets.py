@@ -1,0 +1,25 @@
+"""Paper Table 5: FedTune across datasets (FedAvg aggregation)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BenchSettings, emit, fedtune_for, improvement,
+                               run_fl)
+from repro.core.preferences import PAPER_PREFERENCES
+
+
+def main(settings: BenchSettings, prefs=None):
+    prefs = prefs or PAPER_PREFERENCES[:6]  # subset keeps CPU time sane
+    targets = {"speech_command": 0.5, "emnist": 0.5, "cifar100": 0.3}
+    for dataset, target in targets.items():
+        base = run_fl(dataset, settings, aggregator="fedavg", target=target)
+        gains = []
+        for pref in prefs:
+            tuner = fedtune_for(pref, settings.m0, settings.e0)
+            res = run_fl(dataset, settings, tuner=tuner,
+                         aggregator="fedavg", target=target)
+            gains.append(improvement(pref, base.total_cost, res.total_cost))
+        emit(f"table5/{dataset}", base.wall * 1e6,
+             f"mean_gain={np.mean(gains):+.2f}%;std={np.std(gains):.2f};"
+             f"base_acc={base.final_accuracy:.3f}")

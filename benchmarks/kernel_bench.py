@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths (the CPU
+executable analogues; the Pallas kernels themselves target TPU and are
+validated in interpret mode by tests)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BenchSettings, emit
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(settings: BenchSettings):
+    # fed_aggregate: the per-round server reduction
+    m, n = 20, 1_000_000
+    w = jnp.full((m,), 1.0 / m)
+    d = jax.random.normal(KEY, (m, n))
+    agg = jax.jit(ref.fed_aggregate_ref)
+    emit("kernel/fed_aggregate_ref_20x1M", _time(agg, w, d),
+         f"bytes={d.nbytes}")
+
+    # flash attention reference at a prefill-ish shape
+    q = jax.random.normal(KEY, (1, 8, 1024, 64))
+    k = jax.random.normal(KEY, (1, 2, 1024, 64))
+    v = jax.random.normal(KEY, (1, 2, 1024, 64))
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    emit("kernel/flash_attention_ref_1k", _time(fa, q, k, v),
+         "flops=%.3g" % (4 * 1024 * 1024 * 8 * 64))
+
+    # rglru scan
+    a = jax.random.uniform(KEY, (4, 2048, 512), minval=0.9, maxval=0.999)
+    b = jax.random.normal(KEY, (4, 2048, 512))
+    rg = jax.jit(ref.rglru_scan_ref)
+    emit("kernel/rglru_scan_ref_4x2048x512", _time(rg, a, b),
+         f"bytes={a.nbytes * 2}")

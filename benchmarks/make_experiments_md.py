@@ -1,0 +1,129 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts + the analytic model.
+
+    PYTHONPATH=src:. python benchmarks/make_experiments_md.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.roofline.analytic import analyze
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def load():
+    recs = {}
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_section(recs) -> str:
+    out = ["## §Dry-run",
+           "",
+           "Every (architecture x input shape) lowered AND compiled on the "
+           "single-pod `(16,16)` mesh and the multi-pod `(2,16,16)` mesh "
+           "(512 host placeholder devices).  `peak` = per-device "
+           "`memory_analysis()` peak (args + temp + out − aliased); "
+           "`coll ops` = collective kinds found in the compiled HLO.",
+           "",
+           "| arch | shape | mesh | status | peak/dev | HLO collectives | compile |",
+           "|---|---|---|---|---|---|---|"]
+    n_ok = n_fail = 0
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if r["status"] != "ok":
+                    n_fail += 1
+                    out.append(f"| {arch} | {shape} | {mesh} | FAIL | - | "
+                               f"{r.get('error', '')[:60]} | - |")
+                    continue
+                n_ok += 1
+                counts = (r.get("coll_breakdown") or {}).get("counts", {})
+                kinds = ",".join(f"{k.split('-')[0]}-{k.split('-')[1][:3]}"
+                                 f"x{v}" for k, v in counts.items() if v)
+                peak = r.get("peak_memory_bytes", 0) / 2**30
+                out.append(
+                    f"| {arch} | {shape} | {mesh} | OK | {peak:.1f} GiB | "
+                    f"{kinds or '-'} | {r.get('t_compile_s', 0):.0f}s |")
+    out.insert(3, f"**{n_ok} OK / {n_fail} FAIL** across "
+                  f"{len(ARCH_NAMES)}x{len(SHAPES)}x2 combinations.")
+    return "\n".join(out)
+
+
+def roofline_section(recs) -> str:
+    out = ["## §Roofline",
+           "",
+           "Per (arch x shape) on the single-pod mesh (256 chips, v5e: "
+           "197 TF/s bf16, 819 GB/s HBM, 2x50 GB/s ICI).  Terms are "
+           "per-device seconds from the ANALYTIC model (XLA *CPU* "
+           "`cost_analysis` counts while-loop bodies once — see the "
+           "validation row; HLO-parsed collective bytes are reported "
+           "alongside as the structural cross-check).  `useful` = "
+           "MODEL_FLOPS(6·N_active·D) / lowered FLOPs — it exposes the "
+           "deliberate overcompute (remat ~25%, dense-MoE E/k, unskipped "
+           "masked attention chunks).",
+           "",
+           "| arch | shape | compute | memory | collective | bottleneck | "
+           "useful | HLO coll bytes/dev | peak/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            shape = get_shape(shape_name)
+            a = analyze(cfg, shape)
+            t = a.terms()
+            r = recs.get((arch, shape_name, "16x16"), {})
+            coll_hlo = r.get("coll_bytes", 0.0)
+            peak = r.get("peak_memory_bytes", 0) / 2**30
+            useful = a.flops_ideal / max(a.flops, 1e-9)
+            note = ""
+            if (not cfg.subquadratic) and shape.seq_len > 65536 \
+                    and shape.kind == "decode":
+                note = " [SW]"
+            out.append(
+                f"| {arch}{note} | {shape_name} | {t['compute']*1e3:.2f} ms | "
+                f"{t['memory']*1e3:.2f} ms | {t['collective']*1e3:.2f} ms | "
+                f"**{a.bottleneck()}** | {useful:.0%} | "
+                f"{coll_hlo/2**20:.0f} MiB | {peak:.1f} GiB |")
+    # one-line "what would move the bottleneck" notes
+    out += ["",
+            "Per-family bottleneck notes (what would move the dominant term):",
+            "- **MoE train/prefill (dbrx, granite)**: compute-bound with low "
+            "useful fraction — the masked dense-expert lowering costs E/k x; "
+            "a shard_map all-to-all dispatch recovers it (§Perf H1).",
+            "- **dense train (qwen2, command-r, minitron, gemma2)**: compute "
+            "~ collective; the FSDP all-gathers + f32 grad reduce-scatter "
+            "dominate collectives — quantized aggregation shrinks them "
+            "(§Perf H3, the paper's TransL knob at the gradient level).",
+            "- **decode (all)**: collective/memory-bound on weight gathers; "
+            "int8 serving weights halve both terms (§Perf H2).",
+            "- **recurrent/ssm (recurrentgemma, xlstm)**: already "
+            "sub-quadratic; long_500k decode runs in O(state), 0.2-10 GiB/dev.",
+            ]
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    print(dryrun_section(recs))
+    print()
+    print(roofline_section(recs))
+
+
+if __name__ == "__main__":
+    main()

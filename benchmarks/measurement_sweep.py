@@ -1,0 +1,42 @@
+"""Paper Fig. 4 / Table 3: CompT, TransT, CompL, TransL when a different
+number of participants M and number of training passes E are used."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BenchSettings, emit, run_fl
+
+M_GRID = (1, 5, 10)
+E_GRID = (0.5, 1, 2, 4)
+
+
+def main(settings: BenchSettings):
+    rows = {}
+    for m in M_GRID:
+        for e in E_GRID:
+            res = run_fl("emnist", settings, m=m, e=e)
+            c = res.total_cost
+            rows[(m, e)] = c
+            emit(f"fig4/M={m}/E={e}", res.wall * 1e6,
+                 f"rounds={res.rounds};acc={res.final_accuracy:.3f};"
+                 f"CompT={c.comp_t:.3g};TransT={c.trans_t:.3g};"
+                 f"CompL={c.comp_l:.3g};TransL={c.trans_l:.3g}")
+
+    # Table 3 sign checks (monotone trends across the grid), reported as
+    # fractions of adjacent pairs following the paper's directions.
+    def trend(metric, axis):
+        agree = total = 0
+        for (m, e), c in rows.items():
+            nxt = (m + 4, e) if axis == "m" else (m, e * 2)
+            if nxt in rows:
+                total += 1
+                agree += (getattr(rows[nxt], metric)
+                          > getattr(rows[(m, e)], metric))
+        return agree / max(total, 1)
+
+    emit("table3/CompL_up_with_M", 0.0, f"frac={trend('comp_l', 'm'):.2f}")
+    emit("table3/TransL_up_with_M", 0.0, f"frac={trend('trans_l', 'm'):.2f}")
+    emit("table3/CompT_up_with_E", 0.0, f"frac={trend('comp_t', 'e'):.2f}")
+    emit("table3/CompL_up_with_E", 0.0, f"frac={trend('comp_l', 'e'):.2f}")
+    return rows

@@ -1,0 +1,37 @@
+"""Paper Fig. 5 / Table 2: system overhead versus model complexity.
+
+Part A reproduces Table 2's model characteristics (ResNet-10/18/26/34
+params + FLOPs).  Part B measures cost-to-target-accuracy across a model
+complexity sweep (MLP widths at reduced scale; ResNets with ``--full``)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import BenchSettings, emit, run_fl
+from repro.configs.paper_models import (MLPConfig, RESNET10, RESNET18,
+                                        RESNET26, RESNET34)
+from repro.models import build_model
+
+
+def main(settings: BenchSettings):
+    # Part A: Table 2 characteristics
+    for cfg in (RESNET10, RESNET18, RESNET26, RESNET34):
+        m = build_model(cfg)
+        n = sum(p.size for p in jax.tree.leaves(
+            m.init(jax.random.PRNGKey(0))))
+        emit(f"table2/{cfg.name}", 0.0,
+             f"params={n};flops={m.flops_per_example:.3g}")
+
+    # Part B: overhead-to-accuracy vs complexity
+    widths = (16, 48, 128) if not settings.full else (32, 128, 512)
+    for w in widths:
+        cfg = MLPConfig(name=f"mlp_w{w}", in_dim=28 * 28, hidden=(w,),
+                        n_classes=16)
+        model = build_model(cfg)
+        res = run_fl("emnist", settings, model=model, m=2, e=1.0)
+        c = res.total_cost
+        emit(f"fig5/width={w}", res.wall * 1e6,
+             f"rounds={res.rounds};acc={res.final_accuracy:.3f};"
+             f"CompT={c.comp_t:.3g};TransT={c.trans_t:.3g};"
+             f"CompL={c.comp_l:.3g};TransL={c.trans_l:.3g}")

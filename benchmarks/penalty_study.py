@@ -1,0 +1,34 @@
+"""Paper Fig. 8 / Fig. 9: the penalty mechanism.  Runs the degraded
+preferences with D=1 (no penalty) vs D=10 (full FedTune)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BenchSettings, emit, fedtune_for, improvement,
+                               run_fl)
+from repro.core.preferences import Preference
+
+# the three preferences the paper reports as degraded without penalty
+DEGRADED = (
+    Preference(0.0, 0.5, 0.5, 0.0),
+    Preference(0.0, 0.5, 0.0, 0.5),
+    Preference(1 / 3, 1 / 3, 0.0, 1 / 3),
+)
+
+
+def main(settings: BenchSettings):
+    base = run_fl("emnist", settings, aggregator="fedavg")
+    for d_factor in (1.0, 10.0):
+        gains = []
+        for pref in DEGRADED:
+            tuner = fedtune_for(pref, settings.m0, settings.e0,
+                                penalty=d_factor)
+            res = run_fl("emnist", settings, tuner=tuner,
+                         aggregator="fedavg")
+            g = improvement(pref, base.total_cost, res.total_cost)
+            gains.append(g)
+            emit(f"fig8/D={d_factor:g}/{pref}", res.wall * 1e6,
+                 f"gain={g:+.2f}%")
+        emit(f"fig9/D={d_factor:g}", 0.0,
+             f"mean_gain={np.mean(gains):+.2f}%;std={np.std(gains):.2f}")

@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import BenchSettings, emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main(settings: BenchSettings):
+    files = sorted(DRYRUN_DIR.glob("*.json")) if DRYRUN_DIR.exists() else []
+    if not files:
+        emit("roofline/NO_DRYRUN_DATA", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    n_ok = n_fail = 0
+    for f in files:
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            n_fail += 1
+            emit(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}", 0.0,
+                 f"FAILED:{rec.get('error', '?')[:80]}")
+            continue
+        n_ok += 1
+        emit(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+             rec.get("t_compile_s", 0.0) * 1e6,
+             f"comp_ms={rec['t_compute'] * 1e3:.3f};"
+             f"mem_ms={rec['t_memory'] * 1e3:.3f};"
+             f"coll_ms={rec['t_collective'] * 1e3:.3f};"
+             f"bottleneck={rec['bottleneck']};"
+             f"peak_GiB={rec['peak_memory_bytes'] / 2**30:.2f}")
+    emit("roofline/SUMMARY", 0.0, f"ok={n_ok};fail={n_fail}")

@@ -1,0 +1,68 @@
+"""Distributed FL round on a (small) mesh: demonstrates the datacenter
+execution path — the same ``fl_train_step`` the 256/512-chip dry-run lowers,
+actually EXECUTED here on host devices with a reduced architecture.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/distributed_fl.py --arch gemma2-2b
+"""
+
+import argparse
+import os
+import sys
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.configs.shapes import InputShape
+from repro.launch.steps import make_fl_train_step
+from repro.models import stacked as stacked_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="gemma2-2b")
+    ap.add_argument("--rounds", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), n_layers=4)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    shape = InputShape("mini_train", seq_len=64, global_batch=8, kind="train")
+
+    jit_fn, (p_struct, m_struct, b_struct) = make_fl_train_step(
+        cfg, mesh, shape, dtype=jnp.float32, lr=1e-2)
+
+    key = jax.random.PRNGKey(0)
+    with mesh:
+        params = stacked_mod.init_params_stacked(cfg, key)
+        momentum = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        print(f"arch={args.arch} (reduced)  mesh=4x2  "
+              f"params={sum(x.size for x in jax.tree.leaves(params)):,}")
+        for r in range(args.rounds):
+            batch = {
+                "tokens": jax.random.randint(
+                    jax.random.fold_in(key, r), (8, 64), 0, cfg.vocab_size),
+                "labels": jax.random.randint(
+                    jax.random.fold_in(key, r), (8, 64), 0, cfg.vocab_size),
+                # FedAvg weights: 8 participant slots with unequal n_k
+                "weight": jnp.asarray([1, 2, 1, 4, 1, 2, 3, 2], jnp.float32),
+            }
+            if cfg.frontend is not None:
+                batch["frontend"] = jax.random.normal(
+                    key, (8, cfg.frontend.seq_len, cfg.frontend.feature_dim))
+            params, momentum, loss, metrics = jit_fn(params, momentum, batch)
+            print(f"  round {r}: weighted FL loss={float(loss):.4f} "
+                  f"acc={float(metrics['acc']):.3f}")
+    print("distributed FL round executed (the dry-run lowers this exact "
+          "step on the 16x16 and 2x16x16 production meshes)")
+
+
+if __name__ == "__main__":
+    main()

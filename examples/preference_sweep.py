@@ -1,0 +1,56 @@
+"""Sweep application preferences (the paper's Fig. 7 trace view): shows how
+FedTune steers (M, E) differently per training preference.
+
+    PYTHONPATH=src python examples/preference_sweep.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel, FedTune, FedTuneConfig, Preference
+from repro.core.tuner import HyperParams
+from repro.data import emnist_like
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+
+PREFS = {
+    "CompT-only (a=1)": Preference(1, 0, 0, 0),
+    "TransT-only (b=1)": Preference(0, 1, 0, 0),
+    "CompL-only (g=1)": Preference(0, 0, 1, 0),
+    "TransL-only (d=1)": Preference(0, 0, 0, 1),
+    "balanced": Preference(0.25, 0.25, 0.25, 0.25),
+}
+
+
+def main():
+    dataset = emnist_like(reduced=True)
+    model = build_model(MLPConfig(name="mlp", in_dim=784, hidden=(48,),
+                                  n_classes=16))
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+
+    print(f"{'preference':22s} {'M trace':28s} {'E trace':28s} final")
+    for label, pref in PREFS.items():
+        tuner = FedTune(FedTuneConfig(preference=pref), HyperParams(5, 2))
+        server = FLServer(
+            model, dataset, get_aggregator("fedavg"),
+            get_optimizer("sgd", 0.03, momentum=0.9),
+            CostModel(flops_per_example=2 * n_params, param_count=n_params),
+            FLConfig(m=5, e=2, batch_size=10, target_accuracy=0.55,
+                     max_rounds=80),
+            tuner=tuner)
+        res = server.run()
+        ms = [t["m_next"] for t in tuner.trace][:8]
+        es = [t["e_next"] for t in tuner.trace][:8]
+        print(f"{label:22s} {str(ms):28s} {str(es):28s} "
+              f"M={res.final_m} E={res.final_e:g} acc={res.final_accuracy:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Minimal npz-based pytree checkpointing (no orbax in this container).
+
+Flattens the pytree with path-derived keys; restores into the same
+treedef.  Works for params, optimizer state, and FL server state.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0,
+                    metadata: dict | None = None):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, x: leaves.setdefault(_key(p), np.asarray(x)), tree)
+    np.savez(path.with_suffix(".npz"), **leaves)
+    meta = {"step": step, **(metadata or {})}
+    path.with_suffix(".json").write_text(json.dumps(meta))
+    return str(path.with_suffix(".npz"))
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    path = pathlib.Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    restored = jax.tree_util.tree_map_with_path(
+        lambda p, x: jax.numpy.asarray(data[_key(p)]), like)
+    meta = {}
+    if path.with_suffix(".json").exists():
+        meta = json.loads(path.with_suffix(".json").read_text())
+    return restored, meta

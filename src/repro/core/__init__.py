@@ -1,0 +1,7 @@
+from repro.core.costs import CostModel, SystemCost
+from repro.core.preferences import Preference
+from repro.core.fedtune import FedTune, FedTuneConfig
+from repro.core.tuner import FixedTuner, Tuner
+
+__all__ = ["CostModel", "SystemCost", "Preference", "FedTune",
+           "FedTuneConfig", "FixedTuner", "Tuner"]

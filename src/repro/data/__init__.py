@@ -1,0 +1,7 @@
+from repro.data.synthetic import (FederatedDataset, make_dataset,
+                                  speech_command_like, emnist_like,
+                                  cifar100_like)
+from repro.data.loader import client_batches
+
+__all__ = ["FederatedDataset", "make_dataset", "speech_command_like",
+           "emnist_like", "cifar100_like", "client_batches"]

@@ -1,0 +1,5 @@
+from repro.federated.aggregation import get_aggregator
+from repro.federated.client import local_train
+from repro.federated.server import FLConfig, FLServer
+
+__all__ = ["get_aggregator", "local_train", "FLConfig", "FLServer"]

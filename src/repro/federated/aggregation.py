@@ -1,0 +1,172 @@
+"""Server-side aggregation algorithms.
+
+All aggregators consume per-participant results
+  ClientUpdate(params, n_examples, n_steps)
+and produce the new global params.  The weighted sums run through the
+``fed_aggregate`` kernel path (Pallas on TPU, jnp reference elsewhere) on
+flattened parameter vectors.
+
+Implemented: FedAvg [McMahan'17], FedNova [Wang'20], and the adaptive
+server optimizers FedAdagrad / FedAdam / FedYogi [Reddi'21].  FedProx is a
+*client-side* proximal term (see federated/client.py) aggregated by FedAvg.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kernel_ops
+
+
+class ClientUpdate(NamedTuple):
+    params: Any        # client's local params after E passes
+    n_examples: int
+    n_steps: int       # local optimizer steps actually taken (tau_k)
+    last_loss: float = 0.0  # final local loss (guided selection signal)
+
+
+def _flatten(params):
+    leaves, treedef = jax.tree.flatten(params)
+    shapes = [l.shape for l in leaves]
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    return flat, (treedef, shapes, sizes)
+
+
+def _unflatten(flat, meta):
+    treedef, shapes, sizes = meta
+    out = []
+    off = 0
+    for shape, size in zip(shapes, sizes):
+        out.append(flat[off:off + size].reshape(shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def _weighted_combine(weights: np.ndarray, param_list: List[Any],
+                      base: Optional[Any] = None):
+    """sum_k w_k * params_k (+ base), via the fed_aggregate kernel."""
+    flats = []
+    meta = None
+    for p in param_list:
+        f, meta = _flatten(p)
+        flats.append(f)
+    deltas = jnp.stack(flats)                     # (M, N)
+    w = jnp.asarray(weights, jnp.float32)
+    base_flat = _flatten(base)[0] if base is not None else None
+    out = kernel_ops.fed_aggregate(w, deltas, base_flat)
+    return _unflatten(out, meta)
+
+
+# ---------------------------------------------------------------------------
+# aggregators
+# ---------------------------------------------------------------------------
+
+class Aggregator:
+    name = "base"
+
+    def __call__(self, global_params, updates: List[ClientUpdate]):
+        raise NotImplementedError
+
+
+class FedAvg(Aggregator):
+    name = "fedavg"
+
+    def __call__(self, global_params, updates):
+        n = float(sum(u.n_examples for u in updates))
+        w = np.array([u.n_examples / n for u in updates], np.float32)
+        return _weighted_combine(w, [u.params for u in updates])
+
+
+class FedNova(Aggregator):
+    """Normalized averaging: re-weights client *deltas* by their local step
+    counts tau_k so heterogeneous E does not bias the update direction."""
+    name = "fednova"
+
+    def __call__(self, global_params, updates):
+        n = float(sum(u.n_examples for u in updates))
+        p = np.array([u.n_examples / n for u in updates], np.float32)
+        tau = np.array([max(u.n_steps, 1) for u in updates], np.float32)
+        tau_eff = float((p * tau).sum())
+        # delta_k = (theta_k - theta) / tau_k ; theta' = theta + tau_eff * sum p_k d_k
+        deltas = [
+            jax.tree.map(lambda a, b: (a - b), u.params, global_params)
+            for u in updates
+        ]
+        w = (p / tau) * tau_eff
+        return _weighted_combine(w.astype(np.float32), deltas,
+                                 base=global_params)
+
+
+@dataclass
+class _AdaptiveServer(Aggregator):
+    """Reddi et al. adaptive server optimizers over the pseudo-gradient
+    Delta = sum_k p_k (theta_k - theta)."""
+    lr: float = 0.1
+    b1: float = 0.0
+    tau: float = 1e-3
+    name = "adaptive"
+
+    def __post_init__(self):
+        self._m = None
+        self._v = None
+
+    def _second_moment(self, v, d2):
+        raise NotImplementedError
+
+    def __call__(self, global_params, updates):
+        n = float(sum(u.n_examples for u in updates))
+        w = np.array([u.n_examples / n for u in updates], np.float32)
+        deltas = [jax.tree.map(lambda a, b: a - b, u.params, global_params)
+                  for u in updates]
+        delta = _weighted_combine(w, deltas)
+        if self._m is None:
+            self._m = jax.tree.map(jnp.zeros_like, delta)
+            self._v = jax.tree.map(
+                lambda x: jnp.full_like(x, self.tau ** 2), delta)
+        self._m = jax.tree.map(lambda m, d: self.b1 * m + (1 - self.b1) * d,
+                               self._m, delta)
+        self._v = jax.tree.map(self._second_moment, self._v,
+                               jax.tree.map(lambda d: d * d, delta))
+        return jax.tree.map(
+            lambda t, m, v: t + self.lr * m / (jnp.sqrt(v) + self.tau),
+            global_params, self._m, self._v)
+
+
+class FedAdagrad(_AdaptiveServer):
+    name = "fedadagrad"
+
+    def _second_moment(self, v, d2):
+        return v + d2
+
+
+class FedAdam(_AdaptiveServer):
+    name = "fedadam"
+    b2: float = 0.99
+
+    def _second_moment(self, v, d2):
+        return 0.99 * v + 0.01 * d2
+
+
+class FedYogi(_AdaptiveServer):
+    name = "fedyogi"
+
+    def _second_moment(self, v, d2):
+        return v - 0.01 * jnp.sign(v - d2) * d2
+
+
+def get_aggregator(name: str, **kw) -> Aggregator:
+    table = {
+        "fedavg": FedAvg,
+        "fedprox": FedAvg,     # proximal term lives client-side
+        "fednova": FedNova,
+        "fedadagrad": FedAdagrad,
+        "fedadam": FedAdam,
+        "fedyogi": FedYogi,
+    }
+    return table[name](**kw)

@@ -1,0 +1,68 @@
+"""Client-side local training: E passes of mini-batch SGD on local data.
+
+The jit'd step is shape-stable (fixed batch_size via pad+mask), so changing
+E or M at round boundaries — what FedTune does — never retraces.
+Supports the FedProx proximal term (mu/2 ||theta - theta_global||^2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import client_batches
+from repro.federated.aggregation import ClientUpdate
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer
+
+_step_cache = {}
+
+
+def _make_step(model: Model, optimizer: Optimizer, prox_mu: float):
+    key = (id(model), id(optimizer), prox_mu)
+    if key in _step_cache:
+        return _step_cache[key]
+
+    def loss(params, batch, global_params):
+        l, metrics = model.loss_fn(params, batch)
+        if prox_mu > 0.0:
+            sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
+                jax.tree.leaves(params), jax.tree.leaves(global_params)))
+            l = l + 0.5 * prox_mu * sq
+        return l, metrics
+
+    @jax.jit
+    def step(params, opt_state, batch, global_params):
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch, global_params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, l, metrics
+
+    _step_cache[key] = step
+    return step
+
+
+def local_train(model: Model, global_params, x: np.ndarray, y: np.ndarray,
+                *, passes: float, batch_size: int, optimizer: Optimizer,
+                rng: np.random.Generator, prox_mu: float = 0.0
+                ) -> ClientUpdate:
+    """Run ``passes`` epochs over (x, y) starting from the global model."""
+    step = _make_step(model, optimizer, prox_mu)
+    params = global_params
+    opt_state = optimizer.init(params)
+    n_steps = 0
+    last_loss = 0.0
+    for bx, by, mask in client_batches(x, y, batch_size, passes, rng):
+        batch = {"x": jnp.asarray(bx), "y": jnp.asarray(by),
+                 "mask": jnp.asarray(mask)}
+        params, opt_state, l, _ = step(params, opt_state, batch,
+                                       global_params)
+        last_loss = float(l)
+        n_steps += 1
+    return ClientUpdate(params=params, n_examples=len(y), n_steps=n_steps,
+                        last_loss=last_loss)

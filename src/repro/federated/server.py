@@ -1,0 +1,161 @@
+"""FL server: round orchestration, participant selection, cost accounting,
+evaluation, and the tuner hook (FedTune plugs in here).
+
+This is the *simulation* loop used for the paper's experiments (small
+models, CPU).  The datacenter execution path — participants as mesh shards
+with psum aggregation — lives in launch/train.py and is what the multi-pod
+dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import CostModel, SystemCost
+from repro.core.tuner import HyperParams, Tuner
+from repro.data.synthetic import FederatedDataset
+from repro.federated.aggregation import Aggregator, ClientUpdate
+from repro.federated.client import local_train
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer
+
+
+@dataclass
+class FLConfig:
+    m: int = 20                    # initial participants per round
+    e: float = 20.0                # initial local passes
+    batch_size: int = 5
+    target_accuracy: float = 0.8
+    max_rounds: int = 500
+    eval_points: int = 1024
+    prox_mu: float = 0.0
+    seed: int = 0
+    eval_every: int = 1
+    log_every: int = 0             # 0 = silent
+    selection: str = "random"      # random | guided | smallest (beyond-paper)
+    compression: Optional[str] = None  # None | "int8" upload deltas
+
+
+@dataclass
+class RoundRecord:
+    round_idx: int
+    m: int
+    e: float
+    accuracy: float
+    cost: SystemCost
+    wall_time: float
+
+
+@dataclass
+class FLResult:
+    reached_target: bool
+    rounds: int
+    final_accuracy: float
+    total_cost: SystemCost
+    history: List[RoundRecord]
+    final_m: int
+    final_e: float
+
+
+class FLServer:
+    def __init__(self, model: Model, dataset: FederatedDataset,
+                 aggregator: Aggregator, optimizer: Optimizer,
+                 cost_model: CostModel, config: FLConfig,
+                 tuner: Optional[Tuner] = None):
+        self.model = model
+        self.dataset = dataset
+        self.aggregator = aggregator
+        self.optimizer = optimizer
+        self.cost_model = cost_model
+        self.config = config
+        self.tuner = tuner or Tuner()
+        self.rng = np.random.default_rng(config.seed)
+        self._eval_fn = None
+        from repro.federated.selection import get_selector
+        self.selector = get_selector(config.selection, dataset.n_clients,
+                                     self.rng,
+                                     client_sizes=dataset.client_sizes)
+
+    # ------------------------------------------------------------------
+    def _evaluate(self, params) -> float:
+        x, y = self.dataset.test_data(self.config.eval_points)
+        if self._eval_fn is None:
+            @jax.jit
+            def eval_fn(params, x, y):
+                logits = self.model.forward(params, x)
+                return (logits.argmax(-1) == y).mean()
+            self._eval_fn = eval_fn
+        # batch eval to bound memory
+        correct = 0.0
+        bs = 256
+        for i in range(0, len(y), bs):
+            acc = self._eval_fn(params, jnp.asarray(x[i:i + bs]),
+                                jnp.asarray(y[i:i + bs]))
+            correct += float(acc) * len(y[i:i + bs])
+        return correct / len(y)
+
+    # ------------------------------------------------------------------
+    def run(self, params=None) -> FLResult:
+        cfg = self.config
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(cfg.seed))
+        hp = HyperParams(m=cfg.m, e=cfg.e)
+        history: List[RoundRecord] = []
+        accuracy = 0.0
+        reached = False
+
+        for r in range(cfg.max_rounds):
+            t0 = time.perf_counter()
+            m = min(hp.m, self.dataset.n_clients)
+            participants = self.selector.select(m)
+            updates: List[ClientUpdate] = []
+            examples = []
+            for cid in participants:
+                x, y = self.dataset.client_data(int(cid))
+                upd = local_train(
+                    self.model, params, x, y, passes=hp.e,
+                    batch_size=cfg.batch_size, optimizer=self.optimizer,
+                    rng=self.rng, prox_mu=cfg.prox_mu)
+                if cfg.compression:
+                    from repro.federated.compression import compress_delta
+                    upd = upd._replace(params=compress_delta(
+                        params, upd.params, cfg.compression))
+                updates.append(upd)
+                examples.append(len(y))
+                self.selector.update(int(cid), upd.last_loss, len(y))
+            params = self.aggregator(params, updates)
+            from repro.federated.compression import upload_factor
+            round_cost = self.cost_model.add_round(
+                examples, hp.e,
+                upload_factor=upload_factor(cfg.compression))
+
+            if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+                accuracy = self._evaluate(params)
+            wall = time.perf_counter() - t0
+            history.append(RoundRecord(r, hp.m, hp.e, accuracy,
+                                       round_cost, wall))
+            if cfg.log_every and (r + 1) % cfg.log_every == 0:
+                print(f"  round {r+1:4d}  acc={accuracy:.4f}  M={hp.m} "
+                      f"E={hp.e:g}  wall={wall:.2f}s", flush=True)
+            if accuracy >= cfg.target_accuracy:
+                reached = True
+                break
+            hp = self.tuner.on_round(r, accuracy, round_cost,
+                                     self.cost_model.total, hp)
+            hp = hp.clamped(self.dataset.n_clients, 100.0)
+
+        return FLResult(
+            reached_target=reached,
+            rounds=len(history),
+            final_accuracy=accuracy,
+            total_cost=self.cost_model.total.copy(),
+            history=history,
+            final_m=hp.m,
+            final_e=hp.e,
+        )

@@ -1,0 +1,1 @@
+from repro.kernels.ops import fed_aggregate, flash_attention, rglru_scan  # noqa: F401

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: weighted FL aggregation  out = base + sum_m w_m * delta_m.
+
+This is the server-side hot spot of every FL round (paper eq. 1 aggregation):
+a memory-bound weighted reduction over M participant deltas of N parameters.
+Tiling: the parameter axis is cut into lane-aligned VMEM blocks; each grid
+step loads an (M, BLOCK_N) tile of deltas, the (M, 1) weight column and a
+(BLOCK_N,) base tile, and reduces over M in VREGs.  Arithmetic intensity is
+~1 FLOP / 2 bytes -> firmly HBM-bandwidth-bound, so the only job of the
+kernel is to stream deltas exactly once at full bandwidth.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 2048  # lane-aligned (16 x 128) f32 tile per delta row
+
+
+def _kernel(w_ref, base_ref, x_ref, o_ref):
+    # w: (M, 1) f32, base: (1, BLOCK_N), x: (M, BLOCK_N), o: (1, BLOCK_N)
+    w = w_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.sum(w * x, axis=0, keepdims=True)
+    o_ref[...] = (acc + base_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fed_aggregate(weights, deltas, base=None, *, block_n: int = BLOCK_N,
+                  interpret: bool = False):
+    """weights: (M,); deltas: (M, N); base: (N,) or None -> (N,)."""
+    m, n = deltas.shape
+    if base is None:
+        base = jnp.zeros((n,), deltas.dtype)
+    pad = (-n) % block_n
+    if pad:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+        base = jnp.pad(base, (0, pad))
+    n_pad = n + pad
+    w2 = weights.reshape(m, 1).astype(jnp.float32)
+    base2 = base.reshape(1, n_pad)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), deltas.dtype),
+        interpret=interpret,
+    )(w2, base2, deltas)
+    return out[0, :n]

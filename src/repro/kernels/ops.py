@@ -1,0 +1,51 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On a TPU backend the Pallas kernels run natively; elsewhere (this CPU
+container, and any host without Mosaic) they execute in interpret mode for
+tests or fall back to the pure-jnp reference paths used by the model zoo.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.fed_aggregate import fed_aggregate as _fed_aggregate_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fed_aggregate(weights, deltas, base=None, *, force_pallas: bool = False,
+                  interpret: Optional[bool] = None):
+    """Weighted aggregation of participant deltas (server-side hot spot)."""
+    if on_tpu() or force_pallas:
+        itp = (not on_tpu()) if interpret is None else interpret
+        return _fed_aggregate_pallas(weights, deltas, base, interpret=itp)
+    return ref.fed_aggregate_ref(weights, deltas, base)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    force_pallas: bool = False,
+                    interpret: Optional[bool] = None):
+    """(B,H,S,D) x (B,Kh,T,D) -> (B,H,S,D)."""
+    if on_tpu() or force_pallas:
+        itp = (not on_tpu()) if interpret is None else interpret
+        return _flash_pallas(q, k, v, causal=causal, window=window, cap=cap,
+                             interpret=itp)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   cap=cap)
+
+
+def rglru_scan(a, b, *, force_pallas: bool = False,
+               interpret: Optional[bool] = None):
+    """Diagonal linear recurrence (RecurrentGemma mixer)."""
+    if on_tpu() or force_pallas:
+        itp = (not on_tpu()) if interpret is None else interpret
+        return _rglru_pallas(a, b, interpret=itp)
+    return ref.rglru_scan_ref(a, b)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fed_aggregate_ref(weights, deltas, base=None):
+    """weights: (M,), deltas: (M, N) -> (N,). Optionally adds ``base``."""
+    out = jnp.einsum("m,mn->n", weights.astype(jnp.float32),
+                     deltas.astype(jnp.float32))
+    if base is not None:
+        out = out + base.astype(jnp.float32)
+    return out.astype(deltas.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+                        cap: Optional[float] = None):
+    """q: (B, H, S, D); k, v: (B, Kh, T, D) with H % Kh == 0 -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, kh, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qr, k.astype(jnp.float32))
+    scores = scores * (d ** -0.5)
+    if cap is not None:
+        scores = cap * jnp.tanh(scores / cap)
+    q_pos = jnp.arange(s)
+    k_pos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None] + (t - s)
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] + (t - s) - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a, b: (B, T, W)."""
+    bsz, t, w = a.shape
+    h = jnp.zeros((bsz, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (a.astype(jnp.float32).transpose(1, 0, 2),
+                                   b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(a.dtype)

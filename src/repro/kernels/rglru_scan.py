@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: RG-LRU diagonal linear recurrence
+    h_t = a_t * h_{t-1} + b_t        (RecurrentGemma's sequence mixer).
+
+Tiling: grid (batch, width_blocks, time_chunks); the time axis (last grid
+dim) is sequential on TPU, so the hidden state h lives in a VMEM scratch
+(BLOCK_B, BLOCK_W) carried across chunks.  Within a chunk the recurrence is
+a fori_loop over time steps on VREG-resident rows — the channel dimension
+(lane axis, 128-aligned) provides the vector parallelism; there is no
+cross-channel coupling, which is exactly why this maps well onto the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_B = 8
+BLOCK_W = 512
+CHUNK_T = 128
+
+
+def _kernel(a_ref, b_ref, o_ref, h_scr, *, chunk_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        h = a_ref[:, t, :].astype(jnp.float32) * h \
+            + b_ref[:, t, :].astype(jnp.float32)
+        o_ref[:, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk_t, step, h_scr[...])
+    h_scr[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_b", "block_w", "chunk_t", "interpret"))
+def rglru_scan(a, b, *, block_b: int = BLOCK_B, block_w: int = BLOCK_W,
+               chunk_t: int = CHUNK_T, interpret: bool = False):
+    """a, b: (B, T, W) -> h: (B, T, W) with h_t = a_t h_{t-1} + b_t."""
+    bsz, t, w = a.shape
+    bb = min(block_b, bsz)
+    bw = min(block_w, w)
+    ct = min(chunk_t, t)
+    assert bsz % bb == 0 and w % bw == 0 and t % ct == 0, (bsz, t, w)
+
+    kernel = functools.partial(_kernel, chunk_t=ct)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bb, w // bw, t // ct),
+        in_specs=[
+            pl.BlockSpec((bb, ct, bw), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((bb, ct, bw), lambda bi, wi, ti: (bi, ti, wi)),
+        ],
+        out_specs=pl.BlockSpec((bb, ct, bw), lambda bi, wi, ti: (bi, ti, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain 512 host placeholder devices.
+
+  single pod : (16, 16)        axes ("data", "model")   = 256 chips (v5e pod)
+  multi-pod  : (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+FL semantics on these meshes: the "data" axis carries the participant
+cohort (one participant slot per data slice); the "pod" axis carries
+disjoint sub-cohorts (silos) whose weighted psum IS the FL aggregation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A tiny mesh over whatever devices exist (tests on 1-8 CPU devices)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,340 @@
+"""Distributed step functions for the production mesh.
+
+  fl_train_step  — one FL round on the mesh.  Participant slots live on the
+    ("pod", "data") axes; each slot computes the gradient of its local batch
+    weighted by n_k/n, and the FSDP/DP gradient reduction that GSPMD inserts
+    IS the FedAvg aggregation (the paper's upload/download collective).
+    ``local_passes`` > 1 accumulates E microbatch gradients before the
+    weighted reduction — cost-faithful to E local passes (ExCompute per
+    round, unchanged collective bytes), see DESIGN.md §3.
+  prefill_step   — full-sequence forward building the KV cache (last logits).
+  serve_step     — ONE token against a seq_len KV cache (ring-buffered /
+    recurrent for sub-quadratic archs; full-attention archs at long_500k are
+    served under the documented sliding-window variant).
+
+Each ``make_*`` returns (jit_fn, input_specs_dict) where the specs are
+ShapeDtypeStructs — the dry-run lowers without allocating anything.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import lm as lm_mod
+from repro.models import stacked as stacked_mod
+from repro.sharding import specs as sh
+from repro.sharding.ctx import activation_rules
+
+DEFAULT_LR = 3e-4
+DEFAULT_MOMENTUM = 0.9
+
+
+def _quantize_dequantize_ste(w):
+    """int8 fake-quantization with a straight-through gradient.  Because the
+    int8 tensor inherits the FSDP sharding, XLA's parameter all-gathers move
+    int8 bytes (2x smaller than bf16); dequantization happens post-gather."""
+    if w.ndim < 2 or w.dtype not in (jnp.bfloat16, jnp.float32):
+        return w
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    q = q.astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).astype(w.dtype)
+    return deq + (w - jax.lax.stop_gradient(w))
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _fit_ns(mesh: Mesh, spec: P, struct) -> NamedSharding:
+    return _ns(mesh, sh.fit_spec(spec, struct.shape, mesh))
+
+
+def _batch_spec(mesh: Mesh, rules, struct) -> NamedSharding:
+    spec = P(*([rules.get("batch")] + [None] * (struct.ndim - 1)))
+    return _fit_ns(mesh, spec, struct)
+
+
+def param_struct(cfg: ModelConfig, dtype=jnp.bfloat16, *,
+                 stacked: bool = False):
+    """ShapeDtypeStruct pytree of the model params (no allocation)."""
+    init = (stacked_mod.init_params_stacked if stacked
+            else lm_mod.init_params)
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def _frontend_struct(cfg: ModelConfig, batch: int, dtype):
+    f = cfg.frontend
+    return jax.ShapeDtypeStruct((batch, f.seq_len, f.feature_dim), dtype)
+
+
+# ---------------------------------------------------------------------------
+# FL train step
+# ---------------------------------------------------------------------------
+
+def make_fl_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                       multi_pod: bool = False, lr: float = DEFAULT_LR,
+                       momentum: float = DEFAULT_MOMENTUM,
+                       local_passes: int = 1, microbatches: int = 1,
+                       remat: bool = True, dtype=jnp.bfloat16,
+                       seq_parallel: bool = True,
+                       quantize_comm: bool = False,
+                       moe_mode: str = "dense"):
+    """One FL round.
+
+    local_passes = E: the cohort re-passes the SAME round batch E times
+      (gradient accumulated; E x compute, unchanged collective bytes —
+      exactly the paper's CompT/CompL vs TransT/TransL trade).
+    microbatches: split the round batch to bound activation memory
+      (FLOPs unchanged)."""
+    rules = sh.train_rules(multi_pod)
+    if not seq_parallel:
+        rules["seq"] = None
+    b, s = shape.global_batch, shape.seq_len
+    assert b % microbatches == 0, (b, microbatches)
+    mb_size = b // microbatches
+
+    n_rows = mesh.shape["data"] * mesh.shape.get("pod", 1)
+
+    def loss(params, batch):
+        from repro.models import ffn as ffn_mod
+        if quantize_comm:  # int8 FSDP all-gathers (straight-through estimator)
+            params = jax.tree.map(_quantize_dequantize_ste, params)
+        with activation_rules(mesh, rules), \
+                ffn_mod.moe_impl(moe_mode, rows=n_rows):
+            l, metrics = stacked_mod.loss_fn(params, cfg, batch, remat=remat)
+        return l, metrics
+
+    def fl_train_step(params, momentum_state, batch):
+        """batch: {tokens (B,S), labels (B,S), weight (B,), frontend?}."""
+        def one_micro(grads_acc, mb):
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return grads_acc, (l, metrics)
+
+        zeros = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        micro = jax.tree.map(
+            lambda x: x.reshape((microbatches, mb_size) + x.shape[1:]),
+            batch)
+        if microbatches == 1:
+            grads, (l, metrics) = one_micro(zeros, batch)
+        else:
+            grads, (ls, metricss) = jax.lax.scan(one_micro, zeros, micro)
+            l = ls.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), metricss)
+        if local_passes > 1:   # E passes over the same round batch
+            def e_pass(grads_acc, _):
+                g2, _aux = (jax.lax.scan(one_micro, grads_acc, micro)
+                            if microbatches > 1
+                            else one_micro(grads_acc, batch))
+                return g2, None
+            grads, _ = jax.lax.scan(e_pass, grads, None,
+                                    length=local_passes - 1)
+        grads = jax.tree.map(
+            lambda g: g / (microbatches * local_passes), grads)
+        # SGD with momentum on the aggregated (FedAvg-weighted) gradient
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(m.dtype),
+            momentum_state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p - lr * m.astype(p.dtype)), params, new_m)
+        return new_p, new_m, l, metrics
+
+    p_struct = param_struct(cfg, dtype, stacked=True)
+    m_struct = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), p_struct)
+    batch_struct: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "weight": jax.ShapeDtypeStruct((b,), jnp.float32),
+    }
+    if cfg.frontend is not None:
+        batch_struct["frontend"] = _frontend_struct(cfg, b, dtype)
+
+    p_shard = sh.param_shardings(p_struct, mesh, rules)
+    m_shard = jax.tree.map(lambda s_: s_, p_shard)
+    bspec = rules.get("batch")
+    batch_shard = {
+        k: _fit_ns(mesh, P(*([bspec] + [None] * (v.ndim - 1))), v)
+        for k, v in batch_struct.items()
+    }
+    jit_fn = jax.jit(
+        fl_train_step,
+        in_shardings=(p_shard, m_shard, batch_shard),
+        out_shardings=(p_shard, m_shard, _ns(mesh, P()), _ns(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    return jit_fn, (p_struct, m_struct, batch_struct)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                      multi_pod: bool = False, dtype=jnp.bfloat16,
+                      decode_window: Optional[int] = None):
+    rules = sh.decode_rules(multi_pod, shard_seq=False)
+    rules["batch"] = ("pod", "data") if multi_pod else "data"
+    b, s = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, tokens, frontend=None):
+        from repro.models import ffn as ffn_mod
+        with activation_rules(mesh, rules), ffn_mod.moe_impl("dense"):
+            cache = stacked_mod.init_cache_stacked(
+                cfg, b, s, decode_window=decode_window, dtype=dtype)
+            logits, cache = stacked_mod.prefill(params, cfg, tokens, cache,
+                                                frontend=frontend)
+        return logits, cache
+
+    p_struct = param_struct(cfg, dtype, stacked=True)
+    tok_struct = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    p_shard = sh.param_shardings(p_struct, mesh, rules)
+    args: Tuple = (p_struct, tok_struct)
+    in_sh: Tuple = (p_shard, _batch_spec(mesh, rules, tok_struct))
+    if cfg.frontend is not None:
+        fe = _frontend_struct(cfg, b, dtype)
+        args = args + (fe,)
+        in_sh = in_sh + (_batch_spec(mesh, rules, fe),)
+    jit_fn = jax.jit(prefill_step, in_shardings=in_sh)
+    return jit_fn, args
+
+
+# ---------------------------------------------------------------------------
+# serve (decode one token)
+# ---------------------------------------------------------------------------
+
+def _quantizable(path_leaf_shape, leaf) -> bool:
+    return leaf.ndim >= 2 and leaf.size >= (1 << 20) and \
+        leaf.dtype in (jnp.bfloat16, jnp.float32)
+
+
+def quantize_param_structs(p_struct):
+    """Split a param ShapeDtypeStruct tree into (int8 mirror, scales tree).
+    Small tensors pass through unquantized (scale=None)."""
+    def q(leaf):
+        if _quantizable(None, leaf):
+            return jax.ShapeDtypeStruct(leaf.shape, jnp.int8)
+        return leaf
+
+    def s(leaf):
+        if _quantizable(None, leaf):
+            return jax.ShapeDtypeStruct(leaf.shape[:-1] + (1,), jnp.float32)
+        return None
+
+    return jax.tree.map(q, p_struct), jax.tree.map(s, p_struct)
+
+
+def dequantize_params(params_q, scales, dtype=jnp.bfloat16):
+    def deq(q, s):
+        if s is None:
+            return q
+        return (q.astype(jnp.float32) * s).astype(dtype)
+    return jax.tree.map(deq, params_q, scales,
+                        is_leaf=lambda x: x is None)
+
+
+def quantize_params(params):
+    """Runtime quantization (for the serve launcher / tests)."""
+    def q(w):
+        if not _quantizable(None, w):
+            return w, None
+        scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1,
+                        keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        qw = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                      -127, 127).astype(jnp.int8)
+        return qw, scale
+    pairs = jax.tree.map(q, params)
+    qs = jax.tree.map(lambda p: p[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    ss = jax.tree.map(lambda p: p[1], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return qs, ss
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                    multi_pod: bool = False, dtype=jnp.bfloat16,
+                    quantize_weights: bool = False,
+                    resident_experts: bool = False):
+    b, s = shape.global_batch, shape.seq_len
+    # Sub-quadratic archs decode natively; full-attention archs at very long
+    # context get the documented sliding-window serving variant.
+    force_window = (not cfg.subquadratic) and s > 65536
+    decode_window = cfg.long_context_window if force_window else None
+    # batch too small to shard? shard the cache sequence dim instead.
+    n_batch_shards = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    shard_seq = b < n_batch_shards
+    rules = sh.decode_rules(multi_pod, shard_seq=shard_seq)
+    if resident_experts:
+        # §Perf H2b: keep ALL weights resident by sharding the MoE expert
+        # d_ff dim over "data" instead of FSDP-gathering d_model-sharded
+        # weights per token; collectives become small activation psums.
+        rules["residual"] = None
+        rules["moe_inner"] = "data"
+
+    p_struct = param_struct(cfg, dtype, stacked=True)
+    scale_struct = None
+    if quantize_weights:
+        p_struct, scale_struct = quantize_param_structs(p_struct)
+
+    def serve_step(params, cache, token, pos, scales=None):
+        from repro.models import ffn as ffn_mod
+        if quantize_weights:
+            params = dequantize_params(params, scales, dtype)
+        with activation_rules(mesh, rules), ffn_mod.moe_impl("dense"):
+            logits, cache = stacked_mod.decode_step(params, cfg, token, pos,
+                                                    cache)
+        return logits, cache
+
+    cache_struct = jax.eval_shape(
+        lambda: stacked_mod.init_cache_stacked(
+            cfg, b, s, decode_window=decode_window, dtype=dtype))
+    tok_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_shard = sh.param_shardings(p_struct, mesh, rules)
+    cache_shard = jax.tree.map(
+        lambda leaf, spec: _fit_ns(mesh, spec, leaf),
+        cache_struct, sh.cache_specs(cache_struct, rules))
+    in_sh = [p_shard, cache_shard, _batch_spec(mesh, rules, tok_struct),
+             _ns(mesh, P())]
+    args = [p_struct, cache_struct, tok_struct, pos_struct]
+    if quantize_weights:
+        in_sh.append(jax.tree.map(lambda s_: _ns(mesh, P()), scale_struct))
+        args.append(scale_struct)
+    jit_fn = jax.jit(
+        serve_step,
+        in_shardings=tuple(in_sh),
+        out_shardings=None,
+        donate_argnums=(1,),
+    )
+    return jit_fn, tuple(args)
+
+
+def step_for_shape(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                   multi_pod: bool = False, **kw):
+    """Dispatch on the shape kind -> (jit_fn, example ShapeDtypeStructs)."""
+    if shape.kind == "train":
+        return make_fl_train_step(cfg, mesh, shape, multi_pod=multi_pod, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape, multi_pod=multi_pod, **kw)
+    if shape.kind == "decode":
+        return make_serve_step(cfg, mesh, shape, multi_pod=multi_pod, **kw)
+    raise ValueError(shape.kind)

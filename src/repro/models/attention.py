@@ -1,0 +1,466 @@
+"""Attention: GQA + RoPE + (optional) sliding window + logit soft-cap.
+
+Three execution paths:
+  * ``naive_attention``   — materializes (S, T) scores; used for short seqs/tests.
+  * ``blocked_attention`` — flash-style online-softmax double scan over q/kv
+    chunks; pure-jnp analogue of ``kernels/flash_attention`` (the Pallas TPU
+    kernel).  Memory-bounded, used for long-sequence train/prefill.
+  * ``decode_attention``  — one query token against a (possibly ring-buffer)
+    KV cache.
+
+All paths share the same math; tests assert they agree.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.common import apply_rope, dense_init, shard_bshd, softcap
+
+BLOCKED_SEQ_THRESHOLD = 2048  # switch naive -> blocked above this length
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (chunked scans need exact
+    tiling; VLM prefixes make seq lengths like 4352 = 8 x 544)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention_params(key, cfg: ModelConfig, *, d_in: Optional[int] = None,
+                          n_heads=None, n_kv=None, head_dim=None, bias=None,
+                          dtype=jnp.float32):
+    d = d_in if d_in is not None else cfg.d_model
+    h = n_heads if n_heads is not None else cfg.n_heads
+    k = n_kv if n_kv is not None else cfg.n_kv_heads
+    hd = head_dim if head_dim is not None else cfg.head_dim
+    use_bias = cfg.qkv_bias if bias is None else bias
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(keys[0], (d, h, hd), dtype, fan_in=d),
+        "wk": dense_init(keys[1], (d, k, hd), dtype, fan_in=d),
+        "wv": dense_init(keys[2], (d, k, hd), dtype, fan_in=d),
+        "wo": dense_init(keys[3], (h, hd, d), dtype, fan_in=h * hd),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((k, hd), dtype)
+        p["bv"] = jnp.zeros((k, hd), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions, *, rope=True,
+                 kv_input=None, kv_positions=None):
+    """Returns q:(B,S,K,G,D), k,v:(B,T,K,D)."""
+    kv_x = x if kv_input is None else kv_input
+    q = jnp.einsum("bse,ehd->bshd", x, params["wq"])
+    k = jnp.einsum("bte,ekd->btkd", kv_x, params["wk"])
+    v = jnp.einsum("bte,ekd->btkd", kv_x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = shard_bshd(q)
+    k = shard_bshd(k)
+    v = shard_bshd(v)
+    if rope:
+        kv_pos = positions if kv_positions is None else kv_positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    n_q = q.shape[2]
+    n_kv = k.shape[2]
+    g = n_q // n_kv
+    q = q.reshape(q.shape[0], q.shape[1], n_kv, g, q.shape[3])
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# naive path
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), jnp.bool_)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def naive_attention(q, k, v, *, q_pos, k_pos, causal=True,
+                    window: Optional[int] = None, cap: Optional[float] = None):
+    """q: (B,S,K,G,D); k,v: (B,T,K,D) -> (B,S,K*G,D)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, cap)
+    mask = _mask(q_pos, k_pos, causal=causal, window=window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    b, s, kh, g, d = out.shape
+    return out.reshape(b, s, kh * g, d)
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) path with memory-efficient custom VJP
+# ---------------------------------------------------------------------------
+
+_flash_cache = {}
+
+
+def blocked_attention(q, k, v, *, q_pos, k_pos, causal=True,
+                      window: Optional[int] = None, cap: Optional[float] = None,
+                      q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Flash attention (pure jnp, memory-efficient backward).
+
+    Forward: online-softmax double scan saving only (out, logsumexp).
+    Backward: custom VJP recomputing per-block probabilities (two passes:
+    q-major for dq, kv-major for dk/dv) — residuals are O(B*S*H*D), never
+    O(S^2).  This is the CPU/dry-run analogue of kernels/flash_attention.
+    """
+    key = (causal, window, cap, q_chunk, kv_chunk)
+    if key not in _flash_cache:
+        _flash_cache[key] = _make_flash(causal, window, cap, q_chunk, kv_chunk)
+    return _flash_cache[key](q, k, v, q_pos, k_pos)
+
+
+def _make_flash(causal, window, cap, q_chunk, kv_chunk):
+    def fwd_impl(q, k, v, q_pos, k_pos):
+        return _flash_forward(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                              causal=causal, window=window, cap=cap,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    @jax.custom_vjp
+    def flash(q, k, v, q_pos, k_pos):
+        return fwd_impl(q, k, v, q_pos, k_pos)[0]
+
+    def flash_fwd(q, k, v, q_pos, k_pos):
+        out, lse = fwd_impl(q, k, v, q_pos, k_pos)
+        return out, (q, k, v, q_pos, k_pos, out, lse)
+
+    def flash_bwd(res, dout):
+        q, k, v, q_pos, k_pos, out, lse = res
+        dq, dk, dv = _flash_backward(
+            q, k, v, out, lse, dout, q_pos=q_pos, k_pos=k_pos,
+            causal=causal, window=window, cap=cap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        zero_q = np.zeros(q_pos.shape, jax.dtypes.float0)
+        zero_k = np.zeros(k_pos.shape, jax.dtypes.float0)
+        return dq, dk, dv, zero_q, zero_k
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def _scores(q_blk, k_blk, qp, kp, *, causal, window, cap, scale):
+    """q_blk: (B,qc,K,G,D), k_blk: (B,kc,K,D) -> capped+masked scores
+    (B,K,G,qc,kc) in f32, plus the mask."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    dcap = None
+    if cap is not None:
+        t = jnp.tanh(s / cap)
+        s = cap * t
+        dcap = 1.0 - t * t          # d(capped)/d(raw)
+    msk = _mask(qp, kp, causal=causal, window=window)
+    s = jnp.where(msk[None, None, None], s, -1e30)
+    return s, msk, dcap
+
+
+def _flash_forward(q, k, v, *, q_pos, k_pos, causal, window, cap,
+                   q_chunk, kv_chunk):
+    b, s_len, kh, g, d = q.shape
+    t = k.shape[1]
+    qc, kc = _pick_chunk(s_len, q_chunk), _pick_chunk(t, kv_chunk)
+    nq, nk = s_len // qc, t // kc
+    scale = d ** -0.5
+
+    qs = q.reshape(b, nq, qc, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(nq, qc)
+    ks = k.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(nk, kc)
+
+    def q_step(_, q_in):
+        q_blk, qp = q_in
+
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry
+            k_blk, v_blk, kp = kv_in
+            sc, _, _ = _scores(q_blk, k_blk, qp, kp, causal=causal,
+                               window=window, cap=cap, scale=scale)
+            m_new = jnp.maximum(m_run, sc.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p_blk = jnp.exp(sc - m_new[..., None])
+            l_new = l_run * alpha + p_blk.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p_blk,
+                            v_blk.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s_len, kh, g, d)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kh, g, s_len)
+    return out.reshape(b, s_len, kh * g, d).astype(v.dtype), lse
+
+
+def _flash_backward(q, k, v, out, lse, dout, *, q_pos, k_pos, causal, window,
+                    cap, q_chunk, kv_chunk):
+    b, s_len, kh, g, d = q.shape
+    t = k.shape[1]
+    qc, kc = _pick_chunk(s_len, q_chunk), _pick_chunk(t, kv_chunk)
+    nq, nk = s_len // qc, t // kc
+    scale = d ** -0.5
+
+    out = out.reshape(b, s_len, kh, g, d)
+    dout = dout.reshape(b, s_len, kh, g, d).astype(jnp.float32)
+    # D_i = rowsum(dout * out)
+    delta = jnp.einsum("bskgd,bskgd->bkgs", dout,
+                       out.astype(jnp.float32))          # (B,K,G,S)
+
+    qs = q.reshape(b, nq, qc, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    dos = dout.reshape(b, nq, qc, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(nq, qc)
+    lses = lse.reshape(b, kh, g, nq, qc).transpose(3, 0, 1, 2, 4)
+    deltas = delta.reshape(b, kh, g, nq, qc).transpose(3, 0, 1, 2, 4)
+    ks = k.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(nk, kc)
+
+    def ds_block(q_blk, k_blk, v_blk, qp, kp, lse_blk, do_blk, dl_blk):
+        """Recompute p and dS for one (q, kv) block pair."""
+        sc, msk, dcap = _scores(q_blk, k_blk, qp, kp, causal=causal,
+                                window=window, cap=cap, scale=scale)
+        p = jnp.exp(sc - lse_blk[..., None])             # (B,K,G,qc,kc)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", do_blk,
+                        v_blk.astype(jnp.float32))
+        ds = p * (dp - dl_blk[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        ds = jnp.where(msk[None, None, None], ds, 0.0)
+        return p, ds
+
+    # pass 1: q-major -> dq
+    def dq_step(_, q_in):
+        q_blk, qp, lse_blk, do_blk, dl_blk = q_in
+
+        def kv_inner(dq_acc, kv_in):
+            k_blk, v_blk, kp = kv_in
+            _, ds = ds_block(q_blk, k_blk, v_blk, qp, kp, lse_blk, do_blk,
+                             dl_blk)
+            dq_acc = dq_acc + jnp.einsum("bkgqt,btkd->bqkgd", ds,
+                                         k_blk.astype(jnp.float32)) * scale
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, qc, kh, g, d), jnp.float32)
+        dq_blk, _ = jax.lax.scan(kv_inner, dq0, (ks, vs, kps))
+        return None, dq_blk
+
+    _, dqs = jax.lax.scan(dq_step, None, (qs, qps, lses, dos, deltas))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s_len, kh, g, d)
+
+    # pass 2: kv-major -> dk, dv
+    def dkv_step(_, kv_in):
+        k_blk, v_blk, kp = kv_in
+
+        def q_inner(carry, q_in):
+            dk_acc, dv_acc = carry
+            q_blk, qp, lse_blk, do_blk, dl_blk = q_in
+            p, ds = ds_block(q_blk, k_blk, v_blk, qp, kp, lse_blk, do_blk,
+                             dl_blk)
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgd->btkd", p, do_blk)
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgd->btkd", ds,
+                                         q_blk.astype(jnp.float32)) * scale
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, kc, kh, d), jnp.float32)
+        (dk_blk, dv_blk), _ = jax.lax.scan(
+            q_inner, (z, z), (qs, qps, lses, dos, deltas))
+        return None, (dk_blk, dv_blk)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_step, None, (ks, vs, kps))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, t, kh, d)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, t, kh, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _blocked_attention_fwd_only(q, k, v, *, q_pos, k_pos, causal=True,
+                                window: Optional[int] = None,
+                                cap: Optional[float] = None,
+                                q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Old all-in-one forward (kept for prefill where no grad is needed)."""
+    b, s, kh, g, d = q.shape
+    t = k.shape[1]
+    qc = _pick_chunk(s, q_chunk)
+    kc = _pick_chunk(t, kv_chunk)
+    nq, nk = s // qc, t // kc
+    scale = d ** -0.5
+
+    qs = q.reshape(b, nq, qc, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(nq, qc)
+    ks = k.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(nk, kc)
+
+    def q_step(_, q_in):
+        q_blk, qp = q_in                              # (B,qc,K,G,D), (qc,)
+
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry
+            k_blk, v_blk, kp = kv_in
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", q_blk.astype(jnp.float32),
+                            k_blk.astype(jnp.float32)) * scale
+            sc = softcap(sc, cap)
+            msk = _mask(qp, kp, causal=causal, window=window)
+            sc = jnp.where(msk[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m_run, sc.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p_blk = jnp.exp(sc - m_new[..., None])
+            l_new = l_run * alpha + p_blk.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p_blk, v_blk.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]   # (B,K,G,qc,D)
+        return None, out.transpose(0, 3, 1, 2, 4)         # (B,qc,K,G,D)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qps))       # (nq,B,qc,K,G,D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kh, g, d)
+    return out.reshape(b, s, kh * g, d).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention entry point (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention(params, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
+              causal=True, kv_input=None, kv_positions=None, rope=True,
+              use_kernel: bool = True):
+    """Self (or cross-) attention over a full sequence. x: (B,S,E)."""
+    q, k, v = _project_qkv(params, x, cfg, positions, rope=rope,
+                           kv_input=kv_input, kv_positions=kv_positions)
+    k_pos = positions if kv_positions is None else kv_positions
+    s, t = q.shape[1], k.shape[1]
+    if use_kernel and max(s, t) > BLOCKED_SEQ_THRESHOLD:
+        out = blocked_attention(q, k, v, q_pos=positions, k_pos=k_pos,
+                                causal=causal, window=spec.window,
+                                cap=cfg.attn_softcap)
+    else:
+        out = naive_attention(q, k, v, q_pos=positions, k_pos=k_pos,
+                              causal=causal, window=spec.window,
+                              cap=cfg.attn_softcap)
+    return jnp.einsum("bshd,hde->bse", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, Kh, D)
+    v: jax.Array          # (B, C, Kh, D)
+    slot_pos: jax.Array   # (C,) global position stored in each slot, -1 empty
+
+
+def init_kv_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
+                  *, decode_window: Optional[int] = None, dtype=jnp.float32,
+                  n_kv=None, head_dim=None) -> KVCache:
+    window = spec.window if spec.window is not None else decode_window
+    c = max_len if window is None else min(window, max_len)
+    kh = n_kv if n_kv is not None else cfg.n_kv_heads
+    hd = head_dim if head_dim is not None else cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, c, kh, hd), dtype),
+        v=jnp.zeros((batch, c, kh, hd), dtype),
+        slot_pos=jnp.full((c,), -1, jnp.int32),
+    )
+
+
+def prefill_into_cache(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                       cache: KVCache, *, use_kernel=True):
+    """Run full-seq attention AND populate the cache with the (windowed) tail."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    s = q.shape[1]
+    if use_kernel and s > BLOCKED_SEQ_THRESHOLD:
+        out = blocked_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                window=spec.window, cap=cfg.attn_softcap)
+    else:
+        out = naive_attention(q, k, v, q_pos=positions, k_pos=positions,
+                              window=spec.window, cap=cfg.attn_softcap)
+    c = cache.k.shape[1]
+    if c > s:  # cache has spare room: fill the first s slots
+        pad = c - s
+        padk = jnp.zeros((k.shape[0], pad) + k.shape[2:], cache.k.dtype)
+        new_cache = KVCache(
+            k=jnp.concatenate([k.astype(cache.k.dtype), padk], axis=1),
+            v=jnp.concatenate([v.astype(cache.v.dtype), padk], axis=1),
+            slot_pos=jnp.concatenate(
+                [positions.astype(jnp.int32), jnp.full((pad,), -1, jnp.int32)]),
+        )
+    else:
+        # keep the last ``c`` tokens, laid out ring-style (slot = pos % c)
+        tail_k, tail_v, tail_pos = k[:, -c:], v[:, -c:], positions[-c:]
+        slots = tail_pos % c
+        order = jnp.argsort(slots)
+        new_cache = KVCache(
+            k=tail_k[:, order].astype(cache.k.dtype),
+            v=tail_v[:, order].astype(cache.v.dtype),
+            slot_pos=tail_pos[order].astype(jnp.int32),
+        )
+    return jnp.einsum("bshd,hde->bse", out, params["wo"]), new_cache
+
+
+def decode_attention(params, cfg: ModelConfig, spec: LayerSpec, x, pos,
+                     cache: KVCache):
+    """One-token decode. x: (B,1,E); pos: scalar global position."""
+    positions = jnp.asarray(pos, jnp.int32)[None]
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    c = cache.k.shape[1]
+    slot = jnp.asarray(pos % c, jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache.slot_pos,
+                                            positions, (slot,))
+    scale = q.shape[-1] ** -0.5
+    sc = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale     # (B,K,G,1,C)
+    sc = softcap(sc, cfg.attn_softcap)
+    window = spec.window
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= slot_pos > pos - window
+    sc = jnp.where(valid[None, None, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    b, s, kh, g, d = out.shape
+    out = out.reshape(b, s, kh * g, d)
+    y = jnp.einsum("bshd,hde->bse", out, params["wo"])
+    return y, KVCache(k=k, v=v, slot_pos=slot_pos)

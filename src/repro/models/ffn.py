@@ -1,0 +1,254 @@
+"""Feed-forward layers: gated dense MLP and top-k Mixture-of-Experts.
+
+The MoE uses capacity-based scatter dispatch (TPU-native): tokens are routed
+to per-expert buffers of fixed capacity via cumsum-position one-hot logic, the
+expert matmuls run as a single batched einsum over the expert dim (shardable
+as expert parallelism), and outputs are gathered back and combined with router
+weights.  Overflowing tokens are dropped (standard Switch-style), and a
+load-balance auxiliary loss is returned.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import activation, dense_init
+from repro.sharding.ctx import logical_constraint
+
+CAPACITY_FACTOR = 1.25
+
+# MoE execution strategy:
+#   "dispatch" — capacity-based scatter dispatch (exact FLOPs, token drops).
+#     Right on hosts and small meshes; GSPMD lowers the scatter poorly at
+#     256-way SPMD (replicates the dispatch buffer), so:
+#   "dense"    — masked dense-expert compute (top-k semantics preserved
+#     exactly, NO drops, E/k x FLOP overcompute).  GSPMD-friendly: pure
+#     einsums, experts sharded over "model", tokens over "data".  Used by
+#     the distributed train step; the overcompute shows up honestly in the
+#     roofline useful-FLOPs ratio.  See DESIGN.md (hardware adaptation).
+#   "hierarchical" — §Perf H1: per-data-shard local scatter dispatch
+#     (vmapped over shard rows so the scatter is batched and partitionable),
+#     expert einsums at exact capacity FLOPs (1.25x active, vs E/k x dense).
+_MOE_IMPL = "dispatch"
+_MOE_ROWS = 16            # data-shard rows for the hierarchical impl
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def moe_impl(kind: str, rows: int = 16):
+    global _MOE_IMPL, _MOE_ROWS
+    assert kind in ("dispatch", "dense", "hierarchical")
+    prev, prev_rows = _MOE_IMPL, _MOE_ROWS
+    _MOE_IMPL = kind
+    _MOE_ROWS = rows
+    try:
+        yield
+    finally:
+        _MOE_IMPL = prev
+        _MOE_ROWS = prev_rows
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params, x, act_name: str = "silu"):
+    act = activation(act_name)
+    h = act(jnp.einsum("bse,ef->bsf", x, params["w_gate"]))
+    h = h * jnp.einsum("bse,ef->bsf", x, params["w_up"])
+    h = logical_constraint(h, ("batch", None, "ff"))
+    return jnp.einsum("bsf,fe->bse", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+def init_moe_params(key, d_model: int, moe: MoEConfig, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, f = moe.n_experts, moe.d_ff_expert
+    return {
+        "router": dense_init(k1, (d_model, e), dtype),
+        "we_gate": dense_init(k2, (e, d_model, f), dtype),
+        "we_up": dense_init(k3, (e, d_model, f), dtype),
+        "we_down": dense_init(k4, (e, f, d_model), dtype, fan_in=f),
+    }
+
+
+def _shard_expert_buf(x):  # (E, C, d): experts -> model, capacity -> data
+    return logical_constraint(x, ("expert", "moe_capacity", "embed"))
+
+
+def _route(params, xf, moe: MoEConfig):
+    """Router shared by both MoE impls. xf: (T, d)."""
+    e, k = moe.n_experts, moe.top_k
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss over the top-1 assignment fractions.
+    top1_onehot = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    frac_tokens = top1_onehot.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    aux = moe.aux_loss_coef * e * jnp.sum(frac_tokens * frac_probs)
+    return gate_vals, expert_ids, aux
+
+
+def moe_ffn(params, x, moe: MoEConfig, act_name: str = "silu",
+            capacity_factor: float = CAPACITY_FACTOR
+            ) -> Tuple[jax.Array, jax.Array]:
+    if _MOE_IMPL == "dense":
+        return moe_ffn_dense(params, x, moe, act_name)
+    if _MOE_IMPL == "hierarchical":
+        return moe_ffn_hierarchical(params, x, moe, act_name,
+                                    rows=_MOE_ROWS,
+                                    capacity_factor=capacity_factor)
+    return moe_ffn_dispatch(params, x, moe, act_name, capacity_factor)
+
+
+def moe_ffn_hierarchical(params, x, moe: MoEConfig, act_name: str = "silu",
+                         *, rows: int = 16,
+                         capacity_factor: float = CAPACITY_FACTOR
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """§Perf H1: capacity dispatch with the scatter BATCHED over data-shard
+    rows.  Each row dispatches its own tokens into (E, C_row, d) buffers —
+    a batched scatter GSPMD can partition on the row dim — then a single
+    expert einsum runs at exact capacity FLOPs (~1.25x active params)."""
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    t = b * s
+    if t % rows or t // rows < e:
+        return moe_ffn_dense(params, x, moe, act_name)
+    xf = x.reshape(t, d)
+    gate_vals, expert_ids, aux = _route(params, xf, moe)
+    tr = t // rows
+    capacity = int(max(1, capacity_factor * tr * k / e))
+    capacity = (capacity + 7) // 8 * 8
+
+    xr = xf.reshape(rows, tr, d)
+    ids_r = expert_ids.reshape(rows, tr, k)
+    gv_r = gate_vals.reshape(rows, tr, k)
+
+    def dispatch_row(xrow, ids):
+        flat_ids = ids.reshape(-1)                          # (tr*k,)
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+        pos_all = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_all, flat_ids[:, None], 1)[:, 0]
+        keep = pos < capacity
+        dest = jnp.where(keep, flat_ids * capacity + pos, e * capacity - 1)
+        xk = jnp.repeat(xrow[:, None, :], k, axis=1).reshape(tr * k, d)
+        xk = jnp.where(keep[:, None], xk, jnp.zeros((1, d), xk.dtype))
+        buf = jnp.zeros((e * capacity, d), xrow.dtype).at[dest].add(xk)
+        return buf.reshape(e, capacity, d), keep, dest
+
+    bufs, keeps, dests = jax.vmap(dispatch_row)(xr, ids_r)  # (R,E,C,d)
+    bufs = logical_constraint(bufs, ("moe_tokens", "expert", None, None))
+
+    act = activation(act_name)
+    h = act(jnp.einsum("recd,edf->recf", bufs, params["we_gate"]))
+    h = h * jnp.einsum("recd,edf->recf", bufs, params["we_up"])
+    h = logical_constraint(h, ("moe_tokens", "expert", None, None))
+    out_buf = jnp.einsum("recf,efd->recd", h, params["we_down"])
+    out_buf = logical_constraint(out_buf, ("moe_tokens", "expert", None, None))
+
+    def combine_row(ob, keep, dest, gv):
+        flat = ob.reshape(e * capacity, d)
+        gathered = jnp.where(keep[:, None], flat[dest],
+                             jnp.zeros((1, d), flat.dtype))
+        return (gathered.reshape(tr, k, d)
+                * gv[..., None].astype(flat.dtype)).sum(axis=1)
+
+    y = jax.vmap(combine_row)(out_buf, keeps, dests, gv_r)
+    return y.reshape(b, s, d), aux.astype(x.dtype)
+
+
+def moe_ffn_dense(params, x, moe: MoEConfig, act_name: str = "silu"
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Masked dense-expert MoE: every expert sees every token; the top-k
+    combine mask zeroes the rest.  Numerically = capacity-infinite top-k."""
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    gate_vals, expert_ids, aux = _route(params, xf, moe)
+    # combine weights (T, E) via one-hot sum over the k slots
+    combine = (jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)
+               * gate_vals[..., None]).sum(axis=1)              # (T, E)
+    combine = logical_constraint(combine, ("moe_tokens", "expert"))
+    act = activation(act_name)
+    h = act(jnp.einsum("td,edf->etf", xf, params["we_gate"]))
+    h = h * jnp.einsum("td,edf->etf", xf, params["we_up"])
+    h = logical_constraint(h, ("expert", "moe_tokens", None))
+    y_e = jnp.einsum("etf,efd->etd", h, params["we_down"])
+    y_e = logical_constraint(y_e, ("expert", "moe_tokens", None))
+    y = jnp.einsum("etd,te->td", y_e, combine.astype(y_e.dtype))
+    return y.reshape(b, s, d), aux.astype(x.dtype)
+
+
+def moe_ffn_dispatch(params, x, moe: MoEConfig, act_name: str = "silu",
+                     capacity_factor: float = CAPACITY_FACTOR
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    gate_vals, expert_ids, aux = _route(params, xf, moe)
+
+    capacity = int(max(1, capacity_factor * t * k / e))
+    # pad capacity to a lane-friendly multiple of 8
+    capacity = (capacity + 7) // 8 * 8
+
+    # position of each (token, slot) within its expert queue
+    flat_ids = expert_ids.reshape(-1)                           # (T*k,)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)       # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)       # (T*k, E)
+    pos = jnp.take_along_axis(pos_in_expert, flat_ids[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    dest = jnp.where(keep, flat_ids * capacity + pos, e * capacity)  # overflow bin
+
+    # scatter-add tokens into expert buffers; dropped tokens are zeroed and
+    # land (harmlessly, additively) in the last slot.  Explicit sharding
+    # constraints keep GSPMD from replicating the flat dispatch buffers.
+    xk = jnp.repeat(xf[:, None, :], k, axis=1).reshape(t * k, d)
+    xk = jnp.where(keep[:, None], xk, jnp.zeros((1, d), xk.dtype))
+    xk = logical_constraint(xk, ("moe_tokens", None))
+    dest_c = jnp.minimum(dest, e * capacity - 1)
+    buf = jnp.zeros((e * capacity, d), x.dtype).at[dest_c].add(xk)
+    buf = buf.reshape(e, capacity, d)
+    buf = _shard_expert_buf(buf)
+
+    act = activation(act_name)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params["we_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    h = logical_constraint(h, ("expert", "moe_capacity", None))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["we_down"])
+    out_buf = _shard_expert_buf(out_buf)
+
+    # gather back to (T*k, d); dropped tokens contribute zero
+    out_flat = out_buf.reshape(e * capacity, d)
+    gathered = jnp.where(
+        keep[:, None],
+        out_flat[jnp.minimum(dest, e * capacity - 1)],
+        jnp.zeros((1, d), out_flat.dtype))
+    gathered = logical_constraint(gathered, ("moe_tokens", None))
+    combined = (gathered.reshape(t, k, d)
+                * gate_vals[..., None].astype(out_flat.dtype)).sum(axis=1)
+    return combined.reshape(b, s, d), aux.astype(x.dtype)

@@ -1,0 +1,461 @@
+"""Composable language model: assembles LayerSpecs into a decoder-only LM,
+an encoder-decoder (audio family), or a frontend-prefixed VLM.
+
+API (all functions close over ``ModelConfig``; params are plain pytrees):
+  init_params(cfg, key, dtype)
+  forward(params, cfg, tokens, ...)            # full-seq logits (train/eval)
+  loss_fn(params, cfg, batch, ...)             # next-token CE + MoE aux
+  init_cache(cfg, batch, max_len, ...)         # decode state pytree
+  prefill(params, cfg, tokens, cache, ...)     # build cache, last logits
+  decode_step(params, cfg, token, pos, cache)  # one token
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (FFN_DENSE, FFN_MOE, FFN_NONE, MIX_ATTN,
+                                MIX_MLSTM, MIX_RGLRU, MIX_SLSTM, LayerSpec,
+                                ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import recurrent as rec_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (dense_init, embed_init, rmsnorm, shard_bse,
+                                 softcap)
+from repro.sharding.ctx import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if spec.mixer == MIX_ATTN:
+        p["mixer"] = attn_mod.init_attention_params(ks[0], cfg, dtype=dtype)
+    elif spec.mixer == MIX_RGLRU:
+        p["mixer"] = rec_mod.init_rglru_params(ks[0], cfg, dtype=dtype)
+    elif spec.mixer == MIX_MLSTM:
+        p["mixer"] = xlstm_mod.init_mlstm_params(ks[0], cfg, dtype=dtype)
+    elif spec.mixer == MIX_SLSTM:
+        p["mixer"] = xlstm_mod.init_slstm_params(ks[0], cfg, dtype=dtype)
+    if spec.ffn != FFN_NONE:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if spec.ffn == FFN_DENSE:
+            p["ffn"] = ffn_mod.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["ffn"] = ffn_mod.init_moe_params(ks[1], cfg.d_model, cfg.moe, dtype)
+    if cfg.is_encoder_decoder:
+        p["ln_cross"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = attn_mod.init_attention_params(
+            ks[2], cfg, bias=False, dtype=dtype)
+    return p
+
+
+def _init_encoder(key, cfg: ModelConfig, dtype):
+    e = cfg.encoder
+    ks = jax.random.split(key, e.n_layers + 1)
+    layers = []
+    for i in range(e.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "ln1": jnp.zeros((e.d_model,), dtype),
+            "mixer": attn_mod.init_attention_params(
+                k1, cfg, d_in=e.d_model, n_heads=e.n_heads, n_kv=e.n_kv_heads,
+                head_dim=e.head_dim, bias=False, dtype=dtype),
+            "ln2": jnp.zeros((e.d_model,), dtype),
+            "ffn": ffn_mod.init_mlp_params(k2, e.d_model, e.d_ff, dtype),
+        })
+    return {"layers": layers, "final_norm": jnp.zeros((e.d_model,), dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": [
+            _init_layer(ks[1 + i], cfg, spec, dtype)
+            for i, spec in enumerate(cfg.layers)
+        ],
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[cfg.n_layers + 1], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = dense_init(
+            ks[cfg.n_layers + 2], (cfg.frontend.feature_dim, cfg.d_model), dtype)
+    if cfg.is_encoder_decoder:
+        params["encoder"] = _init_encoder(ks[cfg.n_layers + 3], cfg, dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block(p, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
+           enc_out=None, enc_pos=None, use_kernel=True):
+    """One transformer block (full sequence). Returns (x, moe_aux)."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == MIX_ATTN:
+        mix = attn_mod.attention(p["mixer"], cfg, spec, h, positions,
+                                 use_kernel=use_kernel)
+    elif spec.mixer == MIX_RGLRU:
+        mix = rec_mod.rglru_block(p["mixer"], h, use_kernel=use_kernel)
+    elif spec.mixer == MIX_MLSTM:
+        mix = xlstm_mod.mlstm_block(p["mixer"], h, cfg)
+    else:
+        mix = xlstm_mod.slstm_block(p["mixer"], h, cfg)
+    x = x + mix
+    if enc_out is not None:
+        hc = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        cross = attn_mod.attention(
+            p["cross"], cfg, spec, hc, positions, causal=False,
+            kv_input=enc_out, kv_positions=enc_pos, rope=False,
+            use_kernel=use_kernel)
+        x = x + cross
+    aux = jnp.zeros((), x.dtype)
+    if spec.ffn != FFN_NONE:
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == FFN_DENSE:
+            out = ffn_mod.mlp(p["ffn"], h2, cfg.act)
+        else:
+            out, aux = ffn_mod.moe_ffn(p["ffn"], h2, cfg.moe, cfg.act)
+        x = x + out
+    return shard_bse(x), aux
+
+
+def _encode(params, cfg: ModelConfig, frames, *, use_kernel=True):
+    """Encoder over (stub) frontend frames: (B, T, F) -> (B, T, d_enc)."""
+    e = cfg.encoder
+    x = jnp.einsum("btf,fd->btd", frames, params["frontend_proj"])
+    pos = jnp.arange(frames.shape[1])
+    enc_spec = LayerSpec()
+    for lp in params["encoder"]["layers"]:
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn_mod.attention(lp["mixer"], cfg, enc_spec, h, pos,
+                                   causal=False, use_kernel=use_kernel)
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + ffn_mod.mlp(lp["ffn"], h2, cfg.act)
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps), pos
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend):
+    """Token embeddings, with VLM patch embeddings prefixed if present."""
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(
+        params["embed"].dtype)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision_patches":
+        assert frontend is not None, "vlm needs frontend patch embeddings"
+        fx = jnp.einsum("bpf,fd->bpd", frontend, params["frontend_proj"])
+        x = jnp.concatenate([fx.astype(x.dtype), x], axis=1)
+    return shard_bse(x)
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logical_constraint(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, *, frontend=None,
+            use_kernel=True, remat=False):
+    """tokens: (B, S_text). Returns logits (B, S_total, V)."""
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        assert frontend is not None, "encoder-decoder needs frontend frames"
+        enc_out, enc_pos = _encode(params, cfg, frontend, use_kernel=use_kernel)
+        x = _embed_inputs(params, cfg, tokens, None)
+    else:
+        x = _embed_inputs(params, cfg, tokens, frontend)
+    positions = jnp.arange(x.shape[1])
+
+    for p, spec in zip(params["layers"], cfg.layers):
+        blk = functools.partial(_block, cfg=cfg, spec=spec,
+                                enc_out=enc_out, enc_pos=enc_pos,
+                                use_kernel=use_kernel)
+        if remat:
+            blk = jax.checkpoint(lambda p_, x_, pos_, blk=blk:
+                                 blk(p_, x=x_, positions=pos_))
+            x, _aux = blk(p, x, positions)
+        else:
+            x, _aux = blk(p, x=x, positions=positions)
+    return _unembed(params, cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_kernel=True, remat=False):
+    """batch: {"tokens": (B,S), "labels": (B,S) with -1 = ignored,
+    optional "frontend"}.  Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    frontend = batch.get("frontend")
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out, enc_pos = _encode(params, cfg, frontend, use_kernel=use_kernel)
+        x = _embed_inputs(params, cfg, tokens, None)
+    else:
+        x = _embed_inputs(params, cfg, tokens, frontend)
+    positions = jnp.arange(x.shape[1])
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for p, spec in zip(params["layers"], cfg.layers):
+        blk = functools.partial(_block, cfg=cfg, spec=spec, enc_out=enc_out,
+                                enc_pos=enc_pos, use_kernel=use_kernel)
+        if remat:
+            x, aux = jax.checkpoint(
+                lambda p_, x_, blk=blk: blk(p_, x=x_, positions=positions)
+            )(p, x)
+        else:
+            x, aux = blk(p, x=x, positions=positions)
+        aux_total = aux_total + aux.astype(jnp.float32)
+
+    # VLM prefix: hidden states cover frontend+text; align to text labels
+    if x.shape[1] != labels.shape[1]:
+        x = x[:, x.shape[1] - labels.shape[1]:]
+    # Optional per-sequence weights (B,): FedAvg participant weighting
+    # (n_k / n) enters the round objective here — the backward pass's
+    # gradient reduction then IS the weighted FL aggregation.
+    weight = batch.get("weight")
+    mask = labels >= 0
+    tok_w = mask.astype(jnp.float32)
+    if weight is not None:
+        tok_w = tok_w * weight[:, None].astype(jnp.float32)
+    ce, acc = chunked_ce(params, cfg, x, labels, tok_w)
+    loss = ce + aux_total
+    return loss, {"ce": ce, "aux": aux_total, "acc": acc}
+
+
+def chunked_ce(params, cfg: ModelConfig, x, labels, tok_w, *,
+               chunk_tokens: int = 16_384):
+    """Cross-entropy without materializing full (B,S,V) f32 logits: flatten
+    tokens, scan over chunks, recompute logits in the backward (remat)."""
+    b, s, d = x.shape
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    t = b * s
+    xf = x.reshape(t, d)
+    lf = labels.reshape(t)
+    wf = tok_w.reshape(t)
+    mf = (labels >= 0).reshape(t)
+    chunk = min(chunk_tokens, t)
+    pad = (-t) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        lf = jnp.pad(lf, (0, pad))
+        wf = jnp.pad(wf, (0, pad))
+        mf = jnp.pad(mf, (0, pad))
+    nc = (t + pad) // chunk
+    xs = xf.reshape(nc, chunk, d)
+    ls = lf.reshape(nc, chunk)
+    ws = wf.reshape(nc, chunk)
+    ms = mf.reshape(nc, chunk)
+
+    def chunk_stats(xc, lc, wc, mc):
+        logits = jnp.einsum("td,dv->tv", xc, head)
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        logits = logical_constraint(logits, (None, "vocab"))
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lc, 0)
+        tgt = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+        nll = logz - tgt
+        correct = jnp.where(mc, logits.argmax(-1) == safe, False)
+        return (nll * wc).sum(), correct.sum(), wc.sum(), mc.sum()
+
+    if nc == 1:
+        nll_s, cor_s, w_s, m_s = chunk_stats(xs[0], ls[0], ws[0], ms[0])
+    else:
+        def body(carry, inp):
+            out = jax.checkpoint(chunk_stats)(*inp)
+            return jax.tree.map(jnp.add, carry, out), None
+
+        init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+        (nll_s, cor_s, w_s, m_s), _ = jax.lax.scan(
+            body, init, (xs, ls, ws, ms))
+    ce = nll_s / jnp.maximum(w_s, 1e-9)
+    acc = cor_s / jnp.maximum(m_s, 1)
+    return ce, acc
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               decode_window: Optional[int] = None, dtype=jnp.float32):
+    """decode_window forces a sliding window onto full-attention layers
+    (the documented long-context serving adaptation)."""
+    layers = []
+    for spec in cfg.layers:
+        if spec.mixer == MIX_ATTN:
+            layers.append(attn_mod.init_kv_cache(
+                cfg, spec, batch, max_len, decode_window=decode_window,
+                dtype=dtype))
+        elif spec.mixer == MIX_RGLRU:
+            layers.append(rec_mod.init_rglru_state(cfg, batch, dtype))
+        elif spec.mixer == MIX_MLSTM:
+            layers.append(xlstm_mod.init_mlstm_state(cfg, batch, dtype))
+        else:
+            layers.append(xlstm_mod.init_slstm_state(cfg, batch, dtype))
+    cache: Dict[str, Any] = {"layers": layers}
+    if cfg.is_encoder_decoder:
+        e = cfg.encoder
+        t = cfg.frontend.seq_len
+        cache["enc_out"] = jnp.zeros((batch, t, e.d_model), dtype)
+    return cache
+
+
+def _prefill_block(p, cfg: ModelConfig, spec, x, positions, st, *,
+                   enc_out=None, enc_pos=None, use_kernel=True):
+    """One block of the prompt pass; fills this layer's cache/state."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == MIX_ATTN:
+        mix, st = attn_mod.prefill_into_cache(
+            p["mixer"], cfg, spec, h, positions, st, use_kernel=use_kernel)
+    elif spec.mixer == MIX_RGLRU:
+        mix = rec_mod.rglru_block(p["mixer"], h, use_kernel=use_kernel)
+        # state: re-derive the final hidden state (cheap second scan)
+        u = jnp.einsum("bsd,dw->bsw", h, p["mixer"]["w_in"])
+        a, b = rec_mod._gates(
+            p["mixer"],
+            rec_mod._causal_conv(u, p["mixer"]["conv_w"],
+                                 p["mixer"]["conv_b"]))
+        hseq = rec_mod.rglru_scan(a.astype(jnp.float32),
+                                  b.astype(jnp.float32))
+        st = rec_mod.RGLRUState(
+            h=hseq[:, -1],
+            conv_tail=u[:, -(cfg.conv1d_width - 1):].astype(
+                st.conv_tail.dtype))
+    elif spec.mixer == MIX_MLSTM:
+        mix, st = _mlstm_prefill(p["mixer"], h, cfg)
+    else:
+        mix, st = _slstm_prefill(p["mixer"], h, cfg)
+    x = x + mix
+    if enc_out is not None:
+        hc = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + attn_mod.attention(p["cross"], cfg, spec, hc, positions,
+                                   causal=False, kv_input=enc_out,
+                                   kv_positions=enc_pos, rope=False,
+                                   use_kernel=use_kernel)
+    if spec.ffn != FFN_NONE:
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == FFN_DENSE:
+            x = x + ffn_mod.mlp(p["ffn"], h2, cfg.act)
+        else:
+            out, _ = ffn_mod.moe_ffn(p["ffn"], h2, cfg.moe, cfg.act)
+            x = x + out
+    return shard_bse(x), st
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, frontend=None,
+            use_kernel=True):
+    """Run the prompt through the model, filling the cache.
+    Returns (last-position logits, cache)."""
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out, enc_pos = _encode(params, cfg, frontend, use_kernel=use_kernel)
+        cache = dict(cache, enc_out=enc_out)
+        x = _embed_inputs(params, cfg, tokens, None)
+    else:
+        x = _embed_inputs(params, cfg, tokens, frontend)
+    positions = jnp.arange(x.shape[1])
+
+    new_layers = []
+    for p, spec, st in zip(params["layers"], cfg.layers, cache["layers"]):
+        x, st = _prefill_block(p, cfg, spec, x, positions, st,
+                               enc_out=enc_out, enc_pos=enc_pos,
+                               use_kernel=use_kernel)
+        new_layers.append(st)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits[:, 0], dict(cache, layers=new_layers)
+
+
+def _mlstm_prefill(p, h, cfg):
+    """Full-seq chunkwise mLSTM that also returns the final state."""
+    nh = cfg.n_heads
+    w = int(cfg.d_model * cfg.xlstm_proj_factor)
+    hd = w // nh
+    q, k, v, i_pre, f_pre, z = xlstm_mod._mlstm_qkvif(p, h, nh, hd)
+    b, s = h.shape[:2]
+    hs, (C, n, m) = xlstm_mod.mlstm_chunkwise(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32),
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        i_pre.transpose(0, 2, 1), f_pre.transpose(0, 2, 1))
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, s, w).astype(h.dtype)
+    out = jnp.einsum("bsw,wd->bsd", hs * z, p["w_down"])
+    xu = jnp.einsum("bsd,dw->bsw", h, p["w_up"])
+    st = xlstm_mod.MLSTMState(C=C, n=n, m=m,
+                              conv_tail=xu[:, -3:].astype(h.dtype))
+    return out, st
+
+
+def _slstm_prefill(p, h, cfg):
+    b, s, d = h.shape
+    gates = xlstm_mod._slstm_gate_inputs(p, h)
+    xs = {g: gates[g].transpose(1, 0, 2) for g in gates}
+    st0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+           jnp.full((b, cfg.n_heads), -jnp.inf, jnp.float32),
+           jnp.zeros((b, d), jnp.float32))
+    step = lambda carry, x_t: xlstm_mod._slstm_step(p, cfg.n_heads, carry, x_t)
+    (c, n, m, hf), hs = jax.lax.scan(step, st0, xs)
+    hs = hs.transpose(1, 0, 2).astype(h.dtype)
+    out = hs * jax.nn.silu(jnp.einsum("bsd,de->bse", h, p["w_z_gate"]))
+    out = jnp.einsum("bsd,de->bse", out, p["w_down"])
+    return out, xlstm_mod.SLSTMState(c=c, n=n, m=m, h=hf)
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache):
+    """token: (B,) int32; pos: scalar int32 (global position of this token).
+    Returns (logits (B,V), new cache)."""
+    x = params["embed"][token][:, None] * jnp.sqrt(
+        float(cfg.d_model)).astype(params["embed"].dtype)   # (B,1,d)
+    x = logical_constraint(x, ("batch", None, "embed"))
+    enc_out = cache.get("enc_out")
+    enc_pos = (jnp.arange(enc_out.shape[1]) if enc_out is not None else None)
+
+    new_layers = []
+    for p, spec, st in zip(params["layers"], cfg.layers, cache["layers"]):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if spec.mixer == MIX_ATTN:
+            mix, st = attn_mod.decode_attention(p["mixer"], cfg, spec, h, pos, st)
+        elif spec.mixer == MIX_RGLRU:
+            mix, st = rec_mod.rglru_decode_step(p["mixer"], h, st)
+        elif spec.mixer == MIX_MLSTM:
+            mix, st = xlstm_mod.mlstm_decode_step(p["mixer"], h, st, cfg)
+        else:
+            mix, st = xlstm_mod.slstm_decode_step(p["mixer"], h, st, cfg)
+        x = x + mix
+        if enc_out is not None:
+            hc = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+            pos_q = jnp.asarray(pos, jnp.int32)[None]
+            x = x + attn_mod.attention(p["cross"], cfg, spec, hc, pos_q,
+                                       causal=False, kv_input=enc_out,
+                                       kv_positions=enc_pos, rope=False,
+                                       use_kernel=False)
+        if spec.ffn != FFN_NONE:
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if spec.ffn == FFN_DENSE:
+                x = x + ffn_mod.mlp(p["ffn"], h2, cfg.act)
+            else:
+                out, _ = ffn_mod.moe_ffn(p["ffn"], h2, cfg.moe, cfg.act)
+                x = x + out
+        new_layers.append(st)
+    logits = _unembed(params, cfg, x)
+    return logits[:, 0], dict(cache, layers=new_layers)

@@ -1,0 +1,36 @@
+"""The paper's EMNIST model: an MLP with one hidden layer (200 ReLU units)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import MLPConfig
+
+
+def init_params(cfg: MLPConfig, key, dtype=jnp.float32):
+    dims = (cfg.in_dim,) + cfg.hidden + (cfg.n_classes,)
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            {"w": (jax.random.normal(ks[i], (dims[i], dims[i + 1]))
+                   * jnp.sqrt(2.0 / dims[i])).astype(dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)
+        ]
+    }
+
+
+def forward(params, cfg: MLPConfig, x):
+    """x: (B, in_dim) or (B, H, W[, C]) flattened."""
+    x = x.reshape(x.shape[0], -1)
+    layers = params["layers"]
+    for p in layers[:-1]:
+        x = jax.nn.relu(x @ p["w"] + p["b"])
+    p = layers[-1]
+    return x @ p["w"] + p["b"]
+
+
+def flops_per_example(cfg: MLPConfig) -> float:
+    dims = (cfg.in_dim,) + cfg.hidden + (cfg.n_classes,)
+    return float(sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1)))

@@ -1,0 +1,124 @@
+"""RecurrentGemma / Griffin recurrent block: causal conv1d + RG-LRU.
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is a diagonal linear recurrence, so training/prefill uses
+``jax.lax.associative_scan`` (TPU-parallel, log-depth); decode carries (h,
+conv tail) state.  ``kernels/rglru_scan`` is the Pallas TPU version of the
+same scan; this module is also its reference.
+
+Simplification vs. the Griffin paper (documented in DESIGN.md): the
+recurrence/input gates use per-channel (diagonal) weights rather than
+block-diagonal linear maps.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.sharding.ctx import logical_constraint
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def init_rglru_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype),
+        "w_gate_branch": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (cw, w), dtype, fan_in=cw),
+        "conv_b": jnp.zeros((w,), dtype),
+        # RG-LRU gates (diagonal) + Lambda
+        "a_gate_w": jnp.zeros((w,), dtype),
+        "a_gate_b": jnp.zeros((w,), dtype),
+        "x_gate_w": jnp.zeros((w,), dtype),
+        "x_gate_b": jnp.zeros((w,), dtype),
+        # Lambda init so that a = sigmoid(lambda) in [0.9, 0.999]
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w)) /  # softplus^-1
+                    (1 - jnp.linspace(0.9, 0.999, w))), dtype),
+        "w_out": dense_init(ks[4], (w, d), dtype, fan_in=w),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b):
+    """x: (B,S,W); width-cw causal depthwise conv via shifted adds."""
+    cw = conv_w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shifted = x if i == 0 else jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * conv_w[cw - 1 - i]
+    return out + conv_b
+
+
+def _gates(params, u):
+    """u: conv output (..., W). Returns (a, beta*i*u) recurrence coeffs."""
+    r = jax.nn.sigmoid(u * params["a_gate_w"] + params["a_gate_b"])
+    i = jax.nn.sigmoid(u * params["x_gate_w"] + params["x_gate_b"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * u
+
+
+def rglru_scan(a, b, h0=None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t over axis 1.
+
+    a, b: (B, S, W).  Uses associative_scan (log-depth, TPU-parallel)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, W) recurrent state
+    conv_tail: jax.Array  # (B, cw-1, W) last conv inputs
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), dtype),
+        conv_tail=jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    )
+
+
+def rglru_block(params, x, *, use_kernel: bool = True):
+    """Full-sequence Griffin recurrent block. x: (B,S,d) -> (B,S,d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    u = logical_constraint(u, ("batch", None, "ff"))
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, u)
+    h = rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32))
+    h = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", h, params["w_out"])
+
+
+def rglru_decode_step(params, x, state: RGLRUState):
+    """One-token decode. x: (B,1,d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"])            # (B,1,W)
+    conv_in = jnp.concatenate([state.conv_tail, u], axis=1)     # (B,cw,W)
+    cw = params["conv_w"].shape[0]
+    u_c = jnp.einsum("bcw,cw->bw", conv_in[:, -cw:], params["conv_w"])
+    u_c = (u_c + params["conv_b"])[:, None]                     # (B,1,W)
+    a, b = _gates(params, u_c)
+    h_new = a[:, 0] * state.h + b[:, 0]
+    out = (h_new[:, None].astype(x.dtype) * gate)
+    y = jnp.einsum("bsw,wd->bsd", out, params["w_out"])
+    return y, RGLRUState(h=h_new, conv_tail=conv_in[:, 1:])

@@ -1,0 +1,83 @@
+"""Uniform model handles.
+
+``build_model(cfg)`` returns a ``Model`` with a consistent functional API
+regardless of family (LM configs or the paper's vision configs), so the FL
+substrate, launcher and benchmarks are model-agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.paper_models import MLPConfig, ResNetConfig
+from repro.models import lm as lm_mod
+from repro.models import mlp as mlp_mod
+from repro.models import resnet as resnet_mod
+
+
+@dataclass(frozen=True)
+class Model:
+    config: Any
+    init: Callable[..., Any]                    # (key, dtype) -> params
+    loss_fn: Callable[..., Any]                 # (params, batch) -> (loss, metrics)
+    forward: Optional[Callable[..., Any]] = None
+    init_cache: Optional[Callable[..., Any]] = None
+    prefill: Optional[Callable[..., Any]] = None
+    decode_step: Optional[Callable[..., Any]] = None
+    flops_per_example: Optional[float] = None   # analytic fwd FLOPs (vision)
+
+
+def _classifier_loss(forward):
+    def loss_fn(params, cfg, batch):
+        logits = forward(params, cfg, batch["x"])
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        # optional per-example mask (for padded client batches)
+        mask = batch.get("mask")
+        if mask is None:
+            loss = nll.mean()
+            acc = (logits.argmax(-1) == labels).mean()
+        else:
+            denom = jnp.maximum(mask.sum(), 1)
+            loss = jnp.where(mask, nll, 0.0).sum() / denom
+            acc = jnp.where(mask, logits.argmax(-1) == labels, False).sum() / denom
+        return loss, {"ce": loss, "acc": acc}
+    return loss_fn
+
+
+def build_model(cfg: Union[ModelConfig, ResNetConfig, MLPConfig]) -> Model:
+    if isinstance(cfg, ModelConfig):
+        return Model(
+            config=cfg,
+            init=lambda key, dtype=jnp.float32: lm_mod.init_params(cfg, key, dtype),
+            loss_fn=lambda params, batch, **kw: lm_mod.loss_fn(params, cfg, batch, **kw),
+            forward=lambda params, tokens, **kw: lm_mod.forward(params, cfg, tokens, **kw),
+            init_cache=lambda batch, max_len, **kw: lm_mod.init_cache(cfg, batch, max_len, **kw),
+            prefill=lambda params, tokens, cache, **kw: lm_mod.prefill(params, cfg, tokens, cache, **kw),
+            decode_step=lambda params, token, pos, cache: lm_mod.decode_step(params, cfg, token, pos, cache),
+        )
+    if isinstance(cfg, ResNetConfig):
+        fwd = resnet_mod.forward
+        return Model(
+            config=cfg,
+            init=lambda key, dtype=jnp.float32: resnet_mod.init_params(cfg, key, dtype),
+            loss_fn=lambda params, batch: _classifier_loss(fwd)(params, cfg, batch),
+            forward=lambda params, x: fwd(params, cfg, x),
+            flops_per_example=resnet_mod.flops_per_example(cfg),
+        )
+    if isinstance(cfg, MLPConfig):
+        fwd = mlp_mod.forward
+        return Model(
+            config=cfg,
+            init=lambda key, dtype=jnp.float32: mlp_mod.init_params(cfg, key, dtype),
+            loss_fn=lambda params, batch: _classifier_loss(fwd)(params, cfg, batch),
+            forward=lambda params, x: fwd(params, cfg, x),
+            flops_per_example=mlp_mod.flops_per_example(cfg),
+        )
+    raise TypeError(f"unknown config type {type(cfg)}")

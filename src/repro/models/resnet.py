@@ -1,0 +1,121 @@
+"""ResNet-10/18/26/34 (BasicBlock) for the paper's measurement study.
+
+GroupNorm is used instead of BatchNorm (standard in FL to avoid non-IID
+batch-statistics leakage across clients — noted in DESIGN.md); everything
+else follows He et al. CIFAR-style stem (3x3, no max-pool) since inputs are
+32x32 spectrograms / images.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import ResNetConfig
+
+
+def _conv_init(key, shape, dtype):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(n, h, w, c) * scale + bias).astype(x.dtype)
+
+
+def _init_block(key, c_in, c_out, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(k1, (3, 3, c_in, c_out), dtype),
+        "gn1_s": jnp.ones((c_out,), dtype), "gn1_b": jnp.zeros((c_out,), dtype),
+        "conv2": _conv_init(k2, (3, 3, c_out, c_out), dtype),
+        "gn2_s": jnp.ones((c_out,), dtype), "gn2_b": jnp.zeros((c_out,), dtype),
+    }
+    if c_in != c_out:
+        p["proj"] = _conv_init(k3, (1, 1, c_in, c_out), dtype)
+    return p
+
+
+def init_params(cfg: ResNetConfig, key, dtype=jnp.float32):
+    widths = [cfg.width * (2 ** i) for i in range(4)]
+    ks = jax.random.split(key, 2 + sum(cfg.stage_blocks))
+    params = {
+        "stem": _conv_init(ks[0], (3, 3, cfg.in_channels, widths[0]), dtype),
+        "stem_gn_s": jnp.ones((widths[0],), dtype),
+        "stem_gn_b": jnp.zeros((widths[0],), dtype),
+        "stages": [],
+    }
+    idx = 1
+    c_in = widths[0]
+    for stage, n_blocks in enumerate(cfg.stage_blocks):
+        c_out = widths[stage]
+        blocks = []
+        for b in range(n_blocks):
+            blocks.append(_init_block(ks[idx], c_in, c_out, dtype))
+            idx += 1
+            c_in = c_out
+        params["stages"].append(blocks)
+    k_head = ks[idx]
+    params["head_w"] = (jax.random.normal(k_head, (c_in, cfg.n_classes))
+                        * jnp.sqrt(1.0 / c_in)).astype(dtype)
+    params["head_b"] = jnp.zeros((cfg.n_classes,), dtype)
+    return params
+
+
+def _block_apply(p, x, stride):
+    h = _conv(x, p["conv1"], stride)
+    h = jax.nn.relu(_groupnorm(h, p["gn1_s"], p["gn1_b"]))
+    h = _conv(h, p["conv2"])
+    h = _groupnorm(h, p["gn2_s"], p["gn2_b"])
+    if "proj" in p:
+        x = _conv(x, p["proj"], stride)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride]
+    return jax.nn.relu(x + h)
+
+
+def forward(params, cfg: ResNetConfig, images):
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = _conv(images, params["stem"])
+    x = jax.nn.relu(_groupnorm(x, params["stem_gn_s"], params["stem_gn_b"]))
+    for stage, blocks in enumerate(params["stages"]):
+        for b, p in enumerate(blocks):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            x = _block_apply(p, x, stride)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head_w"] + params["head_b"]
+
+
+def flops_per_example(cfg: ResNetConfig) -> float:
+    """Analytic forward FLOPs for one input (multiply-adds x2)."""
+    hw = cfg.image_size ** 2
+    widths = [cfg.width * (2 ** i) for i in range(4)]
+    total = 2 * 9 * cfg.in_channels * widths[0] * hw
+    c_in = widths[0]
+    res = hw
+    for stage, n_blocks in enumerate(cfg.stage_blocks):
+        c_out = widths[stage]
+        for b in range(n_blocks):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            res = res // (stride * stride)
+            total += 2 * 9 * c_in * c_out * res
+            total += 2 * 9 * c_out * c_out * res
+            if c_in != c_out:
+                total += 2 * c_in * c_out * res
+            c_in = c_out
+    total += 2 * c_in * cfg.n_classes
+    return float(total)

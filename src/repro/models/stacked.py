@@ -1,0 +1,330 @@
+"""Scan-over-layers execution (production train path).
+
+Unrolling 24-40 transformer blocks makes XLA compile each block separately;
+stacking the parameters of repeating layers and running ``lax.scan`` over
+them compiles ONE cycle body — ~10x faster compiles and much smaller HLO,
+which matters on the 256/512-chip dry-runs.  Heterogeneous block patterns
+(RecurrentGemma's rglru/rglru/attn, Gemma-2's local/global, xLSTM's
+mlstm/slstm) are handled by detecting the minimal repeating cycle: the scan
+body applies one full cycle; layers beyond the last full cycle run unrolled.
+
+``stack_params`` / ``unstack_params`` convert between the per-layer list
+layout (simulator, checkpoints) and the stacked layout (distributed steps).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_mod
+from repro.models.common import rmsnorm, shard_bse
+
+
+# ---------------------------------------------------------------------------
+# cycle detection / (un)stacking
+# ---------------------------------------------------------------------------
+
+def find_cycle(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """Returns (cycle_len, n_full_cycles, n_rest_layers)."""
+    specs = cfg.layers
+    n = len(specs)
+    for p in range(1, n + 1):
+        n_full = n // p
+        if n_full < 2:
+            break
+        if all(specs[i] == specs[i % p] for i in range(n)):
+            return p, n_full, n - n_full * p
+    return n, 1, 0
+
+
+def _stack_list(layers: List[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def stack_params(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    p, n_full, n_rest = find_cycle(cfg)
+    layers = params["layers"]
+    out = {k: v for k, v in params.items() if k != "layers"}
+    if n_full >= 2:
+        out["stacked"] = tuple(
+            _stack_list([layers[c * p + pos] for c in range(n_full)])
+            for pos in range(p))
+        out["rest"] = list(layers[n_full * p:])
+    else:
+        out["stacked"] = ()
+        out["rest"] = list(layers)
+    if cfg.is_encoder_decoder and len(params["encoder"]["layers"]) >= 2:
+        enc = dict(params["encoder"])
+        enc["stacked"] = (_stack_list(enc.pop("layers")),)
+        out["encoder"] = enc
+    return out
+
+
+def unstack_params(params_st: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    p, n_full, _ = find_cycle(cfg)
+    out = {k: v for k, v in params_st.items()
+           if k not in ("stacked", "rest")}
+    layers = []
+    if params_st["stacked"]:
+        per_pos = [
+            [jax.tree.map(lambda x, c=c: x[c], st) for c in range(n_full)]
+            for st in params_st["stacked"]]
+        for c in range(n_full):
+            for pos in range(p):
+                layers.append(per_pos[pos][c])
+    layers.extend(params_st["rest"])
+    out["layers"] = layers
+    if cfg.is_encoder_decoder and "stacked" in params_st.get("encoder", {}):
+        enc = dict(params_st["encoder"])
+        st = enc.pop("stacked")[0]
+        n_enc = cfg.encoder.n_layers
+        enc["layers"] = [jax.tree.map(lambda x, c=c: x[c], st)
+                         for c in range(n_enc)]
+        out["encoder"] = enc
+    return out
+
+
+def init_params_stacked(cfg: ModelConfig, key, dtype=jnp.float32):
+    return stack_params(lm_mod.init_params(cfg, key, dtype), cfg)
+
+
+# ---------------------------------------------------------------------------
+# scanned forward / loss
+# ---------------------------------------------------------------------------
+
+def _apply_blocks(params_st, cfg: ModelConfig, x, positions, *,
+                  enc_out=None, enc_pos=None, remat=True, use_kernel=True):
+    p, n_full, _ = find_cycle(cfg)
+
+    def cycle_body(x, layer_tuple):
+        # barrier: stops XLA from hoisting the bf16->f32 convert of the
+        # whole (n_cycles, B, S, d) residual-save stack out of the backward
+        # loop (which would materialize it at 2x size).
+        x = jax.lax.optimization_barrier(x)
+        aux = jnp.zeros((), jnp.float32)
+        for pos in range(p):
+            x, a = lm_mod._block(layer_tuple[pos], cfg, cfg.layers[pos], x,
+                                 positions, enc_out=enc_out, enc_pos=enc_pos,
+                                 use_kernel=use_kernel)
+            aux = aux + a.astype(jnp.float32)
+        return x, aux
+
+    body = jax.checkpoint(cycle_body) if remat else cycle_body
+    aux_total = jnp.zeros((), jnp.float32)
+    if params_st["stacked"]:
+        def scan_body(x, lt):
+            return body(x, lt)
+        x, auxs = jax.lax.scan(scan_body, x, tuple(params_st["stacked"]))
+        aux_total = aux_total + auxs.sum()
+    for i, lp in enumerate(params_st["rest"]):
+        spec = cfg.layers[n_full * p + i] if params_st["stacked"] \
+            else cfg.layers[i]
+
+        def blk(lp_, x_, spec=spec):
+            return lm_mod._block(lp_, cfg, spec, x_, positions,
+                                 enc_out=enc_out, enc_pos=enc_pos,
+                                 use_kernel=use_kernel)
+
+        if remat:
+            blk = jax.checkpoint(blk)
+        x, a = blk(lp, x)
+        aux_total = aux_total + a.astype(jnp.float32)
+    return x, aux_total
+
+
+def _encode_scanned(params_st, cfg: ModelConfig, frames, *, remat=True,
+                    use_kernel=True):
+    from repro.configs.base import LayerSpec
+    from repro.models import attention as attn_mod
+    from repro.models import ffn as ffn_mod
+
+    enc = params_st["encoder"]
+    x = jnp.einsum("btf,fd->btd", frames, params_st["frontend_proj"])
+    pos = jnp.arange(frames.shape[1])
+    enc_spec = LayerSpec()
+
+    def enc_body(x, lp):
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn_mod.attention(lp["mixer"], cfg, enc_spec, h, pos,
+                                   causal=False, use_kernel=use_kernel)
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + ffn_mod.mlp(lp["ffn"], h2, cfg.act)
+        return x, None
+
+    body = jax.checkpoint(enc_body) if remat else enc_body
+    x, _ = jax.lax.scan(lambda x, lp: body(x, lp), x, enc["stacked"][0])
+    return rmsnorm(x, enc["final_norm"], cfg.norm_eps), pos
+
+
+# ---------------------------------------------------------------------------
+# scanned decode
+# ---------------------------------------------------------------------------
+
+def stack_cache(cache: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    """Convert a per-layer cache list into the scan-stacked layout."""
+    p, n_full, _ = find_cycle(cfg)
+    layers = cache["layers"]
+    out = {k: v for k, v in cache.items() if k != "layers"}
+    if n_full >= 2:
+        out["stacked"] = tuple(
+            _stack_list([layers[c * p + pos] for c in range(n_full)])
+            for pos in range(p))
+        out["rest"] = list(layers[n_full * p:])
+    else:
+        out["stacked"] = ()
+        out["rest"] = list(layers)
+    return out
+
+
+def init_cache_stacked(cfg: ModelConfig, batch: int, max_len: int, **kw):
+    return stack_cache(lm_mod.init_cache(cfg, batch, max_len, **kw), cfg)
+
+
+def _decode_mixer(lp, cfg, spec, h, pos, st):
+    from repro.configs.base import (MIX_ATTN, MIX_MLSTM, MIX_RGLRU)
+    from repro.models import attention as attn_mod
+    from repro.models import recurrent as rec_mod
+    from repro.models import xlstm as xlstm_mod
+
+    if spec.mixer == MIX_ATTN:
+        return attn_mod.decode_attention(lp["mixer"], cfg, spec, h, pos, st)
+    if spec.mixer == MIX_RGLRU:
+        return rec_mod.rglru_decode_step(lp["mixer"], h, st)
+    if spec.mixer == MIX_MLSTM:
+        return xlstm_mod.mlstm_decode_step(lp["mixer"], h, st, cfg)
+    return xlstm_mod.slstm_decode_step(lp["mixer"], h, st, cfg)
+
+
+def _decode_block(lp, cfg, spec, x, pos, st, enc_out, enc_pos):
+    from repro.configs.base import FFN_DENSE, FFN_NONE
+    from repro.models import attention as attn_mod
+    from repro.models import ffn as ffn_mod
+
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    mix, st = _decode_mixer(lp, cfg, spec, h, pos, st)
+    x = x + mix
+    if enc_out is not None:
+        hc = rmsnorm(x, lp["ln_cross"], cfg.norm_eps)
+        pos_q = jnp.asarray(pos, jnp.int32)[None]
+        x = x + attn_mod.attention(lp["cross"], cfg, spec, hc, pos_q,
+                                   causal=False, kv_input=enc_out,
+                                   kv_positions=enc_pos, rope=False,
+                                   use_kernel=False)
+    if spec.ffn != FFN_NONE:
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if spec.ffn == FFN_DENSE:
+            x = x + ffn_mod.mlp(lp["ffn"], h2, cfg.act)
+        else:
+            out, _ = ffn_mod.moe_ffn(lp["ffn"], h2, cfg.moe, cfg.act)
+            x = x + out
+    return x, st
+
+
+def prefill(params_st, cfg: ModelConfig, tokens, cache_st, *, frontend=None,
+            use_kernel=True):
+    """Scan-over-layers prompt pass (bounds liveness to one cycle)."""
+    p, n_full, _ = find_cycle(cfg)
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out, enc_pos = _encode_scanned(params_st, cfg, frontend,
+                                           remat=False, use_kernel=use_kernel)
+        cache_st = dict(cache_st, enc_out=enc_out)
+        x = lm_mod._embed_inputs(params_st, cfg, tokens, None)
+    else:
+        x = lm_mod._embed_inputs(params_st, cfg, tokens, frontend)
+    positions = jnp.arange(x.shape[1])
+
+    new_stacked = []
+    if params_st["stacked"]:
+        def body(x, inp):
+            lts, sts = inp
+            new_sts = []
+            for i in range(p):
+                x, st = lm_mod._prefill_block(
+                    lts[i], cfg, cfg.layers[i], x, positions, sts[i],
+                    enc_out=enc_out, enc_pos=enc_pos, use_kernel=use_kernel)
+                new_sts.append(st)
+            return x, tuple(new_sts)
+
+        x, new_st = jax.lax.scan(
+            body, x, (tuple(params_st["stacked"]),
+                      tuple(cache_st["stacked"])))
+        new_stacked = list(new_st)
+    new_rest = []
+    for i, (lp, st) in enumerate(zip(params_st["rest"], cache_st["rest"])):
+        spec = cfg.layers[n_full * p + i] if params_st["stacked"] \
+            else cfg.layers[i]
+        x, st = lm_mod._prefill_block(lp, cfg, spec, x, positions, st,
+                                      enc_out=enc_out, enc_pos=enc_pos,
+                                      use_kernel=use_kernel)
+        new_rest.append(st)
+    logits = lm_mod._unembed(params_st, cfg, x[:, -1:])
+    return logits[:, 0], dict(cache_st, stacked=tuple(new_stacked),
+                              rest=new_rest)
+
+
+def decode_step(params_st, cfg: ModelConfig, token, pos, cache_st):
+    """Scan-over-layers decode: one token. Mirrors lm.decode_step."""
+    p, n_full, _ = find_cycle(cfg)
+    x = params_st["embed"][token][:, None] * jnp.sqrt(
+        float(cfg.d_model)).astype(params_st["embed"].dtype)
+    enc_out = cache_st.get("enc_out")
+    enc_pos = (jnp.arange(enc_out.shape[1]) if enc_out is not None else None)
+
+    new_stacked = []
+    if params_st["stacked"]:
+        def body(x, inp):
+            lts, sts = inp
+            new_sts = []
+            for i in range(p):
+                x, st = _decode_block(lts[i], cfg, cfg.layers[i], x, pos,
+                                      sts[i], enc_out, enc_pos)
+                new_sts.append(st)
+            return x, tuple(new_sts)
+
+        x, new_st = jax.lax.scan(
+            body, x, (tuple(params_st["stacked"]), tuple(cache_st["stacked"])))
+        new_stacked = list(new_st)
+    new_rest = []
+    for i, (lp, st) in enumerate(zip(params_st["rest"], cache_st["rest"])):
+        spec = cfg.layers[n_full * p + i] if params_st["stacked"] \
+            else cfg.layers[i]
+        x, st = _decode_block(lp, cfg, spec, x, pos, st, enc_out, enc_pos)
+        new_rest.append(st)
+    logits = lm_mod._unembed(params_st, cfg, x)
+    new_cache = dict(cache_st, stacked=tuple(new_stacked), rest=new_rest)
+    return logits[:, 0], new_cache
+
+
+def loss_fn(params_st, cfg: ModelConfig, batch, *, remat=True,
+            use_kernel=True):
+    """Same contract as lm.loss_fn, over stacked params."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    frontend = batch.get("frontend")
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out, enc_pos = _encode_scanned(params_st, cfg, frontend,
+                                           remat=remat, use_kernel=use_kernel)
+        x = lm_mod._embed_inputs(params_st, cfg, tokens, None)
+    else:
+        x = lm_mod._embed_inputs(params_st, cfg, tokens, frontend)
+    positions = jnp.arange(x.shape[1])
+    x, aux_total = _apply_blocks(params_st, cfg, x, positions,
+                                 enc_out=enc_out, enc_pos=enc_pos,
+                                 remat=remat, use_kernel=use_kernel)
+    x = shard_bse(x)
+    if x.shape[1] != labels.shape[1]:
+        x = x[:, x.shape[1] - labels.shape[1]:]
+    weight = batch.get("weight")
+    mask = labels >= 0
+    tok_w = mask.astype(jnp.float32)
+    if weight is not None:
+        tok_w = tok_w * weight[:, None].astype(jnp.float32)
+    ce, acc = lm_mod.chunked_ce(params_st, cfg, x, labels, tok_w)
+    loss = ce + aux_total
+    return loss, {"ce": ce, "aux": aux_total, "acc": acc}

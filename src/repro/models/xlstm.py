@@ -1,0 +1,316 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections), per arXiv:2405.04517.
+
+Both use exponential gating with the max-stabilizer m_t.  Training/prefill
+runs a ``lax.scan`` over time (one traced step -> compact HLO); decode carries
+the recurrent state explicitly.  State is O(1) in sequence length, which is
+what makes the ssm family native for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.sharding.ctx import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = int(d * cfg.xlstm_proj_factor)
+    h = cfg.n_heads
+    hd = w // h
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, w), dtype),
+        "w_z": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (4, w), dtype, fan_in=4),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_q": dense_init(ks[3], (h, hd, hd), dtype, fan_in=hd),
+        "w_k": dense_init(ks[4], (h, hd, hd), dtype, fan_in=hd),
+        "w_v": dense_init(ks[5], (h, hd, hd), dtype, fan_in=hd),
+        "w_i": dense_init(ks[6], (w, h), dtype),
+        "w_f": dense_init(ks[7], (w, h), dtype),
+        "b_i": jnp.zeros((h,), dtype),
+        "b_f": jnp.full((h,), 3.0, dtype),  # forget-gate bias: remember early
+        "w_down": dense_init(jax.random.fold_in(key, 99), (w, d), dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd)
+    n: jax.Array   # (B, H, hd)
+    m: jax.Array   # (B, H)
+    conv_tail: jax.Array  # (B, 3, W)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    w = int(cfg.d_model * cfg.xlstm_proj_factor)
+    h = cfg.n_heads
+    hd = w // h
+    return MLSTMState(
+        C=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -jnp.inf, jnp.float32),
+        conv_tail=jnp.zeros((batch, 3, w), dtype),
+    )
+
+
+def _causal_conv(x, conv_w, conv_b):
+    cw = conv_w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shifted = x if i == 0 else jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * conv_w[cw - 1 - i]
+    return out + conv_b
+
+
+def _mlstm_qkvif(params, x, h, hd):
+    """Shared projections. x: (B,S,d) -> q,k,v:(B,S,H,hd); i,f:(B,S,H)."""
+    xu = jnp.einsum("bsd,dw->bsw", x, params["w_up"])
+    xu = logical_constraint(xu, ("batch", None, "ff"))
+    xc = jax.nn.silu(_causal_conv(xu, params["conv_w"], params["conv_b"]))
+    b, s, w = xc.shape
+    xh = xc.reshape(b, s, h, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["w_q"])
+    k = jnp.einsum("bshd,hde->bshe", xh, params["w_k"]) * (hd ** -0.5)
+    v = jnp.einsum("bshd,hde->bshe", xh, params["w_v"])
+    i_pre = jnp.einsum("bsw,wh->bsh", xc, params["w_i"]) + params["b_i"]
+    f_pre = jnp.einsum("bsw,wh->bsh", xc, params["w_f"]) + params["b_f"]
+    z = jax.nn.silu(jnp.einsum("bsd,dw->bsw", x, params["w_z"]))
+    return q, k, v, i_pre.astype(jnp.float32), f_pre.astype(jnp.float32), z
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = inp           # (B,H,hd) x3, (B,H) x2
+    logf = -jax.nn.softplus(-f_pre)       # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    hq = jnp.einsum("bhde,bhe->bhd", C, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))
+    h_t = hq / denom[..., None]
+    return (C, n, m_new), h_t
+
+
+DEFAULT_MLSTM_CHUNK = 128
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, *, chunk: int = DEFAULT_MLSTM_CHUNK,
+                    state=None):
+    """Chunkwise-parallel stabilized mLSTM (the TPU-native training form).
+
+    q,k,v: (B,H,S,hd) f32; i_pre,f_pre: (B,H,S) f32.
+    Cross-chunk: lax.scan over (C, n, m) state; within-chunk: quadratic
+    (L x L) decay-masked attention — residual memory is O(S/L) states
+    instead of O(S), which is what makes mLSTM training feasible.
+    Returns (h (B,H,S,hd), (C, n, m) final state)."""
+    bsz, nh, s, hd = q.shape
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    logf = -jax.nn.softplus(-f_pre)                    # log sigmoid
+
+    def to_chunks(x):
+        return x.reshape(bsz, nh, nc, l, *x.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qs, ks_, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    is_ = to_chunks(i_pre)
+    lfs = to_chunks(logf)
+
+    if state is None:
+        c0 = jnp.zeros((bsz, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((bsz, nh, hd), jnp.float32)
+        m0 = jnp.full((bsz, nh), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        c_st, n_st, m_st = carry                       # stabilized C, n; true m
+        qc, kc, vc, ic, lfc = inp                      # (B,H,L,...)
+        b_cum = jnp.cumsum(lfc, axis=-1)               # inclusive (B,H,L)
+        u = ic - b_cum                                 # (B,H,L)
+        m_run = jnp.maximum(m_st[..., None],
+                            jax.lax.cummax(u, axis=2)) # M_t (B,H,L)
+        # intra-chunk decay-masked scores
+        w_decay = jnp.exp(u[:, :, None, :] - m_run[..., None])  # (B,H,Lq,Ls)
+        tri = jnp.tril(jnp.ones((l, l), bool))
+        w_decay = jnp.where(tri, w_decay, 0.0)
+        sc = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * w_decay
+        num_intra = jnp.einsum("bhts,bhsd->bhtd", sc, vc)
+        den_intra = sc.sum(axis=-1)
+        # inter-chunk contribution
+        scale_in = jnp.exp(m_st[..., None] - m_run)    # (B,H,L)
+        num_inter = jnp.einsum("bhte,bhde->bhtd", qc, c_st) * scale_in[..., None]
+        den_inter = jnp.einsum("bhtd,bhd->bht", qc, n_st) * scale_in
+        m_t = b_cum + m_run
+        denom = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h_c = (num_intra + num_inter) / denom[..., None]
+        # state update to end of chunk
+        b_tot = b_cum[..., -1:]                        # (B,H,1)
+        m_end = jnp.maximum(m_st, u.max(axis=-1))      # M_L'
+        w_end = jnp.exp(u - m_end[..., None])          # (B,H,L)
+        c_new = (jnp.exp(m_st - m_end)[..., None, None] * c_st
+                 + jnp.einsum("bhs,bhsd,bhse->bhde", w_end, vc, kc))
+        n_new = (jnp.exp(m_st - m_end)[..., None] * n_st
+                 + jnp.einsum("bhs,bhsd->bhd", w_end, kc))
+        m_new = b_tot[..., 0] + m_end
+        return (c_new, n_new, m_new), h_c
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_step, (c0, n0, m0), (qs, ks_, vs, is_, lfs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(bsz, nh, s, hd)
+    return h, (c_f, n_f, m_f)
+
+
+def mlstm_block(params, x, cfg: ModelConfig):
+    """Full-sequence mLSTM block (chunkwise-parallel). x: (B,S,d)."""
+    h = cfg.n_heads
+    w = int(cfg.d_model * cfg.xlstm_proj_factor)
+    hd = w // h
+    q, k, v, i_pre, f_pre, z = _mlstm_qkvif(params, x, h, hd)
+    b, s = x.shape[:2]
+    hs, _ = mlstm_chunkwise(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32),
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        i_pre.transpose(0, 2, 1), f_pre.transpose(0, 2, 1))
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, s, w).astype(x.dtype)
+    out = hs * z
+    return jnp.einsum("bsw,wd->bsd", out, params["w_down"])
+
+
+def mlstm_decode_step(params, x, state: MLSTMState, cfg: ModelConfig):
+    """x: (B,1,d)."""
+    h = cfg.n_heads
+    w = int(cfg.d_model * cfg.xlstm_proj_factor)
+    hd = w // h
+    xu = jnp.einsum("bsd,dw->bsw", x, params["w_up"])       # (B,1,W)
+    conv_in = jnp.concatenate([state.conv_tail, xu], axis=1)
+    xc = jnp.einsum("bcw,cw->bw", conv_in[:, -4:], params["conv_w"])
+    xc = jax.nn.silu(xc + params["conv_b"])                  # (B,W)
+    xh = xc.reshape(-1, h, hd)
+    q = jnp.einsum("bhd,hde->bhe", xh, params["w_q"])
+    k = jnp.einsum("bhd,hde->bhe", xh, params["w_k"]) * (hd ** -0.5)
+    v = jnp.einsum("bhd,hde->bhe", xh, params["w_v"])
+    i_pre = (xc @ params["w_i"] + params["b_i"]).astype(jnp.float32)
+    f_pre = (xc @ params["w_f"] + params["b_f"]).astype(jnp.float32)
+    (C, n, m), h_t = _mlstm_step(
+        (state.C, state.n, state.m),
+        (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+         i_pre, f_pre))
+    z = jax.nn.silu(jnp.einsum("bsd,dw->bsw", x, params["w_z"]))[:, 0]
+    out = (h_t.reshape(-1, w).astype(x.dtype) * z)[:, None]
+    y = jnp.einsum("bsw,wd->bsd", out, params["w_down"])
+    return y, MLSTMState(C=C, n=n, m=m, conv_tail=conv_in[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 11)
+    p = {"w_down": dense_init(ks[9], (d, d), dtype),
+         "w_z_gate": dense_init(ks[10], (d, d), dtype)}
+    for idx, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = dense_init(ks[idx], (d, d), dtype)
+        # recurrent connection: block-diagonal per head
+        p[f"r_{gate}"] = dense_init(ks[idx + 4], (h, hd, hd), dtype, fan_in=hd)
+        p[f"b_{gate}"] = (jnp.full((d,), 3.0, dtype) if gate == "f"
+                          else jnp.zeros((d,), dtype))
+    return p
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    m: jax.Array   # (B, H)
+    h: jax.Array   # (B, d)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, cfg.n_heads), -jnp.inf, jnp.float32),
+        h=jnp.zeros((batch, d), jnp.float32),
+    )
+
+
+def _slstm_step(params, n_heads, carry, x_t):
+    """x_t: (B,d) pre-projected gate inputs dict."""
+    c, n, m, h_prev = carry
+    b, d = c.shape
+    hd = d // n_heads
+    hh = h_prev.reshape(b, n_heads, hd)
+
+    def rec(gate):
+        r = jnp.einsum("bhd,hde->bhe", hh,
+                       params[f"r_{gate}"].astype(jnp.float32))
+        return x_t[gate] + r.reshape(b, d)
+
+    z = jnp.tanh(rec("z"))
+    i_pre = rec("i").reshape(b, n_heads, hd)
+    f_pre = rec("f").reshape(b, n_heads, hd)
+    o = jax.nn.sigmoid(rec("o"))
+    logf = -jax.nn.softplus(-f_pre)
+    # head-wise stabilizer (max over head dims)
+    m_new = jnp.maximum((logf + m[..., None]).max(-1), i_pre.max(-1))
+    i_g = jnp.exp(i_pre - m_new[..., None]).reshape(b, d)
+    f_g = jnp.exp(logf + m[..., None] - m_new[..., None]).reshape(b, d)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def _slstm_gate_inputs(params, x):
+    return {g: (jnp.einsum("bsd,de->bse", x, params[f"w_{g}"])
+                + params[f"b_{g}"]).astype(jnp.float32)
+            for g in ("z", "i", "f", "o")}
+
+
+def slstm_block(params, x, cfg: ModelConfig):
+    """Full-sequence sLSTM block (strictly sequential). x: (B,S,d)."""
+    b, s, d = x.shape
+    gates = _slstm_gate_inputs(params, x)
+    xs = {g: gates[g].transpose(1, 0, 2) for g in gates}
+    st0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+           jnp.full((b, cfg.n_heads), -jnp.inf, jnp.float32),
+           jnp.zeros((b, d), jnp.float32))
+    step = lambda carry, x_t: _slstm_step(params, cfg.n_heads, carry, x_t)
+    _, hs = jax.lax.scan(step, st0, xs)
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)        # (B,S,d)
+    out = hs * jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_z_gate"]))
+    return jnp.einsum("bsd,de->bse", out, params["w_down"])
+
+
+def slstm_decode_step(params, x, state: SLSTMState, cfg: ModelConfig):
+    """x: (B,1,d)."""
+    gates = _slstm_gate_inputs(params, x)
+    x_t = {g: gates[g][:, 0] for g in gates}
+    carry = (state.c, state.n, state.m, state.h)
+    (c, n, m, h), h_out = _slstm_step(params, cfg.n_heads, carry, x_t)
+    out = (h_out.astype(x.dtype)
+           * jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_z_gate"])[:, 0]))
+    y = jnp.einsum("bsd,de->bse", out[:, None], params["w_down"])
+    return y, SLSTMState(c=c, n=n, m=m, h=h)

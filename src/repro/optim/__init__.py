@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adagrad, adam, sgd  # noqa: F401

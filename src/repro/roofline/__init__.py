@@ -1,0 +1,4 @@
+from repro.roofline.analysis import RooflineReport, analyze_compiled
+from repro.roofline.hardware import TPU_V5E
+
+__all__ = ["RooflineReport", "analyze_compiled", "TPU_V5E"]

@@ -1,0 +1,143 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links * link_bw)
+
+``cost_analysis()`` provides FLOPs and bytes of the *per-device* SPMD
+program.  Collective bytes are NOT in cost_analysis, so we parse the
+compiled HLO text and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+weighting all-reduce x2 (ring = reduce-scatter + all-gather).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.roofline.hardware import Chip, TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# moved-bytes multiplier per op (ring algorithms, large-message asymptote)
+_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string like 'bf16[16,1024]' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+    re.MULTILINE)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum moved bytes per collective kind from (post-SPMD) HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        if m.group(0).rstrip().endswith("-done("):
+            continue  # avoid double counting start/done pairs
+        out[op] += _shape_bytes(type_str) * _MULT[op]
+        counts[op] += 1
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device quantities
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float] = field(default_factory=dict)
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    # usefulness
+    model_flops: float = 0.0           # 6 * N(active) * D tokens (global)
+    useful_ratio: float = 0.0          # model_flops / (flops * n_devices)
+    peak_memory_bytes: float = 0.0     # per-device from memory_analysis
+    notes: str = ""
+
+    def finalize(self, chip: Chip = TPU_V5E):
+        self.t_compute = self.flops / chip.peak_flops_bf16
+        self.t_memory = self.hbm_bytes / chip.hbm_bandwidth
+        self.t_collective = self.coll_bytes / (
+            chip.ici_links_per_chip * chip.ici_link_bandwidth)
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.model_flops and self.flops:
+            self.useful_ratio = self.model_flops / (self.flops * self.n_devices)
+        return self
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:9s} "
+                f"comp={self.t_compute*1e3:9.3f}ms "
+                f"mem={self.t_memory*1e3:9.3f}ms "
+                f"coll={self.t_collective*1e3:9.3f}ms "
+                f"-> {self.bottleneck:10s} useful={self.useful_ratio:6.1%} "
+                f"peakmem={self.peak_memory_bytes/2**30:6.2f}GiB")
+
+    def to_json(self) -> str:
+        d = dict(self.__dict__)
+        return json.dumps(d, indent=1, default=float)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh: str,
+                     n_devices: int, model_flops: float = 0.0,
+                     chip: Chip = TPU_V5E,
+                     hlo_text: Optional[str] = None) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    counts = coll.pop("_counts", {})
+    total_coll = float(sum(coll.values()))
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    try:
+        peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    except Exception:
+        pass
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, n_devices=n_devices,
+        flops=flops, hbm_bytes=hbm, coll_bytes=total_coll,
+        coll_breakdown={**coll, "counts": counts},
+        model_flops=model_flops, peak_memory_bytes=peak)
+    return rep.finalize(chip)

@@ -1,0 +1,25 @@
+"""Target hardware constants (TPU v5e)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bandwidth: float       # B/s per chip
+    ici_link_bandwidth: float  # B/s per link
+    ici_links_per_chip: int    # usable links on the 2D torus
+    hbm_bytes: float
+
+
+TPU_V5E = Chip(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links_per_chip=2,      # effective concurrent links for ring collectives
+    hbm_bytes=16e9,
+)

@@ -1,0 +1,10 @@
+from repro.sharding.ctx import (activation_rules, logical_constraint,
+                                current_mesh, param_sharding_rules)
+from repro.sharding.specs import (param_specs, input_specs_sharding,
+                                  LOGICAL_RULES)
+
+__all__ = [
+    "activation_rules", "logical_constraint", "current_mesh",
+    "param_sharding_rules", "param_specs", "input_specs_sharding",
+    "LOGICAL_RULES",
+]

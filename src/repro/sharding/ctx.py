@@ -1,0 +1,79 @@
+"""Logical sharding context.
+
+Models are written against *logical* axis names ("batch", "seq", "embed",
+"heads", "kv", "expert", "ff").  The distribution layer activates a mesh and a
+logical->mesh translation; outside any context ``logical_constraint`` is the
+identity, so the same model code runs in single-device tests and in the
+256/512-chip dry-run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _ctx() -> Optional[dict]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules: Dict[str, MeshAxes]):
+    """Activate logical->mesh translation for ``logical_constraint`` calls."""
+    prev = _ctx()
+    _state.ctx = {"mesh": mesh, "rules": dict(rules)}
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _ctx()
+    return None if ctx is None else ctx["mesh"]
+
+
+def _translate(rules: Dict[str, MeshAxes], names: Sequence[Optional[str]],
+               used: set) -> P:
+    axes = []
+    for name in names:
+        mesh_ax = rules.get(name) if name is not None else None
+        if mesh_ax is None:
+            axes.append(None)
+            continue
+        # never assign the same mesh axis to two tensor dims
+        if isinstance(mesh_ax, tuple):
+            mesh_ax = tuple(a for a in mesh_ax if a not in used)
+            mesh_ax = mesh_ax if mesh_ax else None
+        elif mesh_ax in used:
+            mesh_ax = None
+        if mesh_ax is not None:
+            for a in (mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)):
+                used.add(a)
+        axes.append(mesh_ax)
+    return P(*axes)
+
+
+def logical_constraint(x, names: Sequence[Optional[str]]):
+    """Constrain ``x`` (rank == len(names)) to the active logical sharding.
+
+    No-op when no context is active (unit tests, single device)."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    spec = _translate(ctx["rules"], names, set())
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], spec))
+
+
+def param_sharding_rules(rules: Dict[str, MeshAxes], names: Sequence[Optional[str]]) -> P:
+    """Translate logical names to a PartitionSpec (for in_shardings)."""
+    return _translate(dict(rules), names, set())

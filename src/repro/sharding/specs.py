@@ -1,0 +1,258 @@
+"""Partition rules: logical tensor dims -> mesh axes.
+
+Strategy (MaxText-style FSDP + TP, adapted for federated rounds):
+  * "residual" (d_model-like param dims)  -> "data"  (FSDP; the round-start
+    all-gather IS the FL model download)
+  * "ff" / "heads" / "expert" / "vocab"   -> "model" (tensor / expert parallel)
+  * "batch" activations                   -> ("pod", "data")
+  * pods replicate params: each pod is an FL silo; the cross-pod weighted
+    psum in fl_train_step is the FL aggregation (upload).
+
+Parameter tensors are matched by their *name* (the last pytree dict key),
+which the model zoo keeps globally consistent.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical dim names per parameter tensor name (by rank-matched tuple)
+_PARAM_LOGICAL: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / heads
+    "embed": ("vocab", "residual"),
+    "lm_head": ("residual", "vocab"),
+    "frontend_proj": (None, "residual"),
+    # attention
+    "wq": ("residual", "heads", None),
+    "wk": ("residual", "kv_heads", None),
+    "wv": ("residual", "kv_heads", None),
+    "wo": ("heads", None, "residual"),
+    "bq": ("heads", None),
+    "bk": ("kv_heads", None),
+    "bv": ("kv_heads", None),
+    # dense mlp
+    "w_gate": ("residual", "ff"),
+    "w_up": ("residual", "ff"),
+    "w_down": ("ff", "residual"),
+    # moe (rank-3 variants of the same names handled by rank dispatch below)
+    "router": ("residual", "expert"),
+    # rglru
+    "w_in": ("residual", "ff"),
+    "w_gate_branch": ("residual", "ff"),
+    "conv_w": (None, "ff"),
+    "w_out": ("ff", "residual"),
+    # xlstm
+    "w_z": ("residual", "ff"),
+    "w_q": ("heads", None, None),
+    "w_k": ("heads", None, None),
+    "w_v": ("heads", None, None),
+    "w_i": ("ff", None),
+    "w_f": ("ff", None),
+    "w_z_gate": ("residual", "residual_out"),
+    "r_z": ("heads", None, None),
+    "r_i": ("heads", None, None),
+    "r_f": ("heads", None, None),
+    "r_o": ("heads", None, None),
+    "w_o": ("residual", "residual_out"),
+    # resnet / misc
+    "head_w": (None, None),
+}
+
+_MOE_LOGICAL = {  # rank-3 moe expert weights (distinct names: we_*)
+    "we_gate": ("expert", "residual", "moe_inner"),
+    "we_up": ("expert", "residual", "moe_inner"),
+    "we_down": ("expert", "moe_inner", "residual"),
+}
+
+# logical -> mesh translation tables ---------------------------------------
+
+def train_rules(multi_pod: bool) -> Dict[str, Any]:
+    return {
+        # params
+        "residual": "data",
+        "residual_out": None,
+        "ff": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "vocab": "model",
+        # activations
+        "batch": ("pod", "data") if multi_pod else "data",
+        "seq": "model",   # sequence parallelism for the residual stream
+        "embed": None,
+        # expert-buffer capacity / flat dispatch dims follow the batch axes
+        "moe_capacity": ("pod", "data") if multi_pod else "data",
+        "moe_tokens": ("pod", "data") if multi_pod else "data",
+        "moe_inner": None,   # expert d_ff dim: sharded only at decode (H2b)
+    }
+
+
+def decode_rules(multi_pod: bool, *, shard_seq: bool = False) -> Dict[str, Any]:
+    r = train_rules(multi_pod)
+    # weights stay 2D-sharded ("data" x "model") at serve time as well:
+    # 100B+ checkpoints exceed HBM under model-axis-only sharding.
+    if shard_seq:                 # long-context: batch too small, shard cache seq
+        r["batch"] = None
+        r["cache_seq"] = (("pod", "data", "model") if multi_pod
+                          else ("data", "model"))
+    else:
+        # KV cache is sequence-sharded over the model axis (kv-head counts
+        # rarely divide 16; seq always does).  Attention over the sharded
+        # cache becomes a partial-softmax + psum, which GSPMD derives.
+        r["cache_seq"] = "model"
+    r["seq"] = None               # no sequence parallelism at decode
+    return r
+
+
+LOGICAL_RULES = train_rules(False)
+
+
+# ---------------------------------------------------------------------------
+# param / cache / input specs
+# ---------------------------------------------------------------------------
+
+def _translate(logical: Tuple[Optional[str], ...], rules: Dict[str, Any]) -> P:
+    used: set = set()
+    axes = []
+    for name in logical:
+        ax = rules.get(name) if name else None
+        if isinstance(ax, tuple):
+            ax = tuple(a for a in ax if a not in used) or None
+        elif ax in used:
+            ax = None
+        if ax is not None:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        axes.append(ax)
+    return P(*axes)
+
+
+def _spec_for_param(path, leaf, rules: Dict[str, Any]) -> P:
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+    rank = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    logical = None
+    stacked = False  # scan-over-layers adds a leading (n_cycles) dim
+    if name in _MOE_LOGICAL and rank in (3, 4):
+        logical = _MOE_LOGICAL[name]
+        stacked = rank == 4
+    elif name in _PARAM_LOGICAL:
+        want = len(_PARAM_LOGICAL[name])
+        if rank == want:
+            logical = _PARAM_LOGICAL[name]
+        elif rank == want + 1:
+            logical = _PARAM_LOGICAL[name]
+            stacked = True
+    if logical is None:
+        return P()  # replicate (norms, biases, small tensors)
+    if stacked:
+        logical = (None,) + tuple(logical)
+    return _translate(logical, rules)
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide the tensor dim (explicit jit
+    argument shardings require exact divisibility; replication is the safe
+    fallback for small dims like 4 kv heads on a 16-way model axis)."""
+    axes = []
+    for d, ax in enumerate(spec):
+        if ax is None:
+            axes.append(None)
+            continue
+        ax_tuple = ax if isinstance(ax, tuple) else (ax,)
+        keep = []
+        prod = 1
+        for a in ax_tuple:
+            size = mesh.shape[a]
+            if shape[d] % (prod * size) == 0:
+                keep.append(a)
+                prod *= size
+        axes.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    # pad trailing dims
+    axes += [None] * (len(shape) - len(axes))
+    return P(*axes[:len(shape)])
+
+
+def param_specs(params, rules: Dict[str, Any]):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_param(path, leaf, rules), params)
+
+
+def param_shardings(params, mesh: Mesh, rules: Dict[str, Any]):
+    specs = param_specs(params, rules)
+    return jax.tree.map(
+        lambda leaf, spec: NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh)),
+        params, specs)
+
+
+def cache_specs(cache, rules: Dict[str, Any]):
+    """Specs for a decode cache pytree (KVCache / recurrent states)."""
+    batch_ax = rules.get("batch")
+    seq_ax = rules.get("cache_seq")
+    model_ax = rules.get("heads")
+
+    def base_spec(field, rank):
+        if field in ("k", "v") and rank == 4:      # (B, C, Kh, D)
+            return P(batch_ax, seq_ax,
+                     model_ax if seq_ax is None else None, None)
+        if field == "slot_pos" and rank == 1:
+            return P(seq_ax if seq_ax is not None else None)
+        if field == "enc_out" and rank == 3:
+            return P(batch_ax, None, None)
+        if field == "h" and rank == 2:             # rglru (B, W)
+            return P(batch_ax, model_ax)
+        if field == "conv_tail" and rank == 3:
+            return P(batch_ax, None, model_ax)
+        if field == "C" and rank == 4:             # mlstm (B, H, hd, hd)
+            return P(batch_ax, model_ax, None, None)
+        if field == "n" and rank == 3:
+            return P(batch_ax, model_ax, None)
+        if field == "m" and rank == 2:
+            return P(batch_ax, model_ax)
+        if rank == 2:                              # slstm c/n/h (B, d)
+            return P(batch_ax, model_ax)
+        return None
+
+    def spec(path, leaf):
+        rank = leaf.ndim
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        # KVCache fields are namedtuple attrs -> GetAttrKey
+        attr = None
+        for entry in reversed(path):
+            if hasattr(entry, "name"):
+                attr = entry.name
+                break
+        field = attr or name
+        s = base_spec(field, rank)
+        if s is not None:
+            return s
+        s = base_spec(field, rank - 1)  # scan-stacked (+1 leading layer dim)
+        if s is not None:
+            return P(*((None,) + tuple(s)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def input_specs_sharding(kind: str, rules: Dict[str, Any]):
+    """Specs for batch inputs by input name."""
+    batch_ax = rules.get("batch")
+
+    def spec(name: str, rank: int) -> P:
+        if rank == 0:
+            return P()
+        axes = [batch_ax] + [None] * (rank - 1)
+        return P(*axes)
+
+    return spec

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single host CPU device (the 512-device override is ONLY
+# set inside launch/dryrun.py, never globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

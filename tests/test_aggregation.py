@@ -1,0 +1,76 @@
+"""Aggregation algorithms: FedAvg/FedNova/adaptive server optimizers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federated.aggregation import (ClientUpdate, FedAdagrad, FedAvg,
+                                         FedNova, get_aggregator)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def params_like(scale):
+    return {"w": jnp.full((8, 4), scale), "b": jnp.full((4,), scale / 2)}
+
+
+def test_fedavg_weighted_mean():
+    updates = [
+        ClientUpdate(params_like(1.0), n_examples=10, n_steps=2),
+        ClientUpdate(params_like(3.0), n_examples=30, n_steps=2),
+    ]
+    out = FedAvg()(params_like(0.0), updates)
+    # weighted mean: (10*1 + 30*3)/40 = 2.5
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]), 1.25, rtol=1e-6)
+
+
+def test_fednova_equals_fedavg_when_steps_equal():
+    g = params_like(0.0)
+    updates = [
+        ClientUpdate(params_like(1.0), n_examples=10, n_steps=5),
+        ClientUpdate(params_like(3.0), n_examples=30, n_steps=5),
+    ]
+    avg = FedAvg()(g, updates)
+    nova = FedNova()(g, updates)
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(nova["w"]),
+                               rtol=1e-5)
+
+
+def test_fednova_normalizes_heterogeneous_steps():
+    g = params_like(0.0)
+    # same delta magnitude but one client took 10x the steps: FedNova must
+    # down-weight its per-step contribution
+    updates = [
+        ClientUpdate(params_like(2.0), n_examples=10, n_steps=1),
+        ClientUpdate(params_like(2.0), n_examples=10, n_steps=10),
+    ]
+    nova = FedNova()(g, updates)
+    avg = FedAvg()(g, updates)
+    assert float(nova["w"].mean()) != pytest.approx(float(avg["w"].mean()))
+
+
+def test_adaptive_aggregators_move_toward_clients():
+    for name in ("fedadagrad", "fedadam", "fedyogi"):
+        agg = get_aggregator(name, lr=0.1)
+        g = params_like(0.0)
+        updates = [ClientUpdate(params_like(1.0), 10, 1)]
+        out = agg(g, updates)
+        assert float(out["w"].mean()) > 0, name
+        out2 = agg(out, [ClientUpdate(params_like(1.0), 10, 1)])
+        assert float(out2["w"].mean()) > float(out["w"].mean()), name
+
+
+def test_aggregation_via_kernel_matches_tree_math():
+    """The flattened fed_aggregate path must equal per-leaf arithmetic."""
+    ks = jax.random.split(KEY, 4)
+    mk = lambda k: {"a": jax.random.normal(k, (16,)),
+                    "b": jax.random.normal(k, (3, 5))}
+    updates = [ClientUpdate(mk(ks[0]), 5, 1), ClientUpdate(mk(ks[1]), 15, 1)]
+    out = FedAvg()(mk(ks[2]), updates)
+    w = np.array([5 / 20, 15 / 20])
+    for leaf in ("a", "b"):
+        want = w[0] * updates[0].params[leaf] + w[1] * updates[1].params[leaf]
+        np.testing.assert_allclose(np.asarray(out[leaf]),
+                                   np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,71 @@
+"""Property tests for the system-overhead model (paper eqs. 2-5)."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costs import CostModel, SystemCost
+from repro.core.preferences import Preference
+
+
+@given(
+    sizes=st.lists(st.integers(1, 316), min_size=1, max_size=50),
+    e=st.floats(0.5, 20),
+    flops=st.floats(1e6, 1e8),
+    params=st.floats(1e4, 1e6),
+)
+@settings(max_examples=50, deadline=None)
+def test_round_cost_formulas(sizes, e, flops, params):
+    cm = CostModel(flops_per_example=flops, param_count=params)
+    r = cm.add_round(sizes, e)
+    c1 = flops * cm.backward_multiplier
+    assert math.isclose(r.comp_t, c1 * e * max(sizes), rel_tol=1e-9)
+    assert math.isclose(r.comp_l, c1 * e * sum(sizes), rel_tol=1e-9)
+    assert math.isclose(r.trans_t, params, rel_tol=1e-9)
+    assert math.isclose(r.trans_l, params * len(sizes), rel_tol=1e-9)
+
+
+@given(rounds=st.lists(
+    st.tuples(st.lists(st.integers(1, 300), min_size=1, max_size=30),
+              st.floats(0.5, 10)),
+    min_size=1, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_accumulation_is_additive(rounds):
+    cm = CostModel(flops_per_example=1e6, param_count=1e5)
+    per_round = [cm.add_round(s, e) for s, e in rounds]
+    for name in ("comp_t", "trans_t", "comp_l", "trans_l"):
+        assert math.isclose(
+            getattr(cm.total, name),
+            sum(getattr(r, name) for r in per_round), rel_tol=1e-9)
+    assert cm.rounds == len(rounds)
+
+
+def test_comparison_function_eq6():
+    """I(S1,S2) < 0 iff S2 strictly dominates on the weighted terms."""
+    base = SystemCost(100, 100, 100, 100)
+    better = SystemCost(50, 100, 100, 100)
+    pref = Preference(1, 0, 0, 0)
+    assert better.weighted_relative_to(base, pref) < 0
+    worse = SystemCost(150, 1, 1, 1)  # wins on unweighted terms only
+    assert worse.weighted_relative_to(base, pref) > 0
+    # equal-weight: symmetric trade cancels exactly
+    pref2 = Preference(0.5, 0.5, 0.0, 0.0)
+    mixed = SystemCost(150, 50, 100, 100)
+    assert abs(mixed.weighted_relative_to(base, pref2)) < 1e-12
+
+
+def test_monotonicity_in_m_and_e():
+    """Structural Table-3 signs: with fixed R, CompL/TransL rise with M,
+    CompT/CompL rise with E."""
+    cm1 = CostModel(1e6, 1e5)
+    cm2 = CostModel(1e6, 1e5)
+    r_small = cm1.add_round([10] * 5, 1.0)    # M=5
+    r_large = cm2.add_round([10] * 20, 1.0)   # M=20
+    assert r_large.comp_l > r_small.comp_l
+    assert r_large.trans_l > r_small.trans_l
+    assert r_large.trans_t == r_small.trans_t  # per-round TransT constant
+    cm3 = CostModel(1e6, 1e5)
+    r_more_e = cm3.add_round([10] * 5, 4.0)
+    assert r_more_e.comp_t > r_small.comp_t
+    assert r_more_e.comp_l > r_small.comp_l
+    assert r_more_e.trans_l == r_small.trans_l

@@ -1,0 +1,79 @@
+"""The synthetic federated data must reproduce the paper's three FL data
+properties: massively distributed, unbalanced, non-IID."""
+
+import numpy as np
+
+from repro.data import emnist_like, speech_command_like, cifar100_like
+
+
+def test_massively_distributed_and_unbalanced():
+    ds = speech_command_like(reduced=True)
+    sizes = ds.client_sizes
+    assert len(sizes) >= 100
+    # unbalanced: wide spread like the paper's Fig. 2a (1 .. ~316)
+    assert sizes.min() >= 1 and sizes.max() <= 316
+    assert sizes.max() / max(np.median(sizes), 1) > 3
+
+
+def test_full_scale_matches_paper_counts():
+    ds = speech_command_like()
+    assert ds.n_clients == 2112
+    assert ds.spec.n_test_clients == 506
+    assert ds.spec.n_classes == 35
+    assert ds.spec.shape == (32, 32, 1)
+
+
+def test_non_iid_label_skew():
+    ds = emnist_like(reduced=True)
+    n_classes = ds.spec.n_classes
+    uniform = np.full(n_classes, 1.0 / n_classes)
+    kls = []
+    for cid in range(20):
+        _, y = ds.client_data(cid)
+        if len(y) < 10:
+            continue
+        p = np.bincount(y, minlength=n_classes) / len(y)
+        nz = p > 0
+        kls.append(np.sum(p[nz] * np.log(p[nz] / uniform[nz])))
+    assert np.mean(kls) > 0.3, "client label dists should diverge from uniform"
+
+
+def test_deterministic_lazy_materialization():
+    ds = emnist_like(reduced=True)
+    x1, y1 = ds.client_data(7)
+    x2, y2 = ds.client_data(7)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    x3, _ = ds.client_data(8)
+    assert x3.shape[1:] == x1.shape[1:]
+
+
+def test_learnable_structure():
+    """A linear probe on pooled data must beat chance (features carry
+    class signal, so FL training can actually improve accuracy)."""
+    ds = emnist_like(reduced=True)
+    xs, ys = [], []
+    for cid in range(60):
+        x, y = ds.client_data(cid)
+        xs.append(x.reshape(len(y), -1))
+        ys.append(y)
+    x = np.concatenate(xs)
+    y = np.concatenate(ys)
+    # class-mean classifier
+    classes = np.unique(y)
+    means = np.stack([x[y == c].mean(0) for c in classes])
+    pred = classes[np.argmin(
+        ((x[:, None, :] - means[None]) ** 2).sum(-1), axis=1)]
+    acc = (pred == y).mean()
+    assert acc > 3.0 / ds.spec.n_classes, f"probe acc {acc:.3f} ~ chance"
+
+
+def test_cifar_like_fixed_sizes():
+    ds = cifar100_like(reduced=True)
+    assert (ds.client_sizes == 50).all()
+
+
+def test_test_data_pooling():
+    ds = emnist_like(reduced=True)
+    x, y = ds.test_data(max_points=256)
+    assert len(x) == len(y) <= 256
+    assert x.dtype == np.float32

@@ -1,0 +1,78 @@
+"""Beyond-paper extensions: participant selection, upload compression,
+adaptive-step FedTune."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import CostModel
+from repro.core.fedtune import FedTune, FedTuneConfig
+from repro.core.preferences import Preference
+from repro.core.tuner import HyperParams
+from repro.federated.compression import compress_delta, upload_factor
+from repro.federated.selection import get_selector
+
+
+def test_selectors_return_unique_valid_ids():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 100, 64)
+    for name in ("random", "guided", "smallest"):
+        sel = get_selector(name, 64, rng, client_sizes=sizes)
+        ids = sel.select(10)
+        assert len(np.unique(ids)) == len(ids)
+        assert ids.min() >= 0 and ids.max() < 64
+
+
+def test_guided_prefers_high_loss_clients():
+    rng = np.random.default_rng(0)
+    sel = get_selector("guided", 20, rng)
+    for cid in range(20):
+        sel.update(cid, loss=10.0 if cid < 3 else 0.01, n_examples=10)
+    picks = [set(sel.select(5)) for _ in range(10)]
+    hits = sum(len({0, 1, 2} & p) for p in picks) / 10
+    assert hits >= 2.5, "guided selection should exploit high-loss clients"
+
+
+def test_smallest_selector_bounds_straggler():
+    rng = np.random.default_rng(0)
+    sizes = np.arange(1, 65)
+    sel = get_selector("smallest", 64, rng, client_sizes=sizes)
+    ids = sel.select(8)
+    assert sizes[ids].max() <= 16  # picks from the small half
+
+
+def test_int8_compression_roundtrip_close():
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (64, 32))}
+    c = {"w": g["w"] + 0.01 * jax.random.normal(key, (64, 32))}
+    rec = compress_delta(g, c, "int8")
+    err = float(jnp.abs(rec["w"] - c["w"]).max())
+    scale = float(jnp.abs(c["w"] - g["w"]).max())
+    assert err <= scale / 100  # 127-level quantization of the delta
+
+
+def test_upload_factor_reduces_translocost():
+    cm_full = CostModel(1e6, 1e5)
+    cm_comp = CostModel(1e6, 1e5)
+    r1 = cm_full.add_round([10] * 5, 1.0, upload_factor=1.0)
+    r2 = cm_comp.add_round([10] * 5, 1.0,
+                           upload_factor=upload_factor("int8"))
+    assert r2.trans_l < 0.7 * r1.trans_l
+    assert r2.comp_l == r1.comp_l
+
+
+def test_adaptive_step_fedtune_moves_faster():
+    pref = Preference(0.0, 0.0, 1.0, 0.0)
+    plain = FedTune(FedTuneConfig(preference=pref), HyperParams(20, 20))
+    adaptive = FedTune(FedTuneConfig(preference=pref, adaptive_step=True),
+                       HyperParams(20, 20))
+    from repro.core.costs import SystemCost
+    acc = 0.0
+    hp_p = hp_a = HyperParams(20, 20)
+    for r in range(12):
+        acc += 0.02
+        cost_p = SystemCost(1, 1, float(hp_p.m * hp_p.e) * 100, 1)
+        cost_a = SystemCost(1, 1, float(hp_a.m * hp_a.e) * 100, 1)
+        hp_p = plain.on_round(r, acc, cost_p, cost_p, hp_p)
+        hp_a = adaptive.on_round(r, acc, cost_a, cost_a, hp_a)
+    assert hp_a.m + hp_a.e <= hp_p.m + hp_p.e

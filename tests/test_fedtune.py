@@ -1,0 +1,134 @@
+"""Unit + property tests for the FedTune controller (paper Algorithm 1)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costs import SystemCost
+from repro.core.fedtune import FedTune, FedTuneConfig
+from repro.core.preferences import PAPER_PREFERENCES, Preference
+from repro.core.tuner import FixedTuner, HyperParams
+
+
+def mk(pref=Preference(0.25, 0.25, 0.25, 0.25), **kw):
+    return FedTune(FedTuneConfig(preference=pref, **kw), HyperParams(20, 20))
+
+
+def cost(t=1.0, q=1.0, z=1.0, v=1.0):
+    return SystemCost(comp_t=t, trans_t=q, comp_l=z, trans_l=v)
+
+
+def test_paper_preferences_sum_to_one():
+    assert len(PAPER_PREFERENCES) == 15
+    for p in PAPER_PREFERENCES:
+        assert math.isclose(sum(p.as_tuple()), 1.0, abs_tol=1e-6)
+
+
+def test_no_decision_below_eps():
+    tuner = mk()
+    hp = HyperParams(20, 20)
+    out = tuner.on_round(0, 0.005, cost(), cost(), hp)  # gain 0.005 < 0.01
+    assert (out.m, out.e) == (20, 20)
+    assert tuner.decisions == 0
+
+
+def test_first_decision_probes_m_up():
+    tuner = mk()
+    hp = HyperParams(20, 20)
+    out = tuner.on_round(0, 0.05, cost(), cost(), hp)
+    assert tuner.decisions == 1
+    assert out.m == 21 and out.e == 20
+
+
+def test_steps_are_unit_without_adaptive():
+    tuner = mk()
+    hp = HyperParams(20, 20)
+    for r in range(6):
+        nxt = tuner.on_round(r, 0.05 * (r + 1), cost(t=1 + r), cost(), hp)
+        assert abs(nxt.m - hp.m) <= 1 and abs(nxt.e - hp.e) <= 1
+        hp = nxt
+
+
+def test_comp_l_only_preference_pushes_m_and_e_down():
+    # gamma=1: CompL prefers smaller M and smaller E (Table 3).
+    tuner = mk(Preference(0.0, 0.0, 1.0, 0.0))
+    hp = HyperParams(20, 20)
+    acc = 0.0
+    for r in range(30):
+        acc += 0.02
+        # CompL grows with hp.m and hp.e (structurally true in the system)
+        c = cost(z=float(hp.m * hp.e))
+        hp = tuner.on_round(r, acc, c, c, hp)
+    assert hp.m < 20 and hp.e < 20
+
+
+def test_trans_t_only_preference_pushes_m_and_e_up():
+    tuner = mk(Preference(0.0, 1.0, 0.0, 0.0))
+    hp = HyperParams(20, 20)
+    acc = 0.0
+    for r in range(30):
+        acc += 0.02
+        c = cost(q=100.0 / (hp.m * hp.e))  # TransT improves with bigger M,E
+        hp = tuner.on_round(r, acc, c, c, hp)
+    assert hp.m > 20 and hp.e > 20
+
+
+def test_penalty_multiplies_opposing_slopes():
+    tuner = mk(Preference(0.25, 0.25, 0.25, 0.25), penalty=10.0)
+    hp = HyperParams(20, 20)
+    acc = 0.0
+    # two decisions establish history; third can be judged bad
+    for r in range(8):
+        acc += 0.02
+        hp = tuner.on_round(r, acc, cost(t=1 + r * 10, q=1 + r * 10,
+                                         z=1 + r * 10, v=1 + r * 10), cost(), hp)
+    # slopes must stay positive and finite
+    assert all(x >= 0 and math.isfinite(x) for x in tuner.eta + tuner.zeta)
+
+
+def test_clamping_at_one():
+    tuner = mk(Preference(0.0, 0.0, 1.0, 0.0), m_max=50, e_max=50)
+    hp = HyperParams(1, 1)
+    acc = 0.0
+    for r in range(10):
+        acc += 0.02
+        hp = tuner.on_round(r, acc, cost(z=float(hp.m * hp.e)),
+                            cost(), hp)
+        assert hp.m >= 1 and hp.e >= 1
+
+
+def test_fixed_tuner_never_changes():
+    t = FixedTuner()
+    hp = HyperParams(20, 20)
+    assert t.on_round(0, 0.9, cost(), cost(), hp) is hp
+
+
+@given(
+    alpha=st.floats(0, 1), beta=st.floats(0, 1), gamma=st.floats(0, 1),
+    gains=st.lists(st.floats(0.011, 0.2), min_size=1, max_size=20),
+    costs=st.lists(st.tuples(*[st.floats(0.1, 1e6)] * 4),
+                   min_size=20, max_size=20),
+)
+@settings(max_examples=40, deadline=None)
+def test_fedtune_invariants(alpha, beta, gamma, gains, costs):
+    """Property: under arbitrary positive overhead streams, FedTune keeps
+    M,E within bounds, steps by at most 1, and never produces NaN slopes."""
+    total = alpha + beta + gamma
+    if total > 1.0:
+        alpha, beta, gamma = (x / total for x in (alpha, beta, gamma))
+        total = 1.0
+    delta = max(0.0, 1.0 - total)
+    pref = Preference(alpha, beta, gamma, delta)
+    tuner = FedTune(FedTuneConfig(preference=pref, m_max=100, e_max=100),
+                    HyperParams(20, 20))
+    hp = HyperParams(20, 20)
+    acc = 0.0
+    for r, (t, q, z, v) in enumerate(costs):
+        acc += gains[r % len(gains)]
+        nxt = tuner.on_round(r, acc, cost(t, q, z, v), cost(), hp)
+        assert 1 <= nxt.m <= 100 and 1 <= nxt.e <= 100
+        assert abs(nxt.m - hp.m) <= 1 and abs(nxt.e - hp.e) <= 1
+        hp = nxt
+    for x in tuner.eta + tuner.zeta:
+        assert math.isfinite(x) and x >= 0

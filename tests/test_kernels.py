@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fed_aggregate import fed_aggregate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("m,n", [(1, 256), (4, 1000), (16, 8192), (50, 4097)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fed_aggregate_sweep(m, n, dtype):
+    ks = jax.random.split(KEY, 3)
+    w = jax.random.uniform(ks[0], (m,), jnp.float32)
+    w = w / w.sum()
+    d = jax.random.normal(ks[1], (m, n)).astype(dtype)
+    base = jax.random.normal(ks[2], (n,)).astype(dtype)
+    got = fed_aggregate(w, d, base, interpret=True)
+    want = ref.fed_aggregate_ref(w, d, base)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fed_aggregate_is_weighted_mean():
+    # aggregating identical deltas with normalized weights is identity
+    d = jnp.ones((5, 100)) * 3.0
+    w = jnp.full((5,), 0.2)
+    got = fed_aggregate(w, d, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 3.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 2, 1, 128, 32), (2, 4, 2, 256, 64), (1, 4, 4, 256, 128),
+])
+@pytest.mark.parametrize("window,cap", [
+    (None, None), (64, None), (None, 50.0), (96, 30.0),
+])
+def test_flash_attention_sweep(b, h, kh, s, d, window, cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kh, s, d))
+    v = jax.random.normal(ks[2], (b, kh, s, d))
+    got = flash_attention(q, k, v, window=window, cap=cap,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtype(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,t,w", [(1, 128, 128), (2, 256, 128),
+                                   (4, 128, 512), (3, 192, 384)])
+def test_rglru_scan_sweep(b, t, w):
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.uniform(ks[0], (b, t, w), minval=0.5, maxval=0.999)
+    x = jax.random.normal(ks[1], (b, t, w)) * 0.1
+    got = rglru_scan(a, x, block_b=1, block_w=128, chunk_t=64, interpret=True)
+    want = ref.rglru_scan_ref(a, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_scan_decay_property():
+    """With b=0 everywhere, h stays 0; with a=0, h_t = b_t."""
+    a = jnp.full((1, 64, 128), 0.9)
+    z = jnp.zeros((1, 64, 128))
+    out = rglru_scan(a, z, chunk_t=32, block_b=1, block_w=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+    b = jax.random.normal(KEY, (1, 64, 128))
+    out2 = rglru_scan(jnp.zeros_like(b), b, chunk_t=32, block_b=1,
+                      block_w=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(b), rtol=1e-6)

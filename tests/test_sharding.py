@@ -1,0 +1,76 @@
+"""Partition-rule unit tests (no multi-device mesh needed)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.launch.steps import param_struct
+from repro.sharding import specs as sh
+
+
+class FakeMesh:
+    """Minimal mesh stand-in exposing .shape for fit_spec."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+def test_fit_spec_drops_non_dividing_axes():
+    mesh = FakeMesh(data=16, model=16)
+    assert sh.fit_spec(P("data", "model"), (32, 4), mesh) == P("data", None)
+    assert sh.fit_spec(P("data",), (7,), mesh) == P(None)
+    assert sh.fit_spec(P(("data", "model")), (256,), mesh) == \
+        P(("data", "model"))
+    # partial tuple fit: 16 divides, 256 doesn't
+    assert sh.fit_spec(P(("data", "model")), (16,), mesh) == P("data")
+
+
+def test_param_specs_train_rules():
+    cfg = reduced(get_config("qwen2-7b"))
+    struct = param_struct(cfg, stacked=False)
+    rules = sh.train_rules(False)
+    specs = sh.param_specs(struct, rules)
+    l0 = specs["layers"][0]
+    assert l0["mixer"]["wq"] == P("data", "model", None)
+    assert l0["ffn"]["w_gate"] == P("data", "model")
+    assert l0["ffn"]["w_down"] == P("model", "data")
+    assert l0["ln1"] == P()
+    assert specs["embed"] == P("model", "data")
+
+
+def test_param_specs_stacked_get_leading_none():
+    cfg = get_config("gemma2-2b")
+    struct = param_struct(cfg, stacked=True)
+    rules = sh.train_rules(False)
+    specs = sh.param_specs(struct, rules)
+    st0 = specs["stacked"][0]
+    assert st0["mixer"]["wq"] == P(None, "data", "model", None)
+
+
+def test_moe_expert_weights_sharded_as_ep():
+    cfg = get_config("dbrx-132b")
+    struct = param_struct(cfg, stacked=True)
+    specs = sh.param_specs(struct, sh.train_rules(False))
+    st0 = specs["stacked"][0]
+    assert st0["ffn"]["we_gate"] == P(None, "model", "data", None)
+
+
+def test_decode_rules_seq_shard_for_tiny_batch():
+    r = sh.decode_rules(False, shard_seq=True)
+    assert r["batch"] is None
+    assert r["cache_seq"] == ("data", "model")
+    r2 = sh.decode_rules(False, shard_seq=False)
+    assert r2["cache_seq"] == "model"
+
+
+def test_multipod_batch_spans_pod_and_data():
+    r = sh.train_rules(True)
+    assert r["batch"] == ("pod", "data")
+
+
+def test_logical_constraint_is_identity_outside_context():
+    from repro.sharding.ctx import logical_constraint
+    x = jnp.ones((4, 4))
+    assert logical_constraint(x, ("batch", "embed")) is x

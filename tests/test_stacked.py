@@ -1,0 +1,67 @@
+"""Scan-over-layers execution must match the unrolled reference exactly."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm as lm_mod
+from repro.models import stacked as st
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = ("gemma2-2b", "recurrentgemma-9b", "xlstm-350m", "dbrx-132b",
+         "seamless-m4t-medium", "qwen2-7b", "internvl2-1b")
+
+
+def _mk(arch, n_layers=4):
+    cfg = reduced(get_config(arch), n_layers=n_layers)
+    params = lm_mod.init_params(cfg, KEY)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_stack_roundtrip(arch):
+    cfg, params = _mk(arch)
+    back = st.unstack_params(st.stack_params(params, cfg), cfg)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert (a == b).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_stacked_loss_matches_unrolled(arch):
+    cfg, params = _mk(arch)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+             "weight": jnp.linspace(0.5, 1.5, B)}
+    if cfg.frontend is not None:
+        batch["frontend"] = jax.random.normal(
+            KEY, (B, cfg.frontend.seq_len, cfg.frontend.feature_dim))
+    l1, m1 = lm_mod.loss_fn(params, cfg, batch)
+    l2, m2 = st.loss_fn(st.stack_params(params, cfg), cfg, batch, remat=True)
+    assert abs(float(l1 - l2)) < 5e-5
+    assert abs(float(m1["acc"] - m2["acc"])) < 1e-6
+
+
+@pytest.mark.parametrize("arch", ("gemma2-2b", "recurrentgemma-9b",
+                                  "xlstm-350m", "dbrx-132b"))
+def test_stacked_decode_matches_unrolled(arch):
+    cfg, params = _mk(arch)
+    pst = st.stack_params(params, cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    cache = lm_mod.init_cache(cfg, B, max_len=S + 4)
+    _, cache = lm_mod.prefill(params, cfg, tokens[:, :S - 1], cache,
+                              use_kernel=False)
+    ref, _ = lm_mod.decode_step(params, cfg, tokens[:, S - 1],
+                                jnp.int32(S - 1), cache)
+    got, _ = st.decode_step(pst, cfg, tokens[:, S - 1], jnp.int32(S - 1),
+                            st.stack_cache(cache, cfg))
+    assert float(jnp.abs(got - ref).max()) < 5e-4
+
+
+def test_find_cycle_patterns():
+    assert st.find_cycle(get_config("gemma2-2b")) == (2, 13, 0)
+    assert st.find_cycle(get_config("recurrentgemma-9b")) == (3, 12, 2)
+    assert st.find_cycle(get_config("xlstm-350m")) == (2, 12, 0)
+    assert st.find_cycle(get_config("qwen2-7b")) == (1, 28, 0)

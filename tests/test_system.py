@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests: FL training with fixed hyper-parameters and
+with FedTune, on the synthetic federated datasets (the paper's pipeline)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel, FedTune, FedTuneConfig, Preference
+from repro.core.tuner import HyperParams
+from repro.data import emnist_like
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+
+
+def _setup(max_rounds=25, tuner=None, aggregator="fedavg", m=5, e=1.0,
+           seed=0, prox_mu=0.0):
+    ds = emnist_like(reduced=True, seed=seed)
+    cfg = MLPConfig(name="mlp_t", in_dim=28 * 28, hidden=(32,), n_classes=16)
+    model = build_model(cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    cm = CostModel(flops_per_example=2 * n_params, param_count=n_params)
+    server = FLServer(
+        model, ds, get_aggregator(aggregator),
+        get_optimizer("sgd", 0.05, momentum=0.9), cm,
+        FLConfig(m=m, e=e, batch_size=10, target_accuracy=0.95,
+                 max_rounds=max_rounds, eval_points=512, seed=seed,
+                 prox_mu=prox_mu),
+        tuner=tuner)
+    return server
+
+
+def test_fl_training_improves_accuracy():
+    server = _setup(max_rounds=25)
+    res = server.run()
+    assert res.rounds == 25
+    first = np.mean([h.accuracy for h in res.history[:5]])
+    last = np.mean([h.accuracy for h in res.history[-5:]])
+    assert last > first + 0.05, (first, last)
+    assert res.total_cost.comp_l > 0 and res.total_cost.trans_l > 0
+
+
+@pytest.mark.parametrize("aggregator", ["fednova", "fedadagrad", "fedprox"])
+def test_aggregators_train(aggregator):
+    server = _setup(max_rounds=10, aggregator=aggregator,
+                    prox_mu=0.01 if aggregator == "fedprox" else 0.0)
+    res = server.run()
+    assert np.isfinite(res.final_accuracy)
+    assert res.final_accuracy > 1.0 / 16  # beats chance
+
+
+def test_fedtune_adjusts_hyperparameters():
+    tuner = FedTune(
+        FedTuneConfig(preference=Preference(0.0, 0.0, 1.0, 0.0)),
+        HyperParams(5, 2))
+    server = _setup(max_rounds=30, tuner=tuner, m=5, e=2.0)
+    res = server.run()
+    assert tuner.decisions >= 2
+    # gamma=1 (CompL-only): FedTune should not grow both knobs
+    assert not (res.final_m > 5 and res.final_e > 2)
+    ms = {h.m for h in res.history}
+    es = {h.e for h in res.history}
+    assert len(ms) > 1 or len(es) > 1, "hyper-parameters never moved"
+
+
+def test_round_costs_follow_current_hyperparams():
+    server = _setup(max_rounds=8, m=3, e=1.0)
+    res = server.run()
+    for rec in res.history:
+        assert rec.cost.trans_l == server.cost_model.param_count * rec.m
+
+
+def test_fractional_passes_supported():
+    server = _setup(max_rounds=4, e=0.5)  # paper's E=0.5: half the data
+    res = server.run()
+    assert res.rounds == 4
+    assert np.isfinite(res.final_accuracy)
