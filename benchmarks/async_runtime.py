@@ -1,0 +1,116 @@
+"""Benchmark: the event-driven heterogeneous runtime.
+
+Part 1 — batched client execution: wall-clock of the vmapped cohort path
+(runtime/batched.py, size-bucketed) vs the sequential per-client jit loop at
+M in {4, 16, 32, 64}.  The acceptance bar is batched < sequential from
+M >= 16.
+
+Part 2 — runtime-mode sweep under a straggler fleet: sync (wait for all),
+sync with a 0.5-quantile straggler cutoff, async (FedAsync), and buffered
+(FedBuff, K=M/2), all at the same (M, E).  Reports final accuracy, virtual
+wall-clock, and the four overheads — the regime where system-aware (M, E)
+tuning actually matters.
+
+Usage: PYTHONPATH=src python benchmarks/async_runtime.py [--rounds N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, small_model
+from repro.core import CostModel
+from repro.data import emnist_like
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.federated.client import local_train
+from repro.optim.optimizers import get_optimizer
+from repro.runtime import RuntimeConfig, sample_fleet
+from repro.runtime.batched import batched_local_train
+
+
+def bench_batched(reps: int = 3):
+    ds = emnist_like(reduced=True)
+    model = small_model("emnist")
+    opt = get_optimizer("sgd", 0.03, momentum=0.9)
+    params = model.init(jax.random.PRNGKey(0))
+    print("# batched client execution vs sequential loop")
+    for m in (4, 16, 32, 64):
+        data = [ds.client_data(c) for c in range(m)]
+        # warm both compile caches
+        rng = np.random.default_rng(0)
+        local_train(model, params, *data[0], passes=1.0, batch_size=10,
+                    optimizer=opt, rng=rng)
+        batched_local_train(model, params, data, passes=1.0, batch_size=10,
+                            optimizer=opt, rng=np.random.default_rng(0))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            rng = np.random.default_rng(0)
+            for d in data:
+                local_train(model, params, *d, passes=1.0, batch_size=10,
+                            optimizer=opt, rng=rng)
+        t_seq = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            batched_local_train(model, params, data, passes=1.0,
+                                batch_size=10, optimizer=opt,
+                                rng=np.random.default_rng(0))
+        t_bat = (time.perf_counter() - t0) / reps
+        emit(f"seq_cohort_m{m}", t_seq * 1e6, f"{m} clients")
+        emit(f"batched_cohort_m{m}", t_bat * 1e6,
+             f"speedup={t_seq / t_bat:.2f}x")
+
+
+def _server(rt, fleet, *, m, e, rounds):
+    ds = emnist_like(reduced=True)
+    model = small_model("emnist")
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    return FLServer(
+        model, ds, get_aggregator("fedavg"),
+        get_optimizer("sgd", 0.03, momentum=0.9),
+        CostModel(flops_per_example=2 * n_params, param_count=n_params),
+        FLConfig(m=m, e=e, batch_size=10, target_accuracy=0.99,
+                 max_rounds=rounds, eval_points=512),
+        fleet=fleet, runtime_config=rt)
+
+
+def bench_modes(rounds: int, m: int = 8, e: float = 1.0):
+    print("# runtime modes under a straggler fleet "
+          f"(M={m}, E={e:g}, {rounds} aggregations)")
+    fleet_seed = 3
+    modes = {
+        "sync_full": RuntimeConfig(mode="sync"),
+        "sync_cutoff": RuntimeConfig(mode="sync", deadline_quantile=0.5),
+        "async": RuntimeConfig(mode="async"),
+        "buffered": RuntimeConfig(mode="buffered", buffer_k=max(m // 2, 1)),
+    }
+    n_clients = emnist_like(reduced=True).n_clients
+    for name, rt in modes.items():
+        fleet = sample_fleet("stragglers", n_clients, seed=fleet_seed)
+        srv = _server(rt, fleet, m=m, e=e, rounds=rounds)
+        t0 = time.perf_counter()
+        res = srv.run()
+        wall = time.perf_counter() - t0
+        c = res.total_cost
+        emit(f"runtime_{name}", wall * 1e6,
+             f"acc={res.final_accuracy:.3f} t_sim={res.sim_time:.3g} "
+             f"CompT={c.comp_t:.3g} TransT={c.trans_t:.3g} "
+             f"CompL={c.comp_l:.3g} TransL={c.trans_l:.3g}")
+
+
+def main(settings=None, *, rounds: int = 20, reps: int = 3):
+    del settings  # runs at reduced scale only; full-scale is future work
+    bench_batched(reps)
+    bench_modes(rounds)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    main(rounds=args.rounds, reps=args.reps)

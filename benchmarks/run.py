@@ -11,6 +11,7 @@ suite completes on one CPU core; ``--full`` uses paper-scale datasets.
   fig8/fig9    penalty mechanism          (paper Fig. 8 / 9)
   kernel       kernel micro-benchmarks
   roofline     dry-run roofline table     (EXPERIMENTS.md source)
+  runtime      heterogeneous runtime: batched cohorts + mode sweep
 """
 
 from __future__ import annotations
@@ -28,11 +29,11 @@ def main() -> None:
                     help="comma-separated benchmark keys")
     args = ap.parse_args()
 
-    from benchmarks import (beyond_paper, fedtune_aggregators,
-                            fedtune_datasets, fedtune_preferences,
-                            kernel_bench, measurement_sweep,
-                            model_complexity, penalty_study,
-                            roofline_report)
+    from benchmarks import (async_runtime, beyond_paper,
+                            fedtune_aggregators, fedtune_datasets,
+                            fedtune_preferences, kernel_bench,
+                            measurement_sweep, model_complexity,
+                            penalty_study, roofline_report)
     from benchmarks.common import BenchSettings, emit
 
     settings = BenchSettings(full=args.full, seeds=args.seeds)
@@ -46,6 +47,7 @@ def main() -> None:
         "beyond": lambda: beyond_paper.main(settings),
         "kernels": lambda: kernel_bench.main(settings),
         "roofline": lambda: roofline_report.main(settings),
+        "runtime": lambda: async_runtime.main(settings),
     }
     only = set(args.only.split(",")) if args.only else None
 

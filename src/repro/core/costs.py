@@ -64,6 +64,19 @@ class CostModel:
     total: SystemCost = field(default_factory=SystemCost)
     rounds: int = 0
 
+    @property
+    def train_flops_per_example(self) -> float:
+        """C1 (= C3): forward+backward FLOPs per training example."""
+        return self.flops_per_example * self.backward_multiplier
+
+    def traffic_halves(self, upload_factor: float = 1.0):
+        """(download, upload) units per client round under the paper's
+        convention that a full round moves ``param_count`` total, split
+        half down / half up, with only the upload compressible.  Single
+        source of truth for the runtime clock AND the deadline selector's
+        ranking signal — they must not drift apart."""
+        return self.param_count * 0.5, self.param_count * upload_factor * 0.5
+
     def add_round(self, participant_examples: Sequence[float],
                   passes: float, *, upload_factor: float = 1.0) -> SystemCost:
         """participant_examples: examples per selected client this round
@@ -81,9 +94,26 @@ class CostModel:
             comp_l=c3 * passes * sum(participant_examples),
             trans_l=c4 * m * (1.0 + upload_factor) / 2.0,
         )
+        self._accumulate(r)
+        return r
+
+    def add_timed_round(self, *, comp_time: float, trans_time: float,
+                        comp_load: float, trans_load: float) -> SystemCost:
+        """Heterogeneous-runtime accounting: the *time* overheads come from
+        per-client simulated wall-clock (critical path over the round's
+        participants, or virtual-clock deltas in async modes) instead of the
+        homogeneous ``C1 * E * max_k n_k`` proxy; the *load* overheads stay
+        exact work sums.  Over a homogeneous unit-rate fleet the critical
+        path degenerates to eqs. (2)-(5), so this strictly generalizes
+        ``add_round``."""
+        r = SystemCost(comp_t=comp_time, trans_t=trans_time,
+                       comp_l=comp_load, trans_l=trans_load)
+        self._accumulate(r)
+        return r
+
+    def _accumulate(self, r: SystemCost):
         self.total.comp_t += r.comp_t
         self.total.trans_t += r.trans_t
         self.total.comp_l += r.comp_l
         self.total.trans_l += r.trans_l
         self.rounds += 1
-        return r

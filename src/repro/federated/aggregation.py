@@ -28,6 +28,7 @@ class ClientUpdate(NamedTuple):
     n_examples: int
     n_steps: int       # local optimizer steps actually taken (tau_k)
     last_loss: float = 0.0  # final local loss (guided selection signal)
+    client_id: int = -1     # which client produced it (runtime bookkeeping)
 
 
 def _flatten(params):
@@ -158,6 +159,86 @@ class FedYogi(_AdaptiveServer):
 
     def _second_moment(self, v, d2):
         return v - 0.01 * jnp.sign(v - d2) * d2
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware aggregation (async / buffered runtimes)
+# ---------------------------------------------------------------------------
+
+def staleness_weight(staleness: float, alpha: float = 0.5,
+                     kind: str = "polynomial") -> float:
+    """Down-weighting of stale updates s(tau) in [0, 1].
+
+    polynomial — FedAsync's s(tau) = (1 + tau)^-alpha (default).
+    constant   — no discounting.
+    hinge      — full weight up to ``b = 1/alpha`` versions, then harmonic
+                 decay 1 / (1 + alpha * (tau - b)).
+    """
+    s = max(float(staleness), 0.0)
+    if kind == "constant":
+        return 1.0
+    if kind == "polynomial":
+        return float((1.0 + s) ** (-alpha))
+    if kind == "hinge":
+        b = 1.0 / max(alpha, 1e-9)
+        return 1.0 if s <= b else float(1.0 / (1.0 + alpha * (s - b)))
+    raise KeyError(f"unknown staleness kind {kind!r}")
+
+
+class FedBuffAggregator:
+    """FedBuff [Nguyen'22]: the server buffers K client *deltas* (each taken
+    against the params the client was dispatched with) and applies their
+    staleness-discounted average ``(server_lr / K) * sum_i s(tau_i) d_i``
+    in one shot through the ``fed_aggregate`` kernel.  The discount is
+    ABSOLUTE (divide by K, not by the weight sum): a buffer of uniformly
+    stale updates takes a proportionally smaller step, as in the cited
+    FedAsync/FedBuff scaling.  Unlike the synchronous ``Aggregator``s this
+    object is fed deltas incrementally by the event-driven runtime."""
+
+    name = "fedbuff"
+
+    def __init__(self, buffer_k: int = 8, server_lr: float = 1.0,
+                 staleness_alpha: float = 0.5,
+                 staleness_kind: str = "polynomial"):
+        self.buffer_k = buffer_k
+        self.server_lr = server_lr
+        self.staleness_alpha = staleness_alpha
+        self.staleness_kind = staleness_kind
+        self._deltas: List[Any] = []
+        self._weights: List[float] = []
+
+    def __len__(self) -> int:
+        return len(self._deltas)
+
+    @property
+    def full(self) -> bool:
+        return len(self._deltas) >= self.buffer_k
+
+    def add(self, delta, staleness: int = 0):
+        self._deltas.append(delta)
+        self._weights.append(staleness_weight(
+            staleness, self.staleness_alpha, self.staleness_kind))
+
+    def flush(self, global_params):
+        """Apply the buffered deltas; returns new params and clears."""
+        assert self._deltas, "flush() on an empty buffer"
+        w = np.asarray(self._weights, np.float32)
+        w = (w / len(w)) * self.server_lr
+        out = _weighted_combine(w, self._deltas, base=global_params)
+        self._deltas, self._weights = [], []
+        return out
+
+
+def apply_async_update(global_params, client_params, *, mix: float,
+                       staleness: int, alpha: float = 0.5,
+                       kind: str = "polynomial"):
+    """FedAsync [Xie'19] model mixing: theta <- (1-a) theta + a theta_k with
+    a = mix * s(staleness).  Runs through the fed_aggregate kernel."""
+    a = float(np.clip(mix * staleness_weight(staleness, alpha, kind),
+                      0.0, 1.0))
+    scaled_base = jax.tree.map(lambda p: p * (1.0 - a), global_params)
+    return _weighted_combine(np.array([a], np.float32), [client_params],
+                             base=scaled_base)
 
 
 def get_aggregator(name: str, **kw) -> Aggregator:

@@ -6,6 +6,10 @@
             most (high loss) and carry more data are preferred.
   smallest— deadline-style: prefer clients with the least data (bounds the
             straggler term max_k n_k in CompT, eq. 2).
+  deadline— heterogeneity-aware: prefer clients with the smallest *expected
+            round time* (data size / device speed, runtime fleet profile),
+            with epsilon-greedy exploration so slow clients still
+            contribute occasionally (avoids fast-device bias).
 """
 
 from __future__ import annotations
@@ -68,12 +72,48 @@ class SmallestFirstSelector(Selector):
         return np.argsort(noisy)[:m]
 
 
+class DeadlineAwareSelector(Selector):
+    """Ranks clients by expected dispatch->arrival time under the runtime's
+    device fleet; an epsilon fraction of each cohort is still drawn uniformly
+    from the remainder so stragglers are not starved of participation."""
+    name = "deadline"
+
+    def __init__(self, n_clients: int, rng: np.random.Generator,
+                 est_times, epsilon: float = 0.1):
+        super().__init__(n_clients, rng)
+        self.est_times = np.asarray(est_times, np.float64)
+        self.epsilon = epsilon
+
+    def select(self, m: int) -> np.ndarray:
+        m = min(m, self.n_clients)
+        n_explore = int(round(self.epsilon * m))
+        n_fast = m - n_explore
+        # jitter breaks ties between identical devices
+        noisy = self.est_times * (1.0 + self.rng.uniform(
+            0, 1e-6, self.n_clients))
+        fast = np.argsort(noisy)[:n_fast]
+        rest = np.setdiff1d(np.arange(self.n_clients), fast)
+        explore = self.rng.choice(rest, size=min(n_explore, len(rest)),
+                                  replace=False)
+        return np.concatenate([fast, explore]).astype(np.int64)
+
+
 def get_selector(name: str, n_clients: int, rng: np.random.Generator,
-                 client_sizes=None) -> Selector:
+                 client_sizes=None, est_times=None) -> Selector:
     if name == "random":
         return Selector(n_clients, rng)
     if name == "guided":
         return GuidedSelector(n_clients, rng)
     if name == "smallest":
         return SmallestFirstSelector(n_clients, rng, client_sizes)
+    if name == "deadline":
+        if est_times is None:
+            if client_sizes is None:
+                raise ValueError(
+                    "deadline selection needs est_times (from a runtime "
+                    "fleet) or client_sizes as a completion-time proxy")
+            # no fleet wired in: every client looks equally fast, fall back
+            # to data size as the completion-time proxy
+            est_times = np.asarray(client_sizes, np.float64)
+        return DeadlineAwareSelector(n_clients, rng, est_times)
     raise KeyError(name)

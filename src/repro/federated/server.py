@@ -2,16 +2,23 @@
 evaluation, and the tuner hook (FedTune plugs in here).
 
 This is the *simulation* loop used for the paper's experiments (small
-models, CPU).  The datacenter execution path — participants as mesh shards
-with psum aggregation — lives in launch/train.py and is what the multi-pod
-dry-run lowers.
+models, CPU).  Since the event-driven runtime landed (repro.runtime), the
+server is a thin facade: ``run()`` hands orchestration to the runtime engine
+(sync / async / buffered execution over a device fleet), and the original
+synchronous-homogeneous loop survives as ``run_legacy()`` — the runtime's
+sync mode over a homogeneous fleet reproduces it round for round, which
+``tests/test_runtime.py`` pins down.
+
+The datacenter execution path — participants as mesh shards with psum
+aggregation — lives in launch/train.py and is what the multi-pod dry-run
+lowers.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +45,7 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 1
     log_every: int = 0             # 0 = silent
-    selection: str = "random"      # random | guided | smallest (beyond-paper)
+    selection: str = "random"      # random | guided | smallest | deadline
     compression: Optional[str] = None  # None | "int8" upload deltas
 
 
@@ -50,6 +57,8 @@ class RoundRecord:
     accuracy: float
     cost: SystemCost
     wall_time: float
+    sim_time: float = 0.0          # virtual clock at the end of the round
+    n_updates: int = -1            # arrivals aggregated (-1 = legacy loop)
 
 
 @dataclass
@@ -61,13 +70,16 @@ class FLResult:
     history: List[RoundRecord]
     final_m: int
     final_e: float
+    params: Any = None             # final global model parameters
+    sim_time: float = 0.0          # total virtual wall-clock (runtime modes)
 
 
 class FLServer:
     def __init__(self, model: Model, dataset: FederatedDataset,
                  aggregator: Aggregator, optimizer: Optimizer,
                  cost_model: CostModel, config: FLConfig,
-                 tuner: Optional[Tuner] = None):
+                 tuner: Optional[Tuner] = None,
+                 fleet=None, runtime_config=None):
         self.model = model
         self.dataset = dataset
         self.aggregator = aggregator
@@ -77,10 +89,25 @@ class FLServer:
         self.tuner = tuner or Tuner()
         self.rng = np.random.default_rng(config.seed)
         self._eval_fn = None
+        self.fleet = fleet
+        self.runtime_config = runtime_config
         from repro.federated.selection import get_selector
+        est_times = None
+        if fleet is not None:
+            # deadline-aware selection signal: expected dispatch->arrival
+            # time per client (download + E passes of compute + upload)
+            from repro.federated.compression import upload_factor
+            c1 = cost_model.train_flops_per_example
+            down, up = cost_model.traffic_halves(
+                upload_factor(config.compression))
+            est_times = np.array([
+                fleet.est_round_time(k, float(dataset.client_sizes[k]),
+                                     config.e, c1, down, up)
+                for k in range(dataset.n_clients)])
         self.selector = get_selector(config.selection, dataset.n_clients,
                                      self.rng,
-                                     client_sizes=dataset.client_sizes)
+                                     client_sizes=dataset.client_sizes,
+                                     est_times=est_times)
 
     # ------------------------------------------------------------------
     def _evaluate(self, params) -> float:
@@ -101,7 +128,39 @@ class FLServer:
         return correct / len(y)
 
     # ------------------------------------------------------------------
+    def _client_update(self, params, cid: int, e: float
+                       ) -> Tuple[ClientUpdate, int]:
+        """Run one client's local training against ``params``.  Shared by the
+        legacy loop and the event-driven runtime so both consume the server
+        rng stream identically (batch permutations)."""
+        cfg = self.config
+        x, y = self.dataset.client_data(int(cid))
+        upd = local_train(
+            self.model, params, x, y, passes=e,
+            batch_size=cfg.batch_size, optimizer=self.optimizer,
+            rng=self.rng, prox_mu=cfg.prox_mu)
+        if cfg.compression:
+            from repro.federated.compression import compress_delta
+            upd = upd._replace(params=compress_delta(
+                params, upd.params, cfg.compression))
+        upd = upd._replace(client_id=int(cid))
+        self.selector.update(int(cid), upd.last_loss, len(y))
+        return upd, len(y)
+
+    # ------------------------------------------------------------------
     def run(self, params=None) -> FLResult:
+        """Execute FL through the event-driven runtime.  Mode and fleet come
+        from ``runtime_config`` / ``fleet`` (defaults: sync execution over a
+        homogeneous unit fleet == the legacy loop's behavior)."""
+        from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig
+        rt = EventDrivenRuntime(self, fleet=self.fleet,
+                                config=self.runtime_config or RuntimeConfig())
+        return rt.run(params)
+
+    # ------------------------------------------------------------------
+    def run_legacy(self, params=None) -> FLResult:
+        """The original synchronous, homogeneous round loop (paper setting).
+        Kept as the reference the runtime's sync mode is verified against."""
         cfg = self.config
         if params is None:
             params = self.model.init(jax.random.PRNGKey(cfg.seed))
@@ -117,18 +176,9 @@ class FLServer:
             updates: List[ClientUpdate] = []
             examples = []
             for cid in participants:
-                x, y = self.dataset.client_data(int(cid))
-                upd = local_train(
-                    self.model, params, x, y, passes=hp.e,
-                    batch_size=cfg.batch_size, optimizer=self.optimizer,
-                    rng=self.rng, prox_mu=cfg.prox_mu)
-                if cfg.compression:
-                    from repro.federated.compression import compress_delta
-                    upd = upd._replace(params=compress_delta(
-                        params, upd.params, cfg.compression))
+                upd, n = self._client_update(params, int(cid), hp.e)
                 updates.append(upd)
-                examples.append(len(y))
-                self.selector.update(int(cid), upd.last_loss, len(y))
+                examples.append(n)
             params = self.aggregator(params, updates)
             from repro.federated.compression import upload_factor
             round_cost = self.cost_model.add_round(
@@ -158,4 +208,5 @@ class FLServer:
             history=history,
             final_m=hp.m,
             final_e=hp.e,
+            params=params,
         )

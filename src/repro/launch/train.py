@@ -9,7 +9,14 @@ Two modes:
 Usage:
   PYTHONPATH=src python -m repro.launch.train --dataset emnist \
       --preference 0.25,0.25,0.25,0.25 --rounds 100 [--fedtune]
+  PYTHONPATH=src python -m repro.launch.train --runtime buffered \
+      --het stragglers --buffer-k 8 --fedtune
   PYTHONPATH=src python -m repro.launch.train --mode mesh --arch gemma2-2b
+
+``--runtime`` picks the execution mode of the event-driven runtime
+(sync = deadline rounds, async = FedAsync staleness weighting, buffered =
+FedBuff K-update aggregation); ``--het`` samples a device fleet from a
+named heterogeneity profile (homogeneous | mild | stragglers | mobile).
 """
 
 from __future__ import annotations
@@ -34,6 +41,21 @@ def main():
     ap.add_argument("--fedtune", action="store_true")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--runtime", choices=("sync", "async", "buffered"),
+                    default="sync")
+    ap.add_argument("--het", default="homogeneous",
+                    help="heterogeneity profile (homogeneous | mild | "
+                         "stragglers | mobile)")
+    ap.add_argument("--selection", default="random",
+                    choices=("random", "guided", "smallest", "deadline"))
+    ap.add_argument("--deadline-quantile", type=float, default=1.0,
+                    help="sync: cut stragglers above this completion "
+                         "quantile")
+    ap.add_argument("--buffer-k", type=int, default=8,
+                    help="buffered: updates aggregated per flush")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5)
+    ap.add_argument("--batched", action="store_true",
+                    help="vmapped cohort execution (sync runtime)")
     args = ap.parse_args()
 
     if args.mode == "mesh":
@@ -64,28 +86,40 @@ def main():
     pref = Preference(a, b, g, d)
     tuner = (FedTune(FedTuneConfig(preference=pref),
                      HyperParams(args.m, args.e)) if args.fedtune else None)
+    from repro.runtime import RuntimeConfig, sample_fleet
+    fleet = (None if args.het == "homogeneous"
+             else sample_fleet(args.het, dataset.n_clients, seed=0))
+    rtcfg = RuntimeConfig(
+        mode=args.runtime, deadline_quantile=args.deadline_quantile,
+        buffer_k=args.buffer_k, staleness_alpha=args.staleness_alpha,
+        batched=args.batched)
     server = FLServer(
         model, dataset, get_aggregator(args.aggregator),
         get_optimizer("sgd", 0.03, momentum=0.9),
         CostModel(flops_per_example=2 * n_params, param_count=n_params),
         FLConfig(m=args.m, e=args.e, batch_size=10,
                  target_accuracy=args.target, max_rounds=args.rounds,
-                 log_every=max(args.rounds // 20, 1)),
-        tuner=tuner)
+                 log_every=max(args.rounds // 20, 1),
+                 selection=args.selection),
+        tuner=tuner, fleet=fleet, runtime_config=rtcfg)
     res = server.run()
     c = res.total_cost
     print(f"\ndone: rounds={res.rounds} acc={res.final_accuracy:.3f} "
-          f"M={res.final_m} E={res.final_e:g}")
+          f"M={res.final_m} E={res.final_e:g} t_sim={res.sim_time:.4g}")
     print(f"CompT={c.comp_t:.4g} TransT={c.trans_t:.4g} "
           f"CompL={c.comp_l:.4g} TransL={c.trans_l:.4g}")
     if args.checkpoint:
         from repro.checkpoint import save_checkpoint
-        # re-init to get the final params? server returns history only;
-        # checkpoint the cost/trace record
-        save_checkpoint(args.checkpoint, {
-            "final_accuracy": res.final_accuracy,
-            "costs": list(c.as_tuple()),
-        }, step=res.rounds)
+        # final params come back in FLResult; checkpoint them with the
+        # run's scalar summary as metadata
+        save_checkpoint(args.checkpoint, res.params, step=res.rounds,
+                        metadata={
+                            "final_accuracy": res.final_accuracy,
+                            "costs": list(c.as_tuple()),
+                            "runtime": args.runtime,
+                            "het": args.het,
+                            "sim_time": res.sim_time,
+                        })
         print(f"checkpoint written to {args.checkpoint}")
 
 

@@ -358,7 +358,8 @@ def _prefill_block(p, cfg: ModelConfig, spec, x, positions, st, *,
         if spec.ffn == FFN_DENSE:
             x = x + ffn_mod.mlp(p["ffn"], h2, cfg.act)
         else:
-            out, _ = ffn_mod.moe_ffn(p["ffn"], h2, cfg.moe, cfg.act)
+            # serving path: drop-free MoE (see decode_step for rationale)
+            out, _ = ffn_mod.moe_ffn_dense(p["ffn"], h2, cfg.moe, cfg.act)
             x = x + out
     return shard_bse(x), st
 
@@ -454,7 +455,12 @@ def decode_step(params, cfg: ModelConfig, token, pos, cache):
             if spec.ffn == FFN_DENSE:
                 x = x + ffn_mod.mlp(p["ffn"], h2, cfg.act)
             else:
-                out, _ = ffn_mod.moe_ffn(p["ffn"], h2, cfg.moe, cfg.act)
+                # Serving uses the drop-free masked-dense MoE: capacity-based
+                # dispatch drops tokens as a function of BATCH composition,
+                # which would make a decoded token's value depend on what
+                # else is in flight.  At decode t = B tokens the dense path
+                # is also cheaper than materializing (E, C, d) buffers.
+                out, _ = ffn_mod.moe_ffn_dense(p["ffn"], h2, cfg.moe, cfg.act)
                 x = x + out
         new_layers.append(st)
     logits = _unembed(params, cfg, x)

@@ -219,7 +219,8 @@ def _decode_block(lp, cfg, spec, x, pos, st, enc_out, enc_pos):
         if spec.ffn == FFN_DENSE:
             x = x + ffn_mod.mlp(lp["ffn"], h2, cfg.act)
         else:
-            out, _ = ffn_mod.moe_ffn(lp["ffn"], h2, cfg.moe, cfg.act)
+            # drop-free MoE on the serving path (see lm.decode_step)
+            out, _ = ffn_mod.moe_ffn_dense(lp["ffn"], h2, cfg.moe, cfg.act)
             x = x + out
     return x, st
 

@@ -1,0 +1,14 @@
+"""Event-driven heterogeneous FL runtime.
+
+Per-client device profiles (speed / bandwidth / availability / dropout), a
+virtual-clock event queue, three execution modes (sync with straggler
+cutoff, FedAsync-style staleness-weighted async, FedBuff-style buffered
+aggregation), and a vmapped batched client-execution path.
+"""
+
+from repro.runtime.batched import batched_local_train  # noqa: F401
+from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig  # noqa: F401
+from repro.runtime.events import EventQueue, VirtualClock  # noqa: F401
+from repro.runtime.profiles import (PROFILES, DeviceClass, Fleet,  # noqa: F401
+                                    HeterogeneityProfile, get_profile,
+                                    homogeneous_fleet, sample_fleet)

@@ -1,0 +1,163 @@
+"""Vectorized client execution: run a whole cohort's local training as ONE
+compiled step sequence instead of a Python loop over clients.
+
+The sequential path (federated/client.py) dispatches T_k jitted micro-steps
+per client; at M >= 16 participants the Python/dispatch overhead dominates
+CPU wall-clock.  Here the cohort is padded to a common step count T = max_k
+T_k, client batches are stacked into (T, M, B, ...) arrays, and a single
+``lax.scan`` over steps runs a ``vmap`` over clients inside — the per-step
+matmuls become batched matmuls over the cohort, and the interpreter is out
+of the loop.  Clients that run out of real batches keep computing on padding
+but their params/optimizer state are frozen by a step mask, so results match
+the sequential loop exactly (up to float reassociation).
+
+Padding waste is bounded by SIZE BUCKETING: clients are grouped by their
+step count rounded up to the next power of two and each bucket runs as its
+own cohort, so a single data-rich straggler (lognormal client sizes have a
+long tail) cannot force the whole cohort to its step count — within a
+bucket, padding is at most 2x, and the pow2 rounding keeps the set of
+compiled (T, M) shapes small across rounds.
+
+Batch order per client comes from the same ``client_batches`` generator and
+the same rng stream as the sequential path (streams are materialized in
+client order BEFORE bucketing), so the two paths are update-for-update
+comparable (tests/test_runtime.py pins the parity).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import client_batches
+from repro.federated.aggregation import ClientUpdate
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer
+
+_batched_step_cache = {}
+
+
+def _make_cohort_fn(model: Model, optimizer: Optimizer, prox_mu: float):
+    key = (id(model), id(optimizer), prox_mu)
+    if key in _batched_step_cache:
+        return _batched_step_cache[key]
+
+    def loss(params, batch, global_params):
+        l, metrics = model.loss_fn(params, batch)
+        if prox_mu > 0.0:
+            sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
+                jax.tree.leaves(params), jax.tree.leaves(global_params)))
+            l = l + 0.5 * prox_mu * sq
+        return l, metrics
+
+    def one_client(params, opt_state, bx, by, bm, global_params):
+        batch = {"x": bx, "y": by, "mask": bm}
+        (l, _), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch, global_params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, l
+
+    @jax.jit
+    def run_cohort(params_b, opt_b, xs, ys, masks, active, global_params):
+        """xs: (T, M, B, ...); active: (T, M) bool step mask."""
+
+        def scan_step(carry, inp):
+            params_b, opt_b, last_loss = carry
+            bx, by, bm, act = inp
+            new_p, new_o, l = jax.vmap(
+                one_client, in_axes=(0, 0, 0, 0, 0, None))(
+                    params_b, opt_b, bx, by, bm, global_params)
+
+            def keep(new, old):
+                gate = act.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(gate, new, old)
+
+            params_b = jax.tree.map(keep, new_p, params_b)
+            opt_b = jax.tree.map(keep, new_o, opt_b)
+            last_loss = jnp.where(act, l, last_loss)
+            return (params_b, opt_b, last_loss), None
+
+        m = active.shape[1]
+        init = (params_b, opt_b, jnp.zeros((m,), jnp.float32))
+        (params_b, opt_b, last_loss), _ = jax.lax.scan(
+            scan_step, init, (xs, ys, masks, active))
+        return params_b, last_loss
+
+    _batched_step_cache[key] = run_cohort
+    return run_cohort
+
+
+def _stack_streams(streams, batch_size: int, t_pad: int):
+    """Pad a bucket's batch streams into (T, M, B, ...) arrays."""
+    m = len(streams)
+    bx0, by0, _ = streams[0][0]
+    feat_shape = bx0.shape[1:]
+    xs = np.zeros((t_pad, m, batch_size) + feat_shape, np.float32)
+    ys = np.zeros((t_pad, m, batch_size), by0.dtype)
+    masks = np.zeros((t_pad, m, batch_size), np.bool_)
+    active = np.zeros((t_pad, m), np.bool_)
+    for i, stream in enumerate(streams):
+        for t, (bx, by, bm) in enumerate(stream):
+            xs[t, i] = bx
+            ys[t, i] = by
+            masks[t, i] = bm
+            active[t, i] = True
+    return xs, ys, masks, active
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def batched_local_train(model: Model, global_params,
+                        data: Sequence[Tuple[np.ndarray, np.ndarray]], *,
+                        passes: float, batch_size: int, optimizer: Optimizer,
+                        rng: np.random.Generator, prox_mu: float = 0.0,
+                        client_ids: Optional[Sequence[int]] = None
+                        ) -> List[ClientUpdate]:
+    """Train all clients in ``data`` from ``global_params`` concurrently.
+    Returns one ClientUpdate per client (in input order), matching
+    ``local_train`` run sequentially with the same rng."""
+    run_cohort = _make_cohort_fn(model, optimizer, prox_mu)
+    # rng order must match the sequential path: materialize in client order
+    streams = [list(client_batches(x, y, batch_size, passes, rng))
+               for x, y in data]
+    n_steps = [len(s) for s in streams]
+    assert max(n_steps) > 0, "cohort with zero local steps"
+
+    # size-bucket by pow2-rounded step count to bound padding waste
+    buckets = {}
+    for i, t in enumerate(n_steps):
+        if t == 0:
+            continue
+        buckets.setdefault(_pow2(t), []).append(i)
+
+    params_out: List[Any] = [global_params] * len(data)  # 0-step clients
+    loss_out = np.zeros(len(data), np.float64)
+    for t_pad in sorted(buckets):
+        idx = buckets[t_pad]
+        xs, ys, masks, active = _stack_streams(
+            [streams[i] for i in idx], batch_size, t_pad)
+        m = len(idx)
+        params_b = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (m,) + p.shape), global_params)
+        opt_b = jax.vmap(optimizer.init)(params_b)
+        params_b, last_loss = run_cohort(
+            params_b, opt_b, jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(masks), jnp.asarray(active), global_params)
+        last_loss = np.asarray(last_loss)
+        for j, i in enumerate(idx):
+            params_out[i] = jax.tree.map(lambda p, j=j: p[j], params_b)
+            loss_out[i] = float(last_loss[j])
+
+    updates = []
+    for i, (x, y) in enumerate(data):
+        cid = int(client_ids[i]) if client_ids is not None else -1
+        updates.append(ClientUpdate(
+            params=params_out[i], n_examples=len(y), n_steps=n_steps[i],
+            last_loss=loss_out[i], client_id=cid))
+    return updates

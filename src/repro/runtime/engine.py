@@ -1,0 +1,395 @@
+"""Event-driven FL runtime: sync / async / buffered execution over a
+heterogeneous device fleet on a virtual clock.
+
+The engine separates *what* is computed (client local training, aggregation,
+FedTune decisions — all shared with the legacy ``FLServer`` loop) from *when*
+results arrive (per-client simulated wall-clock from the fleet's device
+profiles).  Three execution policies:
+
+  sync     — rounds with a deadline: the server dispatches M clients, waits
+             until an absolute deadline / completion quantile, aggregates
+             whatever arrived, and cuts the stragglers.  With no deadline
+             over a homogeneous fleet this IS the paper's loop (verified in
+             tests/test_runtime.py).
+  async    — FedAsync: every arrival is applied immediately with a
+             staleness-discounted mixing rate; the server model version
+             advances per update and M acts as the in-flight concurrency.
+  buffered — FedBuff: arrivals accumulate staleness-weighted *deltas* into a
+             K-slot buffer which is flushed through the ``fed_aggregate``
+             Pallas kernel; M is the concurrency, K the buffer size.
+
+Timing model (virtual seconds; unit-rate reference devices keep the numbers
+in the same scale as the paper's eqs. 2-5): a dispatched client downloads
+the model, computes ``E`` passes at its device speed, and uploads its update
+(scaled by the compression factor).  Availability is sampled per dispatch
+(unavailable clients are replaced), dropout per round (the work is done and
+counted, but the update never arrives).  All stochasticity flows from two
+seeded generators — the server rng (selection + batch order, shared with the
+legacy loop) and a dedicated system rng (availability/dropout) — so a run is
+bit-reproducible from its seeds.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.tuner import HyperParams
+from repro.federated.aggregation import (FedBuffAggregator,
+                                         apply_async_update)
+from repro.federated.compression import upload_factor
+from repro.federated.server import FLResult, FLServer, RoundRecord
+from repro.runtime.events import ARRIVAL, DROPOUT, EventQueue, VirtualClock
+from repro.runtime.profiles import Fleet, homogeneous_fleet
+
+
+@dataclass
+class RuntimeConfig:
+    mode: str = "sync"                 # sync | async | buffered
+    deadline: Optional[float] = None   # sync: absolute round deadline (virtual s)
+    deadline_quantile: float = 1.0     # sync: cut stragglers above this
+                                       # completion quantile (1.0 = wait for all)
+    min_updates: int = 1               # sync: never aggregate fewer arrivals
+    buffer_k: int = 8                  # buffered: updates per flush
+    staleness_alpha: float = 0.5       # async/buffered: s(tau) exponent
+    staleness_kind: str = "polynomial"
+    async_mix: float = 0.6             # async: FedAsync mixing rate
+    server_lr: float = 1.0             # buffered: flush scale
+    batched: bool = False              # sync: vmapped cohort execution
+    system_seed: int = 0               # availability/dropout stream
+
+
+@dataclass
+class _InFlight:
+    client_id: int
+    params: Any            # global params snapshot at dispatch
+    version: int           # server model version at dispatch
+    e: float               # local passes the client was asked to run
+    n_examples: int
+    comp_time: float
+    trans_time: float
+
+
+class EventDrivenRuntime:
+    """Drives one FLServer's components under a virtual clock."""
+
+    def __init__(self, server: FLServer, fleet: Optional[Fleet] = None,
+                 config: Optional[RuntimeConfig] = None):
+        self.srv = server
+        self.rt = config or RuntimeConfig()
+        self.fleet = fleet or homogeneous_fleet(server.dataset.n_clients)
+        assert self.fleet.n_clients == server.dataset.n_clients
+        self.sys_rng = np.random.default_rng(self.rt.system_seed)
+        self.clock = VirtualClock()
+        self.queue = EventQueue()
+        cm = server.cost_model
+        self._c1 = cm.train_flops_per_example
+        self._uf = upload_factor(server.config.compression)
+        self._down, self._up = cm.traffic_halves(self._uf)
+        if self.rt.batched and (self.rt.mode != "sync"
+                                or server.config.compression):
+            print("runtime: batched execution applies to the sync mode "
+                  "without upload compression; using the sequential "
+                  "client loop", flush=True)
+
+    # ------------------------------------------------------------------
+    # timing primitives
+    # ------------------------------------------------------------------
+    def _comp_time(self, cid: int, n_examples: int, e: float) -> float:
+        return self.fleet.comp_time(cid, self._c1 * e * n_examples)
+
+    def _trans_time(self, cid: int) -> float:
+        return self.fleet.trans_time(cid, self._down, self._up)
+
+    def _available(self, cid: int) -> bool:
+        a = float(self.fleet.availability[cid])
+        return a >= 1.0 or self.sys_rng.random() < a
+
+    def _drops(self, cid: int) -> bool:
+        d = float(self.fleet.dropout[cid])
+        return d > 0.0 and self.sys_rng.random() < d
+
+    # ------------------------------------------------------------------
+    def run(self, params=None) -> FLResult:
+        cfg = self.srv.config
+        if params is None:
+            params = self.srv.model.init(jax.random.PRNGKey(cfg.seed))
+        if self.rt.mode == "sync":
+            return self._run_sync(params)
+        if self.rt.mode in ("async", "buffered"):
+            return self._run_event_loop(params)
+        raise KeyError(f"unknown runtime mode {self.rt.mode!r}")
+
+    # ------------------------------------------------------------------
+    # sync: deadline rounds with straggler cutoff
+    # ------------------------------------------------------------------
+    def _run_sync(self, params) -> FLResult:
+        srv, cfg, rt = self.srv, self.srv.config, self.rt
+        hp = HyperParams(m=cfg.m, e=cfg.e)
+        history: List[RoundRecord] = []
+        accuracy = 0.0
+        reached = False
+
+        for r in range(cfg.max_rounds):
+            t0 = time.perf_counter()
+            m = min(hp.m, srv.dataset.n_clients)
+            participants = [int(c) for c in srv.selector.select(m)]
+            active = [c for c in participants if self._available(c)]
+            # replace unavailable clients (bounded retries) so sync rounds
+            # run at the same effective M as the async modes hold in flight
+            tried = set(participants)
+            for _ in range(5):
+                if len(active) >= m or len(tried) >= srv.dataset.n_clients:
+                    break
+                k = min(srv.dataset.n_clients, m + len(tried))
+                for cid in (int(c) for c in srv.selector.select(k)):
+                    if len(active) >= m:
+                        break
+                    if cid in tried:
+                        continue
+                    tried.add(cid)
+                    if self._available(cid):
+                        active.append(cid)
+
+            # inclusion is a pure function of fleet timing, client sizes,
+            # and the dropout draws — decide it BEFORE training so cut
+            # stragglers and dropouts cost only virtual time, not host
+            # wall-clock (their simulated work is still charged below)
+            sizes = [int(srv.dataset.client_sizes[c]) for c in active]
+            comp = [self._comp_time(c, n, hp.e) for c, n in zip(active, sizes)]
+            trans = [self._trans_time(c) for c in active]
+            total = [c + t for c, t in zip(comp, trans)]
+            survived = [not self._drops(c) for c in active]
+
+            # deadline: absolute budget or completion quantile over the cohort
+            start = self.clock.now
+            deadline = np.inf
+            if rt.deadline is not None:
+                deadline = rt.deadline
+            elif rt.deadline_quantile < 1.0 and total:
+                deadline = float(np.quantile(total, rt.deadline_quantile))
+            order = np.argsort(np.asarray(total, np.float64),
+                               kind="stable") if total else []
+            chosen = set()             # indices into active, by arrival order
+            for i in order:
+                i = int(i)
+                if survived[i] and (total[i] <= deadline
+                                    or len(chosen) < rt.min_updates):
+                    chosen.add(i)
+            # train + aggregate in dispatch order (matches the legacy loop
+            # exactly when nothing is cut)
+            included = [i for i in range(len(active)) if i in chosen]
+            cut_any = len(included) < sum(survived)
+            if included:
+                waited = max(total[i] for i in included)
+                round_time = max(deadline, waited) if (
+                    cut_any and np.isfinite(deadline)) else waited
+            else:
+                round_time = deadline if np.isfinite(deadline) else (
+                    max(total) if total else 0.0)
+            self.clock.advance_to(start + round_time)
+
+            if included:
+                train_cids = [active[i] for i in included]
+                if rt.batched and not cfg.compression:
+                    updates, _ = self._batched_cohort(params, train_cids,
+                                                      hp.e)
+                else:
+                    updates = [srv._client_update(params, cid, hp.e)[0]
+                               for cid in train_cids]
+                params = srv.aggregator(params, updates)
+            round_cost = srv.cost_model.add_timed_round(
+                comp_time=max((comp[i] for i in included), default=0.0),
+                trans_time=max((trans[i] for i in included), default=0.0),
+                comp_load=self._c1 * hp.e * float(sum(sizes)),
+                trans_load=(self._down * len(active)
+                            + self._up * len(included)),
+            )
+
+            if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+                accuracy = srv._evaluate(params)
+            wall = time.perf_counter() - t0
+            history.append(RoundRecord(r, hp.m, hp.e, accuracy, round_cost,
+                                       wall, sim_time=self.clock.now,
+                                       n_updates=len(included)))
+            if cfg.log_every and (r + 1) % cfg.log_every == 0:
+                print(f"  round {r+1:4d}  acc={accuracy:.4f}  M={hp.m} "
+                      f"E={hp.e:g}  arrived={len(included)}/{len(active)} "
+                      f"t_sim={self.clock.now:.3g}", flush=True)
+            if accuracy >= cfg.target_accuracy:
+                reached = True
+                break
+            hp = srv.tuner.on_round(r, accuracy, round_cost,
+                                    srv.cost_model.total, hp)
+            hp = hp.clamped(srv.dataset.n_clients, 100.0)
+
+        return FLResult(
+            reached_target=reached, rounds=len(history),
+            final_accuracy=accuracy,
+            total_cost=srv.cost_model.total.copy(), history=history,
+            final_m=hp.m, final_e=hp.e, params=params,
+            sim_time=self.clock.now)
+
+    def _batched_cohort(self, params, active: List[int], e: float):
+        from repro.runtime.batched import batched_local_train
+        srv = self.srv
+        data = [srv.dataset.client_data(c) for c in active]
+        updates = batched_local_train(
+            srv.model, params, data, passes=e,
+            batch_size=srv.config.batch_size, optimizer=srv.optimizer,
+            rng=srv.rng, prox_mu=srv.config.prox_mu, client_ids=active)
+        sizes = [len(y) for _, y in data]
+        for upd, n in zip(updates, sizes):
+            srv.selector.update(upd.client_id, upd.last_loss, n)
+        return updates, sizes
+
+    # ------------------------------------------------------------------
+    # async / buffered: a true event loop over the virtual clock
+    # ------------------------------------------------------------------
+    def _run_event_loop(self, params) -> FLResult:
+        srv, cfg, rt = self.srv, self.srv.config, self.rt
+        hp = HyperParams(m=cfg.m, e=cfg.e)
+        history: List[RoundRecord] = []
+        accuracy = 0.0
+        reached = False
+        version = 0
+        inflight: Dict[int, _InFlight] = {}
+        buffer = FedBuffAggregator(
+            buffer_k=rt.buffer_k, server_lr=rt.server_lr,
+            staleness_alpha=rt.staleness_alpha,
+            staleness_kind=rt.staleness_kind)
+        # per-aggregation accounting accumulators
+        pend_comp, pend_trans = [], []
+        pend_comp_load = pend_trans_load = 0.0
+        last_agg_clock = 0.0
+        last_wall = time.perf_counter()
+
+        def dispatch(cid: int, now: float):
+            n = int(srv.dataset.client_sizes[cid])
+            comp = self._comp_time(cid, n, hp.e)
+            trans = self._trans_time(cid)
+            inflight[cid] = _InFlight(cid, params, version, hp.e, n,
+                                      comp, trans)
+            kind = DROPOUT if self._drops(cid) else ARRIVAL
+            self.queue.push(now + comp + trans, kind, client_id=cid)
+
+        def fill_concurrency(now: float):
+            """Top up in-flight clients to M.  The selector is asked for a
+            cohort large enough to survive the in-flight exclusion, so
+            deterministic rankers (deadline/guided/smallest) hand out their
+            next-best candidates instead of re-proposing the one client
+            already dispatched (which would collapse concurrency to 1)."""
+            target = min(hp.m, srv.dataset.n_clients)
+            for _ in range(5):               # availability retry passes
+                need = target - len(inflight)
+                if need <= 0:
+                    return
+                k = min(srv.dataset.n_clients, need + len(inflight))
+                candidates = [int(c) for c in srv.selector.select(k)
+                              if int(c) not in inflight]
+                for cid in candidates:
+                    if len(inflight) >= target:
+                        return
+                    if self._available(cid):
+                        dispatch(cid, now)
+            # deadlock guard: nothing in flight and nothing queued means the
+            # simulation would halt — model a persistent retry succeeding
+            if not inflight and not self.queue:
+                cohort = [int(c) for c in srv.selector.select(1)]
+                if cohort:
+                    dispatch(cohort[0], now)
+
+        fill_concurrency(0.0)
+
+        while self.queue and len(history) < cfg.max_rounds and not reached:
+            ev = self.queue.pop()
+            self.clock.advance_to(ev.time)
+            fl = inflight.pop(ev.client_id)
+
+            # traffic/compute loads: download always happened; compute too
+            # (a dropout dies on the way back up, after the work was spent)
+            pend_comp_load += self._c1 * fl.e * fl.n_examples
+            pend_trans_load += self._down
+            if ev.kind == DROPOUT:
+                fill_concurrency(self.clock.now)
+                continue
+            pend_trans_load += self._up
+            pend_comp.append(fl.comp_time)
+            pend_trans.append(fl.trans_time)
+
+            upd, _n = srv._client_update(fl.params, fl.client_id, fl.e)
+            staleness = version - fl.version
+
+            aggregated = False
+            if rt.mode == "async":
+                params = apply_async_update(
+                    params, upd.params, mix=rt.async_mix,
+                    staleness=staleness, alpha=rt.staleness_alpha,
+                    kind=rt.staleness_kind)
+                aggregated = True
+            else:  # buffered
+                delta = jax.tree.map(lambda a, b: a - b, upd.params,
+                                     fl.params)
+                buffer.add(delta, staleness)
+                if buffer.full:
+                    params = buffer.flush(params)
+                    aggregated = True
+
+            if aggregated:
+                version += 1
+                r = len(history)
+                # time overheads: the virtual clock advance since the last
+                # aggregation, split by the contributing arrivals' own
+                # compute/transfer ratio (exact in the one-arrival case)
+                dt = self.clock.now - last_agg_clock
+                csum, tsum = sum(pend_comp), sum(pend_trans)
+                frac = csum / (csum + tsum) if (csum + tsum) > 0 else 0.0
+                round_cost = srv.cost_model.add_timed_round(
+                    comp_time=dt * frac, trans_time=dt * (1.0 - frac),
+                    comp_load=pend_comp_load, trans_load=pend_trans_load)
+                pend_comp, pend_trans = [], []
+                pend_comp_load = pend_trans_load = 0.0
+                last_agg_clock = self.clock.now
+
+                if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+                    accuracy = srv._evaluate(params)
+                now_wall = time.perf_counter()
+                history.append(RoundRecord(
+                    r, hp.m, hp.e, accuracy, round_cost,
+                    now_wall - last_wall, sim_time=self.clock.now,
+                    n_updates=(1 if rt.mode == "async" else rt.buffer_k)))
+                last_wall = now_wall
+                if cfg.log_every and (r + 1) % cfg.log_every == 0:
+                    print(f"  agg {r+1:4d}  acc={accuracy:.4f}  M={hp.m} "
+                          f"E={hp.e:g}  stale={staleness} "
+                          f"t_sim={self.clock.now:.3g}", flush=True)
+                if accuracy >= cfg.target_accuracy:
+                    reached = True
+                    break
+                hp = srv.tuner.on_round(r, accuracy, round_cost,
+                                        srv.cost_model.total, hp)
+                hp = hp.clamped(srv.dataset.n_clients, 100.0)
+
+            fill_concurrency(self.clock.now)
+
+        # arrivals after the last aggregation (including a partially filled
+        # FedBuff buffer) did real downloads and compute the clock charged
+        # for — account their loads even though no further flush happens
+        if pend_comp_load > 0.0 or pend_trans_load > 0.0:
+            dt = self.clock.now - last_agg_clock
+            csum, tsum = sum(pend_comp), sum(pend_trans)
+            frac = csum / (csum + tsum) if (csum + tsum) > 0 else 0.0
+            srv.cost_model.add_timed_round(
+                comp_time=dt * frac, trans_time=dt * (1.0 - frac),
+                comp_load=pend_comp_load, trans_load=pend_trans_load)
+
+        return FLResult(
+            reached_target=reached, rounds=len(history),
+            final_accuracy=accuracy,
+            total_cost=srv.cost_model.total.copy(), history=history,
+            final_m=hp.m, final_e=hp.e, params=params,
+            sim_time=self.clock.now)

@@ -1,0 +1,63 @@
+"""Virtual-clock event queue for the heterogeneous FL runtime.
+
+A tiny discrete-event core: events carry a virtual timestamp and are popped
+in time order with a monotonically increasing sequence number breaking ties,
+so two events at the same instant always replay in push order — the whole
+simulation is a pure function of its seeds.  The clock never goes backwards;
+popping an event advances it.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List
+
+# event kinds
+ARRIVAL = "arrival"          # a client's update reaches the server
+DROPOUT = "dropout"          # a client died mid-round; its work is lost
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    client_id: int = field(compare=False, default=-1)
+
+
+class VirtualClock:
+    """Monotonic simulated time."""
+
+    def __init__(self):
+        self._now = 0.0
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float):
+        assert t >= self._now - 1e-12, f"clock went backwards: {t} < {self._now}"
+        self._now = max(self._now, t)
+
+
+class EventQueue:
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, client_id: int = -1) -> Event:
+        ev = Event(time=float(time), seq=self._seq, kind=kind,
+                   client_id=client_id)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,156 @@
+"""Per-client device profiles for the heterogeneous runtime.
+
+The paper (and ``core/costs.py``) assumes homogeneous clients, so CompT is
+``C1 * E * max_k n_k``: every client computes at unit speed and transfers at
+unit bandwidth.  A ``Fleet`` generalizes this: each client k gets a compute
+``speed_k`` (relative FLOP/s), link bandwidths ``up_bw_k`` / ``down_bw_k``
+(relative bytes/s), an availability probability (chance the client answers a
+dispatch at all), and a dropout probability (chance it dies mid-round after
+doing the work).  Virtual times are expressed in the same units as the
+paper's overheads: with the reference rates at 1.0, a homogeneous unit fleet
+reproduces eqs. (2)-(5) exactly — compute time IS ``C1 * E * n_k`` and
+transfer time IS ``C2`` — so the legacy cost model is the special case.
+
+Named profiles (``--het <name>``):
+  homogeneous — unit fleet; the paper's setting.
+  mild        — 3 device classes (1.5x/1x/0.5x) with 20% lognormal jitter.
+  stragglers  — 85% unit devices, 15% 10x-slower tail (the FedBuff regime).
+  mobile      — slow, narrow links, flaky availability (cross-device FL).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DeviceClass:
+    """One hardware tier inside a profile."""
+    name: str
+    speed: float          # relative compute rate (1.0 = reference device)
+    bandwidth: float      # relative link rate (applied to up and down)
+    weight: float         # sampling probability of this tier
+
+
+@dataclass(frozen=True)
+class HeterogeneityProfile:
+    name: str
+    classes: Tuple[DeviceClass, ...]
+    speed_jitter: float = 0.0     # lognormal sigma multiplied onto speed
+    availability: float = 1.0     # P(client answers a dispatch)
+    dropout: float = 0.0          # P(client dies mid-round; work lost)
+
+    def __post_init__(self):
+        total = sum(c.weight for c in self.classes)
+        assert abs(total - 1.0) < 1e-6, "class weights must sum to 1"
+
+
+PROFILES: Dict[str, HeterogeneityProfile] = {
+    "homogeneous": HeterogeneityProfile(
+        name="homogeneous",
+        classes=(DeviceClass("ref", 1.0, 1.0, 1.0),),
+    ),
+    "mild": HeterogeneityProfile(
+        name="mild",
+        classes=(DeviceClass("fast", 1.5, 1.5, 0.3),
+                 DeviceClass("mid", 1.0, 1.0, 0.5),
+                 DeviceClass("slow", 0.5, 0.6, 0.2)),
+        speed_jitter=0.2, availability=0.95, dropout=0.02,
+    ),
+    "stragglers": HeterogeneityProfile(
+        name="stragglers",
+        classes=(DeviceClass("ref", 1.0, 1.0, 0.85),
+                 DeviceClass("straggler", 0.1, 0.3, 0.15)),
+        speed_jitter=0.1, availability=1.0, dropout=0.05,
+    ),
+    "mobile": HeterogeneityProfile(
+        name="mobile",
+        classes=(DeviceClass("hi", 0.8, 0.5, 0.25),
+                 DeviceClass("mid", 0.5, 0.3, 0.5),
+                 DeviceClass("lo", 0.2, 0.1, 0.25)),
+        speed_jitter=0.3, availability=0.7, dropout=0.1,
+    ),
+}
+
+
+@dataclass
+class Fleet:
+    """Sampled per-client device parameters (vectorized as arrays)."""
+    profile: HeterogeneityProfile
+    speed: np.ndarray         # (K,) relative FLOP/s
+    up_bw: np.ndarray         # (K,) relative upload bytes/s
+    down_bw: np.ndarray       # (K,) relative download bytes/s
+    availability: np.ndarray  # (K,) P(answers dispatch)
+    dropout: np.ndarray       # (K,) P(dies mid-round)
+    ref_flops_per_s: float = 1.0   # unit rates keep times in cost units
+    ref_bytes_per_s: float = 1.0
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.speed)
+
+    def comp_time(self, cid: int, flops: float) -> float:
+        """Virtual seconds to run ``flops`` on client ``cid``."""
+        return float(flops) / (self.ref_flops_per_s * float(self.speed[cid]))
+
+    def trans_time(self, cid: int, down_units: float, up_units: float) -> float:
+        """Virtual seconds to download + upload the given traffic."""
+        return (float(down_units) / (self.ref_bytes_per_s
+                                     * float(self.down_bw[cid]))
+                + float(up_units) / (self.ref_bytes_per_s
+                                     * float(self.up_bw[cid])))
+
+    def est_round_time(self, cid: int, n_examples: float, passes: float,
+                       flops_per_example: float, down_units: float,
+                       up_units: float) -> float:
+        """Deadline-aware selection signal: expected dispatch->arrival time
+        (download + compute + upload — a fast CPU behind a narrow link is
+        correctly ranked slow)."""
+        return (self.comp_time(cid, flops_per_example * passes * n_examples)
+                + self.trans_time(cid, down_units, up_units))
+
+    def is_homogeneous(self) -> bool:
+        return (np.all(self.speed == self.speed[0])
+                and np.all(self.up_bw == self.up_bw[0])
+                and np.all(self.down_bw == self.down_bw[0])
+                and np.all(self.availability >= 1.0)
+                and np.all(self.dropout <= 0.0))
+
+
+def sample_fleet(profile: "HeterogeneityProfile | str", n_clients: int,
+                 *, seed: int = 0) -> Fleet:
+    """Draw per-client devices from a profile (deterministic in seed)."""
+    if isinstance(profile, str):
+        profile = get_profile(profile)
+    rng = np.random.default_rng(seed)
+    weights = np.array([c.weight for c in profile.classes])
+    tier = rng.choice(len(profile.classes), size=n_clients, p=weights)
+    speed = np.array([profile.classes[t].speed for t in tier])
+    bw = np.array([profile.classes[t].bandwidth for t in tier])
+    if profile.speed_jitter > 0:
+        speed = speed * rng.lognormal(0.0, profile.speed_jitter, n_clients)
+    return Fleet(
+        profile=profile,
+        speed=speed.astype(np.float64),
+        up_bw=bw.astype(np.float64),
+        down_bw=bw.astype(np.float64),
+        availability=np.full(n_clients, profile.availability),
+        dropout=np.full(n_clients, profile.dropout),
+    )
+
+
+def homogeneous_fleet(n_clients: int) -> Fleet:
+    """The paper's setting: unit devices, always available, never dropping.
+    The sync runtime over this fleet reproduces the legacy loop exactly."""
+    return sample_fleet("homogeneous", n_clients, seed=0)
+
+
+def get_profile(name: str) -> HeterogeneityProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown profile {name!r}; known: {sorted(PROFILES)}"
+                       ) from None

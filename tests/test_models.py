@@ -71,7 +71,19 @@ def test_arch_decode_matches_forward(arch):
                                      cfg.frontend.feature_dim))
         if cfg.frontend.kind == "vision_patches":
             p_len = cfg.frontend.seq_len
-    full = model.forward(params, tokens, frontend=fe, use_kernel=False)
+    if cfg.moe is not None:
+        # The training forward's capacity-based MoE dispatch drops tokens as
+        # a function of batch composition (Switch-style overflow — for the
+        # dbrx seed the LAST token overflows a hot expert, a 0.45 logit
+        # shift), so the serving path (prefill/decode) is deliberately
+        # drop-free.  Compare against the drop-free (capacity-infinite
+        # masked-dense) forward, the semantics serving implements.
+        from repro.models import ffn as ffn_mod
+        with ffn_mod.moe_impl("dense"):
+            full = model.forward(params, tokens, frontend=fe,
+                                 use_kernel=False)
+    else:
+        full = model.forward(params, tokens, frontend=fe, use_kernel=False)
     cache = model.init_cache(B, max_len=p_len + S + 4)
     _, cache = model.prefill(params, tokens[:, :S - 1], cache, frontend=fe,
                              use_kernel=False)

@@ -1,0 +1,311 @@
+"""Tests for the event-driven heterogeneous runtime (repro.runtime):
+virtual-clock determinism, sync-mode equivalence with the legacy FLServer
+loop, staleness weighting, straggler cutoff, and batched-vs-sequential
+client-training parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel
+from repro.data.synthetic import DataSpec, make_dataset
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.federated.aggregation import (FedBuffAggregator,
+                                         apply_async_update,
+                                         staleness_weight)
+from repro.federated.client import local_train
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime import (EventQueue, RuntimeConfig, VirtualClock,
+                           batched_local_train, homogeneous_fleet,
+                           sample_fleet)
+
+
+def small_dataset(seed=1):
+    return make_dataset(DataSpec(
+        name="rt_test", n_classes=4, shape=(12,), n_train_clients=24,
+        n_test_clients=8, size_log_mean=2.5, size_log_std=0.5, seed=seed))
+
+
+def mk_server(*, rt=None, fleet=None, max_rounds=4, m=5, e=2.0,
+              selection="random"):
+    ds = small_dataset()
+    model = build_model(MLPConfig(name="mlp_rt", in_dim=12, hidden=(16,),
+                                  n_classes=4))
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    return FLServer(
+        model, ds, get_aggregator("fedavg"),
+        get_optimizer("sgd", 0.05, momentum=0.9),
+        CostModel(flops_per_example=2 * n_params, param_count=n_params),
+        FLConfig(m=m, e=e, batch_size=4, target_accuracy=0.99,
+                 max_rounds=max_rounds, eval_points=128,
+                 selection=selection),
+        fleet=fleet, runtime_config=rt)
+
+
+# ---------------------------------------------------------------------------
+# event queue / clock
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_push_order():
+    q = EventQueue()
+    q.push(2.0, "arrival", client_id=1)
+    q.push(1.0, "arrival", client_id=2)
+    q.push(1.0, "dropout", client_id=3)   # same instant: push order wins
+    popped = [q.pop() for _ in range(3)]
+    assert [e.client_id for e in popped] == [2, 3, 1]
+    assert [e.kind for e in popped] == ["arrival", "dropout", "arrival"]
+
+
+def test_virtual_clock_is_monotonic():
+    c = VirtualClock()
+    c.advance_to(3.0)
+    c.advance_to(3.0)
+    assert c.now == 3.0
+    with pytest.raises(AssertionError):
+        c.advance_to(1.0)
+
+
+def test_fleet_sampling_deterministic_and_homogeneous_is_unit():
+    a = sample_fleet("stragglers", 50, seed=7)
+    b = sample_fleet("stragglers", 50, seed=7)
+    np.testing.assert_array_equal(a.speed, b.speed)
+    assert len(set(np.round(a.speed, 6))) > 1   # actually heterogeneous
+    h = homogeneous_fleet(10)
+    assert h.is_homogeneous()
+    # unit fleet: virtual time IS the cost-model overhead
+    assert h.comp_time(0, 123.0) == 123.0
+    assert h.trans_time(0, 10.0, 5.0) == 15.0
+
+
+# ---------------------------------------------------------------------------
+# sync mode == legacy loop on a homogeneous profile
+# ---------------------------------------------------------------------------
+
+def test_sync_homogeneous_matches_legacy():
+    legacy = mk_server().run_legacy()
+    sync = mk_server().run()   # default: sync runtime over unit fleet
+    acc_l = [h.accuracy for h in legacy.history]
+    acc_s = [h.accuracy for h in sync.history]
+    np.testing.assert_allclose(acc_l, acc_s, rtol=1e-6)
+    np.testing.assert_allclose(np.array(legacy.total_cost.as_tuple()),
+                               np.array(sync.total_cost.as_tuple()),
+                               rtol=1e-9)
+    assert sync.params is not None and legacy.params is not None
+    for a, b in zip(jax.tree.leaves(legacy.params),
+                    jax.tree.leaves(sync.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # every client arrived, virtual clock advanced
+    assert all(h.n_updates == min(5, 24) for h in sync.history)
+    assert sync.sim_time > 0
+
+
+def test_sync_runtime_determinism():
+    rt = RuntimeConfig(mode="sync", deadline_quantile=0.6)
+    fleet = sample_fleet("stragglers", 24, seed=3)
+    a = mk_server(rt=rt, fleet=fleet).run()
+    b = mk_server(rt=rt, fleet=fleet).run()
+    assert [h.sim_time for h in a.history] == [h.sim_time for h in b.history]
+    assert [h.accuracy for h in a.history] == [h.accuracy for h in b.history]
+    assert [h.n_updates for h in a.history] == [h.n_updates for h in b.history]
+
+
+def test_sync_straggler_cutoff_cuts_and_is_faster():
+    fleet = sample_fleet("stragglers", 24, seed=3)
+    full = mk_server(fleet=fleet,
+                     rt=RuntimeConfig(mode="sync")).run()
+    cut = mk_server(fleet=fleet,
+                    rt=RuntimeConfig(mode="sync",
+                                     deadline_quantile=0.5)).run()
+    assert min(h.n_updates for h in cut.history) >= 1
+    # the cutoff must actually exclude stragglers in at least one round...
+    assert sum(h.n_updates for h in cut.history) < sum(
+        h.n_updates for h in full.history)
+    # ...and spend less virtual wall-clock (CompT critical path shrinks)
+    assert cut.sim_time < full.sim_time
+    assert cut.total_cost.comp_t < full.total_cost.comp_t
+
+
+# ---------------------------------------------------------------------------
+# async / buffered
+# ---------------------------------------------------------------------------
+
+def test_async_runtime_deterministic_and_progresses():
+    rt = RuntimeConfig(mode="async")
+    fleet = sample_fleet("stragglers", 24, seed=3)
+    a = mk_server(rt=rt, fleet=fleet, max_rounds=8).run()
+    b = mk_server(rt=rt, fleet=fleet, max_rounds=8).run()
+    assert a.rounds == 8
+    assert [h.sim_time for h in a.history] == [h.sim_time for h in b.history]
+    assert [h.accuracy for h in a.history] == [h.accuracy for h in b.history]
+    # virtual time is strictly increasing over aggregations
+    times = [h.sim_time for h in a.history]
+    assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+    assert a.total_cost.comp_l > 0 and a.total_cost.comp_t > 0
+
+
+def test_buffered_runtime_flushes_every_k():
+    k = 3
+    rt = RuntimeConfig(mode="buffered", buffer_k=k)
+    res = mk_server(rt=rt, fleet=sample_fleet("mild", 24, seed=3),
+                    max_rounds=5).run()
+    assert res.rounds >= 1
+    assert all(h.n_updates == k for h in res.history)
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting
+# ---------------------------------------------------------------------------
+
+def test_staleness_weight_properties():
+    assert staleness_weight(0) == 1.0
+    ws = [staleness_weight(s, alpha=0.5) for s in range(6)]
+    assert all(w2 < w1 for w1, w2 in zip(ws, ws[1:]))   # monotone decay
+    assert staleness_weight(3, kind="constant") == 1.0
+    assert staleness_weight(1, alpha=0.5, kind="hinge") == 1.0   # b = 2
+    assert staleness_weight(5, alpha=0.5, kind="hinge") < 1.0
+    assert staleness_weight(8, alpha=0.5) == pytest.approx(1.0 / 3.0)
+
+
+def test_fedbuff_flush_is_staleness_discounted_average():
+    base = {"w": jnp.zeros((4,), jnp.float32)}
+    d1 = {"w": jnp.ones((4,), jnp.float32)}
+    d2 = {"w": 3.0 * jnp.ones((4,), jnp.float32)}
+    buf = FedBuffAggregator(buffer_k=2, staleness_alpha=0.5)
+    buf.add(d1, staleness=0)     # weight 1
+    buf.add(d2, staleness=3)     # weight 0.5
+    assert buf.full
+    out = buf.flush(base)
+    w1, w2 = 1.0, (1 + 3) ** -0.5
+    expect = (w1 * 1.0 + w2 * 3.0) / 2          # divide by K, not sum(w)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full(4, expect), rtol=1e-6)
+    assert len(buf) == 0         # buffer cleared
+    # the discount is absolute: a uniformly stale buffer steps SMALLER
+    # than a uniformly fresh one (normalizing by sum(w) would cancel it)
+    fresh, stale = (FedBuffAggregator(buffer_k=2, staleness_alpha=0.5)
+                    for _ in range(2))
+    for b, s in ((fresh, 0), (stale, 8)):
+        b.add(d1, staleness=s)
+        b.add(d1, staleness=s)
+    assert float(stale.flush(base)["w"][0]) < float(fresh.flush(base)["w"][0])
+
+
+def test_apply_async_update_mixes_toward_client():
+    g = {"w": jnp.zeros((3,), jnp.float32)}
+    c = {"w": jnp.ones((3,), jnp.float32)}
+    fresh = apply_async_update(g, c, mix=0.6, staleness=0)
+    np.testing.assert_allclose(np.asarray(fresh["w"]), np.full(3, 0.6),
+                               rtol=1e-6)
+    stale = apply_async_update(g, c, mix=0.6, staleness=8, alpha=0.5)
+    np.testing.assert_allclose(np.asarray(stale["w"]),
+                               np.full(3, 0.6 / 3.0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# timed cost accounting
+# ---------------------------------------------------------------------------
+
+def test_add_timed_round_accumulates():
+    cm = CostModel(flops_per_example=1e6, param_count=1e5)
+    r = cm.add_timed_round(comp_time=10.0, trans_time=2.0,
+                           comp_load=100.0, trans_load=20.0)
+    assert (r.comp_t, r.trans_t, r.comp_l, r.trans_l) == (10.0, 2.0,
+                                                          100.0, 20.0)
+    cm.add_timed_round(comp_time=5.0, trans_time=1.0,
+                       comp_load=50.0, trans_load=10.0)
+    assert cm.total.comp_t == 15.0 and cm.total.comp_l == 150.0
+    assert cm.rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# batched client execution
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_sequential_local_training():
+    srv = mk_server()
+    params = srv.model.init(jax.random.PRNGKey(0))
+    cids = [0, 3, 7, 11, 15]
+    data = [srv.dataset.client_data(c) for c in cids]
+    rng_seq = np.random.default_rng(42)
+    rng_bat = np.random.default_rng(42)
+    seq = [local_train(srv.model, params, x, y, passes=2.0, batch_size=4,
+                       optimizer=srv.optimizer, rng=rng_seq)
+           for x, y in data]
+    bat = batched_local_train(srv.model, params, data, passes=2.0,
+                              batch_size=4, optimizer=srv.optimizer,
+                              rng=rng_bat, client_ids=cids)
+    for s, b, cid in zip(seq, bat, cids):
+        assert b.client_id == cid
+        assert s.n_steps == b.n_steps
+        assert s.last_loss == pytest.approx(b.last_loss, rel=1e-5)
+        for ls, lb in zip(jax.tree.leaves(s.params),
+                          jax.tree.leaves(b.params)):
+            np.testing.assert_allclose(np.asarray(ls), np.asarray(lb),
+                                       atol=1e-5)
+
+
+def test_batched_sync_runtime_matches_sequential_sync():
+    seq = mk_server(rt=RuntimeConfig(mode="sync", batched=False)).run()
+    bat = mk_server(rt=RuntimeConfig(mode="sync", batched=True)).run()
+    np.testing.assert_allclose([h.accuracy for h in seq.history],
+                               [h.accuracy for h in bat.history], atol=1e-5)
+    np.testing.assert_allclose(np.array(seq.total_cost.as_tuple()),
+                               np.array(bat.total_cost.as_tuple()),
+                               rtol=1e-9)
+
+
+def test_fedprox_batched_parity():
+    srv = mk_server()
+    params = srv.model.init(jax.random.PRNGKey(0))
+    data = [srv.dataset.client_data(c) for c in (2, 5)]
+    rng_a, rng_b = (np.random.default_rng(9) for _ in range(2))
+    seq = [local_train(srv.model, params, x, y, passes=1.0, batch_size=4,
+                       optimizer=srv.optimizer, rng=rng_a, prox_mu=0.1)
+           for x, y in data]
+    bat = batched_local_train(srv.model, params, data, passes=1.0,
+                              batch_size=4, optimizer=srv.optimizer,
+                              rng=rng_b, prox_mu=0.1)
+    for s, b in zip(seq, bat):
+        for ls, lb in zip(jax.tree.leaves(s.params),
+                          jax.tree.leaves(b.params)):
+            np.testing.assert_allclose(np.asarray(ls), np.asarray(lb),
+                                       atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware selection
+# ---------------------------------------------------------------------------
+
+def test_deadline_selector_prefers_fast_clients():
+    fleet = sample_fleet("stragglers", 24, seed=3)
+    srv = mk_server(fleet=fleet, selection="deadline", m=6)
+    est = srv.selector.est_times   # download + compute + upload per client
+    assert len(est) == 24 and np.all(est > 0)
+    cohort = srv.selector.select(6)
+    assert len(set(int(c) for c in cohort)) == 6
+    # the exploit portion must rank among the fastest clients
+    fast_set = set(np.argsort(est)[:8].tolist())
+    exploit = [int(c) for c in cohort[:5]]   # epsilon=0.1 -> 5 exploit of 6
+    assert set(exploit) <= fast_set
+
+
+def test_async_deadline_selection_uses_multiple_clients():
+    # regression: deterministic rankers must not collapse async concurrency
+    # to a single repeatedly-dispatched client
+    rt = RuntimeConfig(mode="async")
+    fleet = sample_fleet("stragglers", 24, seed=3)
+    srv = mk_server(rt=rt, fleet=fleet, max_rounds=8, selection="deadline")
+    seen = []
+    orig = srv._client_update
+
+    def spy(params, cid, e):
+        seen.append(cid)
+        return orig(params, cid, e)
+
+    srv._client_update = spy
+    srv.run()
+    assert len(set(seen)) > 1, f"only client(s) {set(seen)} ever trained"
