@@ -12,6 +12,8 @@ suite completes on one CPU core; ``--full`` uses paper-scale datasets.
   kernel       kernel micro-benchmarks
   roofline     dry-run roofline table     (EXPERIMENTS.md source)
   runtime      heterogeneous runtime: batched cohorts + mode sweep
+  sharded_cohort  client-exec backends (sequential|batched|sharded) at
+                  M in {16, 64, 256} over the host-local device mesh
 """
 
 from __future__ import annotations
@@ -33,7 +35,7 @@ def main() -> None:
                             fedtune_aggregators, fedtune_datasets,
                             fedtune_preferences, kernel_bench,
                             measurement_sweep, model_complexity,
-                            penalty_study, roofline_report)
+                            penalty_study, roofline_report, sharded_cohort)
     from benchmarks.common import BenchSettings, emit
 
     settings = BenchSettings(full=args.full, seeds=args.seeds)
@@ -48,6 +50,7 @@ def main() -> None:
         "kernels": lambda: kernel_bench.main(settings),
         "roofline": lambda: roofline_report.main(settings),
         "runtime": lambda: async_runtime.main(settings),
+        "sharded_cohort": lambda: sharded_cohort.main(settings),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,0 +1,115 @@
+"""Benchmark: client-execution backends (sequential | batched | sharded).
+
+Per-round wall-clock of one sync cohort's local training + FedAvg
+aggregation at M in {16, 64, 256}, for each backend:
+
+  sequential — one jitted micro-step loop per client (federated/client.py)
+  batched    — whole cohort vmapped on one device (runtime/batched.py)
+  sharded    — cohort laid over a ``clients`` mesh axis with on-device
+               psum aggregation (runtime/sharded.py); skipped (emitted as
+               such) when only one device exists
+
+The sharded rows only mean anything on a multi-device mesh; on a CPU host
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src:. python -m benchmarks.run --only sharded_cohort
+
+splits the host into 8 XLA devices.  The sequential baseline is timed once
+at M=256 regardless of reps (its dispatch overhead is the thing being
+beaten; reps would only restate it).
+
+Usage: PYTHONPATH=src python benchmarks/sharded_cohort.py [--reps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_models import MLPConfig
+from repro.data.synthetic import DataSpec, make_dataset
+from repro.federated import get_aggregator
+from repro.federated.client import local_train
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime.batched import batched_local_train
+from repro.runtime.sharded import sharded_fedavg_train
+
+COHORTS = (16, 64, 256)
+
+
+def _dataset(n_clients: int):
+    return make_dataset(DataSpec(
+        name="shard_bench", n_classes=8, shape=(32,),
+        n_train_clients=n_clients, n_test_clients=8,
+        size_log_mean=2.3, size_log_std=0.4, seed=0))
+
+
+def _round_seq(model, params, data, opt, fedavg, bs):
+    rng = np.random.default_rng(0)
+    ups = [local_train(model, params, x, y, passes=1.0, batch_size=bs,
+                       optimizer=opt, rng=rng) for x, y in data]
+    return fedavg(params, ups)
+
+
+def _round_batched(model, params, data, opt, fedavg, bs):
+    ups = batched_local_train(model, params, data, passes=1.0,
+                              batch_size=bs, optimizer=opt,
+                              rng=np.random.default_rng(0))
+    return fedavg(params, ups)
+
+
+def _round_sharded(model, params, data, opt, fedavg, bs):
+    del fedavg  # aggregation is fused on device
+    return sharded_fedavg_train(model, params, data, passes=1.0,
+                                batch_size=bs, optimizer=opt,
+                                rng=np.random.default_rng(0)).params
+
+
+def main(settings=None, *, reps: int = 3):
+    del settings  # reduced scale only; the sweep is over M, not data size
+    n_dev = jax.device_count()
+    ds = _dataset(max(COHORTS))
+    model = build_model(MLPConfig(name="mlp_shard", in_dim=32, hidden=(48,),
+                                  n_classes=8))
+    opt = get_optimizer("sgd", 0.03, momentum=0.9)
+    fedavg = get_aggregator("fedavg")
+    params = model.init(jax.random.PRNGKey(0))
+    bs = 8
+    print(f"# client-execution backends over {n_dev} device(s)")
+    backends = [("seq", _round_seq), ("batched", _round_batched)]
+    if n_dev > 1:
+        backends.append(("sharded", _round_sharded))
+    else:
+        emit("sharded_cohort/sharded", 0.0,
+             "skipped: single device (set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8)")
+    for m in COHORTS:
+        data = [ds.client_data(c) for c in range(m)]
+        times = {}
+        for name, fn in backends:
+            # the sequential micro-step jit is shape-independent of M, so
+            # it only needs warming once; batched/sharded compile per
+            # bucketed (T, M) shape and need a warm pass at every M
+            if name != "seq" or m == COHORTS[0]:
+                fn(model, params, data, opt, fedavg, bs)
+            r = 1 if (name == "seq" and m >= 256) else reps
+            t0 = time.perf_counter()
+            for _ in range(r):
+                fn(model, params, data, opt, fedavg, bs)
+            times[name] = (time.perf_counter() - t0) / r
+        base = times["seq"]
+        for name, t in times.items():
+            emit(f"sharded_cohort/{name}_m{m}", t * 1e6,
+                 f"speedup_vs_seq={base / t:.2f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    main(reps=args.reps)

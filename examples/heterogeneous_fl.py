@@ -72,6 +72,10 @@ def main():
     ap.add_argument("--preference", default="0.5,0.0,0.5,0.0",
                     help="alpha,beta,gamma,delta (CompT+CompL default: "
                          "straggler-sensitive)")
+    ap.add_argument("--client-exec", default="sequential",
+                    choices=("sequential", "batched", "sharded"),
+                    help="sync-mode client execution backend (sharded "
+                         "needs a multi-device mesh)")
     args = ap.parse_args()
     pref = Preference(*(float(x) for x in args.preference.split(",")))
 
@@ -79,7 +83,8 @@ def main():
           f"{tuple(pref.as_tuple())}\n")
     kw = dict(rounds=args.rounds, m0=args.m, e0=args.e, pref=pref,
               het=args.het)
-    run_mode("sync", RuntimeConfig(mode="sync", deadline_quantile=0.7), **kw)
+    run_mode("sync", RuntimeConfig(mode="sync", deadline_quantile=0.7,
+                                   client_exec=args.client_exec), **kw)
     run_mode("async", RuntimeConfig(mode="async"), **kw)
     run_mode("buffered", RuntimeConfig(mode="buffered",
                                        buffer_k=max(args.m // 2, 1)), **kw)

@@ -21,6 +21,8 @@ from typing import Sequence
 
 from repro.core.preferences import Preference
 
+_EPS = 1e-12   # zero-baseline clamp, same convention as FedTune._comparison
+
 
 @dataclass
 class SystemCost:
@@ -43,14 +45,18 @@ class SystemCost:
 
     def weighted_relative_to(self, baseline: "SystemCost",
                              pref: Preference) -> float:
-        """Paper eq. (6): I(baseline, self). Negative => self is better."""
+        """Paper eq. (6): I(baseline, self). Negative => self is better.
+
+        A zero baseline overhead is legitimate (e.g. a compressed-upload
+        run whose window accrues no transmission), so it is clamped to
+        ``_EPS`` — the same convention as ``FedTune._comparison`` — rather
+        than asserted away."""
         terms = []
         for w, a, b in zip(pref.as_tuple(), self.as_tuple(),
                            baseline.as_tuple()):
             if w == 0.0:
                 continue
-            assert b > 0, "baseline overhead must be positive"
-            terms.append(w * (a - b) / b)
+            terms.append(w * (a - b) / max(b, _EPS))
         return float(sum(terms))
 
 

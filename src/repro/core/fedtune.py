@@ -76,12 +76,15 @@ class FedTune(Tuner):
     def on_round(self, round_idx: int, accuracy: float,
                  round_cost: SystemCost, total_cost: SystemCost,
                  current: HyperParams) -> HyperParams:
+        """Accumulate this round's overheads; trigger a decision once test
+        accuracy has improved by **at least** eps since the last decision
+        (gain >= eps, inclusive — the paper's activation convention)."""
         self.current = current
         for name in ("comp_t", "trans_t", "comp_l", "trans_l"):
             setattr(self._window_cost, name,
                     getattr(self._window_cost, name) + getattr(round_cost, name))
         gain = accuracy - self._acc_at_last_decision
-        if gain <= self.cfg.eps:
+        if gain < self.cfg.eps:
             return current
         return self._decide(accuracy, gain)
 
@@ -178,6 +181,12 @@ class FedTune(Tuner):
         return total
 
     def _step(self, delta: float) -> int:
+        """Step direction from Delta (eqs. 10/11).  Delta == 0 — every
+        weighted term cancelled, or no active preference weight saw any
+        change — is no evidence in either direction, so the hyper-parameter
+        HOLDS (step 0) rather than taking a spurious down-step."""
+        if delta == 0.0:
+            return 0
         base = 1 if delta > 0 else -1
         if not self.cfg.adaptive_step:
             return base

@@ -35,4 +35,10 @@ def compress_delta(global_params: Any, client_params: Any,
 
 
 def upload_factor(method: str | None) -> float:
-    return FACTORS[method]
+    try:
+        return FACTORS[method]
+    except KeyError:
+        valid = ", ".join(repr(k) for k in FACTORS)
+        raise ValueError(
+            f"unknown compression method {method!r}; valid methods: {valid}"
+        ) from None

@@ -28,3 +28,13 @@ def make_host_mesh():
     """A tiny mesh over whatever devices exist (tests on 1-8 CPU devices)."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_clients_mesh(n_devices: int | None = None):
+    """A 1-D mesh whose single ``clients`` axis carries the FL cohort: each
+    device owns M/D participant slots of the sharded client-execution path
+    (runtime/sharded.py).  Uses every addressable device by default; on a
+    CPU host, ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set
+    before any jax import) provides an N-device mesh."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("clients",))

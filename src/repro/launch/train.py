@@ -16,7 +16,11 @@ Usage:
 ``--runtime`` picks the execution mode of the event-driven runtime
 (sync = deadline rounds, async = FedAsync staleness weighting, buffered =
 FedBuff K-update aggregation); ``--het`` samples a device fleet from a
-named heterogeneity profile (homogeneous | mild | stragglers | mobile).
+named heterogeneity profile (homogeneous | mild | stragglers | mobile);
+``--client-exec`` picks the sync-mode client-execution backend
+(sequential | batched | sharded — sharded lays the cohort over a
+``clients`` mesh axis and needs >1 device, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 
 from __future__ import annotations
@@ -55,7 +59,14 @@ def main():
                     help="buffered: updates aggregated per flush")
     ap.add_argument("--staleness-alpha", type=float, default=0.5)
     ap.add_argument("--batched", action="store_true",
-                    help="vmapped cohort execution (sync runtime)")
+                    help="deprecated alias for --client-exec batched")
+    ap.add_argument("--client-exec", default=None,
+                    choices=("sequential", "batched", "sharded"),
+                    help="sync-mode client execution backend: sequential "
+                         "per-client loop, batched vmapped cohort, or "
+                         "sharded clients-as-mesh-axis (multi-device; on "
+                         "CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
     if args.mode == "mesh":
@@ -92,7 +103,8 @@ def main():
     rtcfg = RuntimeConfig(
         mode=args.runtime, deadline_quantile=args.deadline_quantile,
         buffer_k=args.buffer_k, staleness_alpha=args.staleness_alpha,
-        batched=args.batched)
+        client_exec=args.client_exec or
+        ("batched" if args.batched else "sequential"))
     server = FLServer(
         model, dataset, get_aggregator(args.aggregator),
         get_optimizer("sgd", 0.03, momentum=0.9),

@@ -9,6 +9,8 @@ aggregation), and a vmapped batched client-execution path.
 from repro.runtime.batched import batched_local_train  # noqa: F401
 from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig  # noqa: F401
 from repro.runtime.events import EventQueue, VirtualClock  # noqa: F401
+from repro.runtime.sharded import (ShardedRound,  # noqa: F401
+                                   sharded_fedavg_train)
 from repro.runtime.profiles import (PROFILES, DeviceClass, Fleet,  # noqa: F401
                                     HeterogeneityProfile, get_profile,
                                     homogeneous_fleet, sample_fleet)

@@ -40,10 +40,10 @@ from repro.optim.optimizers import Optimizer
 _batched_step_cache = {}
 
 
-def _make_cohort_fn(model: Model, optimizer: Optimizer, prox_mu: float):
-    key = (id(model), id(optimizer), prox_mu)
-    if key in _batched_step_cache:
-        return _batched_step_cache[key]
+def make_client_step(model: Model, optimizer: Optimizer, prox_mu: float):
+    """One micro-step of one client's local training (shared by the batched
+    and sharded cohort paths): (params, opt_state, batch) -> updated state
+    plus the step loss, with the FedProx proximal term folded in."""
 
     def loss(params, batch, global_params):
         l, metrics = model.loss_fn(params, batch)
@@ -61,31 +61,53 @@ def _make_cohort_fn(model: Model, optimizer: Optimizer, prox_mu: float):
         params = jax.tree.map(lambda p, u: p + u, params, updates)
         return params, opt_state, l
 
+    return one_client
+
+
+def cohort_scan(one_client, params_b, opt_b, xs, ys, masks, active,
+                global_params):
+    """``lax.scan`` over steps with a ``vmap`` over clients inside — the
+    cohort body shared by the batched (whole cohort on one device) and
+    sharded (per-shard slice of the cohort) execution paths.
+
+    xs: (T, M, B, ...); active: (T, M) bool step mask freezing clients
+    that ran out of real batches."""
+
+    def scan_step(carry, inp):
+        params_b, opt_b, last_loss = carry
+        bx, by, bm, act = inp
+        new_p, new_o, l = jax.vmap(
+            one_client, in_axes=(0, 0, 0, 0, 0, None))(
+                params_b, opt_b, bx, by, bm, global_params)
+
+        def keep(new, old):
+            gate = act.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(gate, new, old)
+
+        params_b = jax.tree.map(keep, new_p, params_b)
+        opt_b = jax.tree.map(keep, new_o, opt_b)
+        last_loss = jnp.where(act, l, last_loss)
+        return (params_b, opt_b, last_loss), None
+
+    m = active.shape[1]
+    init = (params_b, opt_b, jnp.zeros((m,), jnp.float32))
+    (params_b, opt_b, last_loss), _ = jax.lax.scan(
+        scan_step, init, (xs, ys, masks, active))
+    return params_b, last_loss
+
+
+def _make_cohort_fn(model: Model, optimizer: Optimizer, prox_mu: float):
+    key = (id(model), id(optimizer), prox_mu)
+    if key in _batched_step_cache:
+        return _batched_step_cache[key]
+
+    one_client = make_client_step(model, optimizer, prox_mu)
+
     @jax.jit
     def run_cohort(params_b, opt_b, xs, ys, masks, active, global_params):
         """xs: (T, M, B, ...); active: (T, M) bool step mask."""
-
-        def scan_step(carry, inp):
-            params_b, opt_b, last_loss = carry
-            bx, by, bm, act = inp
-            new_p, new_o, l = jax.vmap(
-                one_client, in_axes=(0, 0, 0, 0, 0, None))(
-                    params_b, opt_b, bx, by, bm, global_params)
-
-            def keep(new, old):
-                gate = act.reshape((-1,) + (1,) * (new.ndim - 1))
-                return jnp.where(gate, new, old)
-
-            params_b = jax.tree.map(keep, new_p, params_b)
-            opt_b = jax.tree.map(keep, new_o, opt_b)
-            last_loss = jnp.where(act, l, last_loss)
-            return (params_b, opt_b, last_loss), None
-
-        m = active.shape[1]
-        init = (params_b, opt_b, jnp.zeros((m,), jnp.float32))
-        (params_b, opt_b, last_loss), _ = jax.lax.scan(
-            scan_step, init, (xs, ys, masks, active))
-        return params_b, last_loss
+        return cohort_scan(one_client, params_b, opt_b, xs, ys, masks,
+                           active, global_params)
 
     _batched_step_cache[key] = run_cohort
     return run_cohort
@@ -113,6 +135,28 @@ def _pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def materialize_streams(data, batch_size: int, passes: float,
+                        rng: np.random.Generator):
+    """Materialize every client's batch stream IN CLIENT ORDER — the rng
+    contract shared by the sequential, batched, and sharded paths (batch
+    permutations must consume the server rng identically).  Returns
+    (streams, per-client step counts)."""
+    streams = [list(client_batches(x, y, batch_size, passes, rng))
+               for x, y in data]
+    return streams, [len(s) for s in streams]
+
+
+def bucket_by_steps(n_steps: Sequence[int]):
+    """Size-bucket client indices by pow2-rounded step count to bound
+    padding waste; 0-step clients are left out (they never train)."""
+    buckets = {}
+    for i, t in enumerate(n_steps):
+        if t == 0:
+            continue
+        buckets.setdefault(_pow2(t), []).append(i)
+    return buckets
+
+
 def batched_local_train(model: Model, global_params,
                         data: Sequence[Tuple[np.ndarray, np.ndarray]], *,
                         passes: float, batch_size: int, optimizer: Optimizer,
@@ -123,18 +167,10 @@ def batched_local_train(model: Model, global_params,
     Returns one ClientUpdate per client (in input order), matching
     ``local_train`` run sequentially with the same rng."""
     run_cohort = _make_cohort_fn(model, optimizer, prox_mu)
-    # rng order must match the sequential path: materialize in client order
-    streams = [list(client_batches(x, y, batch_size, passes, rng))
-               for x, y in data]
-    n_steps = [len(s) for s in streams]
+    streams, n_steps = materialize_streams(data, batch_size, passes, rng)
     assert max(n_steps) > 0, "cohort with zero local steps"
 
-    # size-bucket by pow2-rounded step count to bound padding waste
-    buckets = {}
-    for i, t in enumerate(n_steps):
-        if t == 0:
-            continue
-        buckets.setdefault(_pow2(t), []).append(i)
+    buckets = bucket_by_steps(n_steps)
 
     params_out: List[Any] = [global_params] * len(data)  # 0-step clients
     loss_out = np.zeros(len(data), np.float64)

@@ -18,6 +18,12 @@ profiles).  Three execution policies:
              K-slot buffer which is flushed through the ``fed_aggregate``
              Pallas kernel; M is the concurrency, K the buffer size.
 
+Sync-mode client execution is a separate knob (``client_exec``): sequential
+(one jitted micro-step loop per client), batched (whole cohort vmapped on
+one device, batched.py), or sharded (cohort laid out over a ``clients``
+mesh axis with on-device psum aggregation, sharded.py; auto-falls back to
+batched on a single device).
+
 Timing model (virtual seconds; unit-rate reference devices keep the numbers
 in the same scale as the paper's eqs. 2-5): a dispatched client downloads
 the model, computes ``E`` passes at its device speed, and uploads its update
@@ -59,7 +65,9 @@ class RuntimeConfig:
     staleness_kind: str = "polynomial"
     async_mix: float = 0.6             # async: FedAsync mixing rate
     server_lr: float = 1.0             # buffered: flush scale
-    batched: bool = False              # sync: vmapped cohort execution
+    batched: bool = False              # deprecated alias: client_exec="batched"
+    client_exec: str = "sequential"    # sync client-execution backend:
+                                       # sequential | batched | sharded
     system_seed: int = 0               # availability/dropout stream
 
 
@@ -90,11 +98,38 @@ class EventDrivenRuntime:
         self._c1 = cm.train_flops_per_example
         self._uf = upload_factor(server.config.compression)
         self._down, self._up = cm.traffic_halves(self._uf)
-        if self.rt.batched and (self.rt.mode != "sync"
-                                or server.config.compression):
-            print("runtime: batched execution applies to the sync mode "
+        self.client_exec = self._resolve_client_exec()
+
+    def _resolve_client_exec(self) -> str:
+        """Pick the sync-mode client-execution backend, falling back along
+        sharded -> batched -> sequential when preconditions are missing."""
+        rt, server = self.rt, self.srv
+        mode = rt.client_exec
+        if mode not in ("sequential", "batched", "sharded"):
+            raise ValueError(f"unknown client_exec {mode!r}; valid: "
+                             "sequential, batched, sharded")
+        if rt.batched and mode == "sequential":
+            mode = "batched"    # legacy flag
+        if mode == "sequential":
+            return mode
+        if rt.mode != "sync" or server.config.compression:
+            print(f"runtime: {mode} execution applies to the sync mode "
                   "without upload compression; using the sequential "
                   "client loop", flush=True)
+            return "sequential"
+        if mode == "sharded" and jax.device_count() == 1:
+            print("runtime: sharded execution needs a multi-device mesh "
+                  "(jax.device_count() == 1, try XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=8); falling "
+                  "back to batched", flush=True)
+            return "batched"
+        if mode == "sharded" and self.srv.aggregator.name != "fedavg":
+            print("runtime: sharded execution fuses FedAvg aggregation on "
+                  f"device; aggregator {self.srv.aggregator.name!r} needs "
+                  "per-client updates — falling back to batched",
+                  flush=True)
+            return "batched"
+        return mode
 
     # ------------------------------------------------------------------
     # timing primitives
@@ -195,13 +230,18 @@ class EventDrivenRuntime:
 
             if included:
                 train_cids = [active[i] for i in included]
-                if rt.batched and not cfg.compression:
-                    updates, _ = self._batched_cohort(params, train_cids,
-                                                      hp.e)
+                if self.client_exec == "sharded":
+                    # aggregation already happened on device (psum across
+                    # the clients mesh axis) — no per-client updates exist
+                    params = self._sharded_round(params, train_cids, hp.e)
                 else:
-                    updates = [srv._client_update(params, cid, hp.e)[0]
-                               for cid in train_cids]
-                params = srv.aggregator(params, updates)
+                    if self.client_exec == "batched":
+                        updates, _ = self._batched_cohort(params,
+                                                          train_cids, hp.e)
+                    else:
+                        updates = [srv._client_update(params, cid, hp.e)[0]
+                                   for cid in train_cids]
+                    params = srv.aggregator(params, updates)
             round_cost = srv.cost_model.add_timed_round(
                 comp_time=max((comp[i] for i in included), default=0.0),
                 trans_time=max((trans[i] for i in included), default=0.0),
@@ -246,6 +286,18 @@ class EventDrivenRuntime:
         for upd, n in zip(updates, sizes):
             srv.selector.update(upd.client_id, upd.last_loss, n)
         return updates, sizes
+
+    def _sharded_round(self, params, active: List[int], e: float):
+        from repro.runtime.sharded import sharded_fedavg_train
+        srv = self.srv
+        data = [srv.dataset.client_data(c) for c in active]
+        res = sharded_fedavg_train(
+            srv.model, params, data, passes=e,
+            batch_size=srv.config.batch_size, optimizer=srv.optimizer,
+            rng=srv.rng, prox_mu=srv.config.prox_mu, client_ids=active)
+        for cid, loss, n in zip(active, res.last_losses, res.n_examples):
+            srv.selector.update(int(cid), float(loss), n)
+        return res.params
 
     # ------------------------------------------------------------------
     # async / buffered: a true event loop over the virtual clock

@@ -245,6 +245,15 @@ def cache_specs(cache, rules: Dict[str, Any]):
     return jax.tree_util.tree_map_with_path(spec, cache)
 
 
+def clients_spec(rank: int, client_dim: int, axis: str = "clients") -> P:
+    """PartitionSpec placing a cohort tensor's client dim on the ``clients``
+    mesh axis with everything else replicated — the layout contract for the
+    (T, M, B, ...) stacked cohort arrays of runtime/sharded.py."""
+    axes: list = [None] * rank
+    axes[client_dim] = axis
+    return P(*axes)
+
+
 def input_specs_sharding(kind: str, rules: Dict[str, Any]):
     """Specs for batch inputs by input name."""
     batch_ax = rules.get("batch")

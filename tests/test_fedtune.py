@@ -4,8 +4,11 @@ import math
 
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:   # only the property test needs hypothesis; unit tests always run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.costs import SystemCost
 from repro.core.fedtune import FedTune, FedTuneConfig
@@ -106,31 +109,100 @@ def test_fixed_tuner_never_changes():
     assert t.on_round(0, 0.9, cost(), cost(), hp) is hp
 
 
-@given(
-    alpha=st.floats(0, 1), beta=st.floats(0, 1), gamma=st.floats(0, 1),
-    gains=st.lists(st.floats(0.011, 0.2), min_size=1, max_size=20),
-    costs=st.lists(st.tuples(*[st.floats(0.1, 1e6)] * 4),
-                   min_size=20, max_size=20),
-)
-@settings(max_examples=40, deadline=None)
-def test_fedtune_invariants(alpha, beta, gamma, gains, costs):
-    """Property: under arbitrary positive overhead streams, FedTune keeps
-    M,E within bounds, steps by at most 1, and never produces NaN slopes."""
-    total = alpha + beta + gamma
-    if total > 1.0:
-        alpha, beta, gamma = (x / total for x in (alpha, beta, gamma))
-        total = 1.0
-    delta = max(0.0, 1.0 - total)
-    pref = Preference(alpha, beta, gamma, delta)
-    tuner = FedTune(FedTuneConfig(preference=pref, m_max=100, e_max=100),
-                    HyperParams(20, 20))
+# ---------------------------------------------------------------------------
+# controller edge cases (PR 2 bugfixes)
+# ---------------------------------------------------------------------------
+
+def test_decision_triggers_at_exactly_eps():
+    """Paper convention: a decision activates when the accuracy gain is
+    >= eps, inclusive."""
+    tuner = mk()   # eps = 0.01
+    out = tuner.on_round(0, 0.01, cost(), cost(), HyperParams(20, 20))
+    assert tuner.decisions == 1
+    assert (out.m, out.e) == (21, 20)   # first decision probes M up
+
+
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_delta_zero_holds_m_and_e(adaptive):
+    """Delta == 0 (the only weighted overhead saw no change) is no evidence
+    either way: the hyper-parameters must HOLD, not take a spurious
+    down-step — in the plain and the adaptive-step branch alike."""
+    tuner = mk(Preference(1.0, 0.0, 0.0, 0.0), adaptive_step=adaptive)
     hp = HyperParams(20, 20)
-    acc = 0.0
-    for r, (t, q, z, v) in enumerate(costs):
-        acc += gains[r % len(gains)]
-        nxt = tuner.on_round(r, acc, cost(t, q, z, v), cost(), hp)
-        assert 1 <= nxt.m <= 100 and 1 <= nxt.e <= 100
-        assert abs(nxt.m - hp.m) <= 1 and abs(nxt.e - hp.e) <= 1
-        hp = nxt
-    for x in tuner.eta + tuner.zeta:
-        assert math.isfinite(x) and x >= 0
+    hp = tuner.on_round(0, 0.05, cost(t=1.0), cost(), hp)   # probe: (21, 20)
+    assert (hp.m, hp.e) == (21, 20)
+    # same gain, same window overhead -> identical normalized window,
+    # diff == 0 on the only weighted term -> Delta-M == Delta-E == 0
+    out = tuner.on_round(1, 0.10, cost(t=1.0), cost(), hp)
+    assert tuner.decisions == 2
+    assert (out.m, out.e) == (21, 20)
+
+
+def test_bad_move_penalizes_exactly_the_opposing_slopes():
+    """A bad M-up move must multiply exactly the M-down-favoring slopes
+    (CompL, TransL) by the penalty and leave every zeta untouched."""
+    tuner = mk(penalty=10.0)
+    hp = HyperParams(20, 20)
+    hp = tuner.on_round(0, 0.05, cost(), cost(), hp)        # probe M up
+    assert (hp.m, hp.e) == (21, 20)
+    # every normalized overhead doubles -> comparison > 0 -> bad move
+    tuner.on_round(1, 0.10, cost(2.0, 2.0, 2.0, 2.0), cost(), hp)
+    assert tuner.trace[-1]["bad"]
+    assert tuner.eta == [1.0, 1.0, 10.0, 10.0]
+    assert tuner.zeta == [1.0, 1.0, 1.0, 1.0]   # E never moved
+
+
+def test_weighted_relative_to_tolerates_zero_baseline():
+    """Zero baseline overheads are legitimate (e.g. a compressed-upload run
+    whose window accrues no transmission) and must not crash."""
+    base = SystemCost(comp_t=1.0, trans_t=0.0, comp_l=1.0, trans_l=1.0)
+    cur = SystemCost(comp_t=1.0, trans_t=1.0, comp_l=1.0, trans_l=1.0)
+    out = cur.weighted_relative_to(base, Preference(0.25, 0.25, 0.25, 0.25))
+    assert math.isfinite(out) and out > 0.0    # worse on the zero baseline
+    # an all-zero unweighted baseline term contributes nothing
+    pref = Preference(1.0, 0.0, 0.0, 0.0)
+    assert cur.weighted_relative_to(base, pref) == 0.0
+
+
+def test_unknown_compression_method_names_the_valid_ones():
+    from repro.federated.compression import upload_factor
+    with pytest.raises(ValueError, match="int8"):
+        upload_factor("int4")
+    assert upload_factor("int8") < 1.0
+    assert upload_factor(None) == 1.0
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        alpha=st.floats(0, 1), beta=st.floats(0, 1), gamma=st.floats(0, 1),
+        gains=st.lists(st.floats(0.011, 0.2), min_size=1, max_size=20),
+        costs=st.lists(st.tuples(*[st.floats(0.1, 1e6)] * 4),
+                       min_size=20, max_size=20),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_fedtune_invariants(alpha, beta, gamma, gains, costs):
+        """Property: under arbitrary positive overhead streams, FedTune
+        keeps M,E within bounds, steps by at most 1, and never produces
+        NaN slopes."""
+        total = alpha + beta + gamma
+        if total > 1.0:
+            alpha, beta, gamma = (x / total for x in (alpha, beta, gamma))
+            total = 1.0
+        delta = max(0.0, 1.0 - total)
+        pref = Preference(alpha, beta, gamma, delta)
+        tuner = FedTune(FedTuneConfig(preference=pref, m_max=100, e_max=100),
+                        HyperParams(20, 20))
+        hp = HyperParams(20, 20)
+        acc = 0.0
+        for r, (t, q, z, v) in enumerate(costs):
+            acc += gains[r % len(gains)]
+            nxt = tuner.on_round(r, acc, cost(t, q, z, v), cost(), hp)
+            assert 1 <= nxt.m <= 100 and 1 <= nxt.e <= 100
+            assert abs(nxt.m - hp.m) <= 1 and abs(nxt.e - hp.e) <= 1
+            hp = nxt
+        for x in tuner.eta + tuner.zeta:
+            assert math.isfinite(x) and x >= 0
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fedtune_invariants():
+        pass

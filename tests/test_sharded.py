@@ -1,0 +1,180 @@
+"""Parity tests for the clients-as-mesh-axis sharded execution path
+(runtime/sharded.py), pinned against the batched path the same way
+tests/test_runtime.py pins batched-vs-sequential.
+
+The multi-device cases need >1 XLA device; CI's multi-device job provides
+a 4-device CPU mesh via
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m pytest -x -q tests/test_sharded.py
+
+On a single device those cases skip and the engine-level tests verify the
+transparent sharded -> batched fallback instead."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel
+from repro.data.synthetic import DataSpec, make_dataset
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime import (RuntimeConfig, batched_local_train,
+                           sharded_fedavg_train)
+from repro.runtime.engine import EventDrivenRuntime
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device mesh (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=4)")
+
+
+def small_dataset(seed=1):
+    return make_dataset(DataSpec(
+        name="shard_test", n_classes=4, shape=(12,), n_train_clients=24,
+        n_test_clients=8, size_log_mean=2.5, size_log_std=0.5, seed=seed))
+
+
+def mk_server(*, rt=None, max_rounds=4, m=5, e=2.0, aggregator="fedavg"):
+    ds = small_dataset()
+    model = build_model(MLPConfig(name="mlp_shard", in_dim=12, hidden=(16,),
+                                  n_classes=4))
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    return FLServer(
+        model, ds, get_aggregator(aggregator),
+        get_optimizer("sgd", 0.05, momentum=0.9),
+        CostModel(flops_per_example=2 * n_params, param_count=n_params),
+        FLConfig(m=m, e=e, batch_size=4, target_accuracy=0.99,
+                 max_rounds=max_rounds, eval_points=128),
+        runtime_config=rt)
+
+
+def tree_close(a, b, atol):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# update-for-update parity with the batched path
+# ---------------------------------------------------------------------------
+
+@multidevice
+def test_sharded_matches_batched_fedavg_aggregate():
+    """The on-device psum weighted mean == FedAvg over the batched path's
+    per-client params, same rng, up to float reassociation."""
+    srv = mk_server()
+    params = srv.model.init(jax.random.PRNGKey(0))
+    cids = [0, 3, 7, 11, 15, 16, 20]   # 7 clients: not a multiple of D
+    data = [srv.dataset.client_data(c) for c in cids]
+    bat = batched_local_train(srv.model, params, data, passes=2.0,
+                              batch_size=4, optimizer=srv.optimizer,
+                              rng=np.random.default_rng(42),
+                              client_ids=cids)
+    expected = get_aggregator("fedavg")(params, bat)
+    res = sharded_fedavg_train(srv.model, params, data, passes=2.0,
+                               batch_size=4, optimizer=srv.optimizer,
+                               rng=np.random.default_rng(42))
+    assert res.n_steps == [u.n_steps for u in bat]
+    assert res.n_examples == [u.n_examples for u in bat]
+    np.testing.assert_allclose(res.last_losses,
+                               [u.last_loss for u in bat], rtol=1e-4)
+    tree_close(expected, res.params, atol=1e-5)
+
+
+@multidevice
+def test_sharded_fedprox_parity():
+    srv = mk_server()
+    params = srv.model.init(jax.random.PRNGKey(0))
+    data = [srv.dataset.client_data(c) for c in (2, 5, 9)]
+    bat = batched_local_train(srv.model, params, data, passes=1.0,
+                              batch_size=4, optimizer=srv.optimizer,
+                              rng=np.random.default_rng(9), prox_mu=0.1)
+    expected = get_aggregator("fedavg")(params, bat)
+    res = sharded_fedavg_train(srv.model, params, data, passes=1.0,
+                               batch_size=4, optimizer=srv.optimizer,
+                               rng=np.random.default_rng(9), prox_mu=0.1)
+    tree_close(expected, res.params, atol=1e-5)
+
+
+@multidevice
+def test_sharded_zero_step_client_enters_mean_at_global():
+    """A client whose fractional pass rounds to zero steps contributes its
+    weight at the global params, matching the batched/sequential paths."""
+    srv = mk_server()
+    params = srv.model.init(jax.random.PRNGKey(0))
+    rngd = np.random.default_rng(0)
+    data = [(rngd.normal(size=(12, 12)).astype(np.float32),
+             rngd.integers(0, 4, 12).astype(np.int32)),
+            (rngd.normal(size=(1, 12)).astype(np.float32),
+             rngd.integers(0, 4, 1).astype(np.int32))]   # round(0.4*1) == 0
+    bat = batched_local_train(srv.model, params, data, passes=0.4,
+                              batch_size=4, optimizer=srv.optimizer,
+                              rng=np.random.default_rng(7))
+    expected = get_aggregator("fedavg")(params, bat)
+    res = sharded_fedavg_train(srv.model, params, data, passes=0.4,
+                               batch_size=4, optimizer=srv.optimizer,
+                               rng=np.random.default_rng(7))
+    assert res.n_steps[1] == 0
+    tree_close(expected, res.params, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: third client-execution mode
+# ---------------------------------------------------------------------------
+
+@multidevice
+def test_sharded_sync_runtime_matches_batched_sync():
+    bat = mk_server(rt=RuntimeConfig(mode="sync",
+                                     client_exec="batched")).run()
+    shd = mk_server(rt=RuntimeConfig(mode="sync",
+                                     client_exec="sharded")).run()
+    np.testing.assert_allclose([h.accuracy for h in bat.history],
+                               [h.accuracy for h in shd.history], atol=1e-5)
+    np.testing.assert_allclose(np.array(bat.total_cost.as_tuple()),
+                               np.array(shd.total_cost.as_tuple()),
+                               rtol=1e-9)
+    tree_close(bat.params, shd.params, atol=1e-4)
+
+
+def test_client_exec_resolution_and_fallbacks():
+    srv = mk_server(rt=RuntimeConfig(mode="sync", client_exec="sharded"))
+    eng = EventDrivenRuntime(srv, config=srv.runtime_config)
+    expected = "batched" if jax.device_count() == 1 else "sharded"
+    assert eng.client_exec == expected
+
+    # legacy boolean still selects the batched path
+    srv = mk_server(rt=RuntimeConfig(mode="sync", batched=True))
+    eng = EventDrivenRuntime(srv, config=srv.runtime_config)
+    assert eng.client_exec == "batched"
+
+    # non-sync modes always run the sequential client loop
+    srv = mk_server(rt=RuntimeConfig(mode="async", client_exec="sharded"))
+    eng = EventDrivenRuntime(srv, config=srv.runtime_config)
+    assert eng.client_exec == "sequential"
+
+    # non-FedAvg aggregation needs per-client updates
+    srv = mk_server(rt=RuntimeConfig(mode="sync", client_exec="sharded"),
+                    aggregator="fednova")
+    eng = EventDrivenRuntime(srv, config=srv.runtime_config)
+    assert eng.client_exec == "batched"
+
+    with pytest.raises(ValueError, match="client_exec"):
+        EventDrivenRuntime(mk_server(),
+                           config=RuntimeConfig(client_exec="warp"))
+
+
+def test_sharded_request_still_runs_on_any_device_count():
+    """client_exec='sharded' must produce a working run everywhere: on one
+    device it falls back to batched; on many it shards.  Either way the
+    result matches the batched run exactly (up to float reassociation)."""
+    ref = mk_server(rt=RuntimeConfig(mode="sync",
+                                     client_exec="batched")).run()
+    out = mk_server(rt=RuntimeConfig(mode="sync",
+                                     client_exec="sharded")).run()
+    np.testing.assert_allclose([h.accuracy for h in ref.history],
+                               [h.accuracy for h in out.history], atol=1e-5)
+    assert out.sim_time == ref.sim_time
