@@ -14,6 +14,7 @@ suite completes on one CPU core; ``--full`` uses paper-scale datasets.
   runtime      heterogeneous runtime: batched cohorts + mode sweep
   sharded_cohort  client-exec backends (sequential|batched|sharded) at
                   M in {16, 64, 256} over the host-local device mesh
+  sweep_engine vectorized T-trials-at-once vs T sequential FLServer runs
 """
 
 from __future__ import annotations
@@ -35,7 +36,8 @@ def main() -> None:
                             fedtune_aggregators, fedtune_datasets,
                             fedtune_preferences, kernel_bench,
                             measurement_sweep, model_complexity,
-                            penalty_study, roofline_report, sharded_cohort)
+                            penalty_study, roofline_report, sharded_cohort,
+                            sweep_engine)
     from benchmarks.common import BenchSettings, emit
 
     settings = BenchSettings(full=args.full, seeds=args.seeds)
@@ -51,6 +53,7 @@ def main() -> None:
         "roofline": lambda: roofline_report.main(settings),
         "runtime": lambda: async_runtime.main(settings),
         "sharded_cohort": lambda: sharded_cohort.main(settings),
+        "sweep_engine": lambda: sweep_engine.main(settings),
     }
     only = set(args.only.split(",")) if args.only else None
 

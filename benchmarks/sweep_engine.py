@@ -1,0 +1,105 @@
+"""Benchmark: vectorized T-trials-at-once vs T sequential FLServer.run().
+
+The sweep engine's claim is that trials are an *axis*, not a queue: packing
+every live trial's cohort into one scan/vmap amortizes the per-step
+dispatch overhead that dominates T independent runs on small FL models.
+This benchmark runs the same T-trial grid (emnist-reduced, FedTune, seeds
+0..T-1) both ways and reports wall-clock, speedup, and parity:
+
+  sequential — T full ``FLServer.run()`` calls, one after another (the
+               pre-sweep-engine workflow)
+  vectorized — ``run_vectorized`` packing all T trials per virtual round
+
+Both engines are warmed once (same shapes, so the second run measures
+steady state, not XLA compilation) and parity is checked on the per-trial
+round records: identical accuracies and identical FedTune (M, E)
+trajectories == the vectorized engine is a faithful T-way replica.
+
+Emits the usual CSV rows plus one BENCH-format JSON line (and ``--json``
+writes it to a file for CI artifact upload):
+
+  BENCH {"bench": "sweep_engine", "t": 8, "seq_s": ..., "vec_s": ...,
+         "speedup": ..., "bitmatch": true, "max_acc_diff": 0.0}
+
+Usage: PYTHONPATH=src:. python benchmarks/sweep_engine.py [--t 8]
+       [--rounds 4] [--json sweep_bench.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import emit
+from repro.experiments import TrialSpec, run_trial, run_vectorized
+
+
+def _specs(t: int, rounds: int):
+    return [TrialSpec(dataset="emnist", aggregator="fedavg", seed=s,
+                      tuner="fedtune", m0=10, e0=1.0, rounds=rounds,
+                      target_accuracy=0.99, batch_size=5, eval_points=256)
+            for s in range(t)]
+
+
+def _run_sequential(specs):
+    return [run_trial(s) for s in specs]
+
+
+def main(settings=None, *, t: int = 8, rounds: int = 4,
+         pack: str = "batched", json_path: str = None):
+    del settings    # reduced scale only: the sweep is over T, not data size
+    import jax
+    specs = _specs(t, rounds)
+
+    # warm both engines (compilation + dataset materialization), then time
+    # the steady state — grids are deterministic, so shapes repeat exactly
+    _run_sequential(specs)
+    t0 = time.perf_counter()
+    seq = _run_sequential(specs)
+    seq_s = time.perf_counter() - t0
+
+    run_vectorized(specs, pack=pack)
+    t0 = time.perf_counter()
+    vec = run_vectorized(specs, pack=pack)
+    vec_s = time.perf_counter() - t0
+
+    bitmatch = True
+    max_acc_diff = 0.0
+    for b, v in zip(seq, vec):
+        if (b.history_m, b.history_e) != (v.history_m, v.history_e):
+            bitmatch = False
+        for a, c in zip(b.history_acc, v.history_acc):
+            d = abs(a - c)
+            max_acc_diff = max(max_acc_diff, d)
+            if d > 0:
+                bitmatch = False
+        if tuple(b.cost) != tuple(v.cost):
+            bitmatch = False
+
+    speedup = seq_s / vec_s if vec_s > 0 else float("inf")
+    emit(f"sweep_engine/sequential_t{t}", seq_s * 1e6, "baseline")
+    emit(f"sweep_engine/vectorized_t{t}", vec_s * 1e6,
+         f"speedup_vs_seq={speedup:.2f}x")
+    payload = {"bench": "sweep_engine", "t": t, "rounds": rounds,
+               "pack": pack, "devices": jax.device_count(),
+               "seq_s": round(seq_s, 4), "vec_s": round(vec_s, 4),
+               "speedup": round(speedup, 3), "bitmatch": bitmatch,
+               "max_acc_diff": max_acc_diff}
+    print("BENCH " + json.dumps(payload), flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f)
+            f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--t", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--pack", default="batched",
+                    choices=("batched", "sharded"))
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(t=args.t, rounds=args.rounds, pack=args.pack, json_path=args.json)

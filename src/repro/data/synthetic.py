@@ -50,6 +50,7 @@ class FederatedDataset:
     _class_means: np.ndarray = field(repr=False, default=None)
     _test_cache: Optional[Tuple[np.ndarray, np.ndarray]] = field(
         default=None, repr=False)
+    _test_exhausted: bool = field(default=False, repr=False)
 
     # ------------------------------------------------------------------
     @property
@@ -66,14 +67,23 @@ class FederatedDataset:
                                  test=False)
 
     def test_data(self, max_points: int = 2048) -> Tuple[np.ndarray, np.ndarray]:
-        """Pooled test set from the held-out test clients."""
-        if self._test_cache is not None and len(self._test_cache[1]) >= min(
-                max_points, len(self._test_cache[1])):
+        """Pooled test set from the held-out test clients.
+
+        Generation stops once ``max_points`` examples exist, and the result
+        is cached.  The cache is only a valid answer for a LARGER request if
+        it already holds ``max_points`` examples or the test clients were
+        exhausted building it — otherwise it is regenerated at the larger
+        size (same rng seed, so the previously returned points are a prefix
+        of the regenerated set).  A first small call therefore never
+        permanently truncates the test set for later callers."""
+        if self._test_cache is not None and (
+                len(self._test_cache[1]) >= max_points or self._test_exhausted):
             x, y = self._test_cache
             return x[:max_points], y[:max_points]
         rng = np.random.default_rng(self.spec.seed + 777)
         xs, ys = [], []
         total = 0
+        exhausted = True
         for tc in range(self.spec.n_test_clients):
             n = int(np.clip(rng.lognormal(self.spec.size_log_mean,
                                           self.spec.size_log_std),
@@ -83,10 +93,12 @@ class FederatedDataset:
             ys.append(y)
             total += n
             if total >= max_points:
+                exhausted = False
                 break
         x = np.concatenate(xs)[:max_points]
         y = np.concatenate(ys)[:max_points]
         self._test_cache = (x, y)
+        self._test_exhausted = exhausted
         return x, y
 
     # ------------------------------------------------------------------

@@ -1,0 +1,15 @@
+"""Sweep orchestration: whole populations of FL trials as one workload.
+
+``grid``   — TrialSpec/SweepSpec product grids with eager validation.
+``runner`` — sequential and vectorized (trials-as-an-axis) execution.
+``store``  — append-only JSONL results, resume keys, paper-style tables.
+"""
+
+from repro.experiments.grid import (CANONICAL_PREFERENCE,  # noqa: F401
+                                    SweepSpec, TrialSpec, parse_preferences,
+                                    spec_from_dict)
+from repro.experiments.runner import (TrialResult, build_server,  # noqa: F401
+                                      run_sweep, run_trial, run_vectorized)
+from repro.experiments.store import (ResultStore,  # noqa: F401
+                                     aggregate_over_seeds, improvement_pct,
+                                     pair_with_baselines, paper_table)

@@ -1,0 +1,600 @@
+"""Multi-trial sweep execution: T independent FL trainings as ONE workload.
+
+The unit of progress for FL hyper-parameter research is the *trial* — one
+(preference, aggregator, dataset, seed, M0/E0) cell of the paper's tables —
+and trials are embarrassingly parallel: they share no state, only hardware.
+The sequential engine here runs them one ``FLServer.run()`` at a time; the
+vectorized engine adds a **trials axis** on top of the cohort machinery from
+PR 1-2 and runs all of them per virtual round:
+
+  1. PLAN   — every live trial plans its sync round through the engine's own
+              ``plan_sync_round`` (selection, availability, deadline cut),
+              consuming its private server/system rngs exactly as a
+              standalone run would.
+  2. PACK   — every trial's included clients are materialized
+              (``materialize_streams``, same rng contract as the
+              sequential/batched paths) and packed into one flat cohort:
+              grouped by model, size-bucketed by pow2 step count
+              (``bucket_by_steps``), the client axis padded to a pow2 so the
+              set of compiled (T, M) shapes stays small as FedTune moves
+              each trial's M.  One ``cohort_scan`` per bucket trains clients
+              of MANY trials side by side — each vmap lane carries its own
+              trial's global params (``global_in_axis=0``).
+  3. REDUCE — per-trial aggregation.  The default packing hands each trial's
+              per-client params (device arrays) to its own aggregator —
+              bit-identical to a standalone run.  The ``sharded`` packing
+              lays the flat cohort over the ``clients`` mesh axis
+              (runtime/sharded.py's mesh) and computes per-trial FedAvg
+              partial sums on device — a segment-sum by trial id completed
+              by a psum — so per-client params never reach the host.
+  4. STEP   — each trial's own FedTune controller sees its round cost and
+              accuracy and steps its (M, E) independently; finished trials
+              drop out of the pack.
+
+Parity contract (pinned in tests/test_experiments.py): a T-trial vectorized
+sweep produces per-trial round records — accuracies, costs, FedTune (M, E)
+trajectories — identical to T independent ``FLServer.run()`` calls with
+matching seeds.  Lanes of a vmapped cohort are computed independently, so
+packing MORE clients around a trial does not change its floats.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel, FedTune, FedTuneConfig, Preference
+from repro.core.tuner import FixedTuner, HyperParams
+from repro.data import cifar100_like, emnist_like, speech_command_like
+from repro.experiments.grid import TrialSpec
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.federated.aggregation import ClientUpdate, _flatten, _unflatten
+from repro.federated.server import FLResult, RoundRecord
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime.batched import (_pow2, _stack_streams, bucket_by_steps,
+                                   cohort_scan, make_client_step,
+                                   materialize_streams)
+from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig
+from repro.runtime.profiles import sample_fleet
+
+ENGINES = ("vectorized", "sequential")
+PACKS = ("batched", "sharded")
+
+_DATASET_FNS = {"speech_command": speech_command_like, "emnist": emnist_like,
+                "cifar100": cifar100_like}
+_dataset_cache: Dict[tuple, Any] = {}
+_model_cache: Dict[tuple, Any] = {}
+_optimizer_cache: Dict[tuple, Any] = {}
+_multi_cohort_cache: Dict[tuple, Any] = {}
+_sharded_multi_cache: Dict[tuple, Any] = {}
+
+
+# ---------------------------------------------------------------------------
+# trial construction (shared caches so T trials over one dataset family share
+# one Model/Optimizer object — and therefore one set of compiled cohort fns)
+# ---------------------------------------------------------------------------
+
+def _dataset_for(spec: TrialSpec):
+    key = (spec.dataset, spec.reduced, spec.seed)
+    if key not in _dataset_cache:
+        _dataset_cache[key] = _DATASET_FNS[spec.dataset](
+            reduced=spec.reduced, seed=spec.seed)
+    return _dataset_cache[key]
+
+
+def _model_for(spec: TrialSpec):
+    ds = _dataset_for(spec)
+    key = (spec.dataset, spec.reduced)
+    if key not in _model_cache:
+        in_dim = int(np.prod(ds.spec.shape))
+        _model_cache[key] = build_model(MLPConfig(
+            name=f"mlp_{spec.dataset}{'_r' if spec.reduced else ''}",
+            in_dim=in_dim, hidden=(48,), n_classes=ds.spec.n_classes))
+    return _model_cache[key]
+
+
+def _optimizer_for(spec: TrialSpec):
+    key = ("sgd", spec.lr, 0.9)
+    if key not in _optimizer_cache:
+        _optimizer_cache[key] = get_optimizer("sgd", spec.lr, momentum=0.9)
+    return _optimizer_cache[key]
+
+
+def build_server(spec: TrialSpec) -> FLServer:
+    """A fresh FLServer for one trial (fresh aggregator/tuner/selector/rng
+    state; model, optimizer, and dataset shared through the caches)."""
+    ds = _dataset_for(spec)
+    model = _model_for(spec)
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    flops = model.flops_per_example or 2 * n_params
+    tuner = (FedTune(FedTuneConfig(preference=Preference(*spec.preference)),
+                     HyperParams(spec.m0, spec.e0))
+             if spec.tuner == "fedtune" else FixedTuner())
+    fleet = (None if spec.het == "homogeneous"
+             else sample_fleet(spec.het, ds.n_clients, seed=spec.seed))
+    return FLServer(
+        model, ds, get_aggregator(spec.aggregator), _optimizer_for(spec),
+        CostModel(flops_per_example=flops, param_count=n_params),
+        FLConfig(m=spec.m0, e=spec.e0, batch_size=spec.batch_size,
+                 target_accuracy=spec.target_accuracy,
+                 max_rounds=spec.rounds, eval_points=spec.eval_points,
+                 prox_mu=spec.prox_mu, seed=spec.seed,
+                 compression=spec.compression),
+        tuner=tuner, fleet=fleet,
+        runtime_config=RuntimeConfig(mode=spec.mode,
+                                     client_exec=spec.client_exec))
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrialResult:
+    spec: TrialSpec
+    reached: bool
+    rounds: int
+    final_accuracy: float
+    final_m: int
+    final_e: float
+    cost: Tuple[float, float, float, float]
+    sim_time: float
+    wall: float
+    engine: str
+    history_m: List[int]
+    history_e: List[float]
+    history_acc: List[float]
+
+    @classmethod
+    def from_flresult(cls, spec: TrialSpec, res: FLResult, wall: float,
+                      engine: str) -> "TrialResult":
+        return cls(
+            spec=spec, reached=res.reached_target, rounds=res.rounds,
+            final_accuracy=float(res.final_accuracy), final_m=res.final_m,
+            final_e=float(res.final_e), cost=res.total_cost.as_tuple(),
+            sim_time=float(res.sim_time), wall=wall, engine=engine,
+            history_m=[r.m for r in res.history],
+            history_e=[float(r.e) for r in res.history],
+            history_acc=[float(r.accuracy) for r in res.history])
+
+    def to_record(self) -> dict:
+        return {
+            "key": self.spec.key(), "status": "done",
+            "baseline_key": self.spec.baseline_key(),
+            "spec": self.spec.to_dict(),
+            "reached": self.reached, "rounds": self.rounds,
+            "final_accuracy": self.final_accuracy,
+            "final_m": self.final_m, "final_e": self.final_e,
+            "cost": list(self.cost), "sim_time": self.sim_time,
+            "wall": self.wall, "engine": self.engine,
+            "history_m": self.history_m, "history_e": self.history_e,
+            "history_acc": self.history_acc,
+        }
+
+
+def run_trial(spec: TrialSpec) -> TrialResult:
+    """One trial, the single-process way: a full ``FLServer.run()``."""
+    srv = build_server(spec)
+    t0 = time.perf_counter()
+    res = srv.run()
+    return TrialResult.from_flresult(spec, res,
+                                     time.perf_counter() - t0, "sequential")
+
+
+# ---------------------------------------------------------------------------
+# the vectorized multi-trial engine
+# ---------------------------------------------------------------------------
+
+def _tree_stack(trees: Sequence[Any]):
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+def _multi_cohort_fn(model, optimizer, prox_mu: float):
+    """The packed-cohort step: the shared scan/vmap body with PER-CLIENT
+    reference params (``global_in_axis=0``), each lane starting local
+    training from its own trial's global model."""
+    key = (id(model), id(optimizer), prox_mu)
+    if key in _multi_cohort_cache:
+        return _multi_cohort_cache[key]
+    one_client = make_client_step(model, optimizer, prox_mu)
+
+    @jax.jit
+    def run(global_b, xs, ys, masks, active):
+        opt_b = jax.vmap(optimizer.init)(global_b)
+        return cohort_scan(one_client, global_b, opt_b, xs, ys, masks,
+                           active, global_b, global_in_axis=0)
+
+    _multi_cohort_cache[key] = run
+    return run
+
+
+def _flatten_cohort(params_b):
+    leaves = jax.tree.leaves(params_b)
+    m = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
+
+
+def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh):
+    """Packed cohort over the ``clients`` mesh axis with per-trial FedAvg
+    fused on device: each device trains its slice of the flat cohort, forms
+    the (T, N) segment partial sum (w_i * onehot_trial_i outer the flat
+    params), and a psum across the axis completes every trial's weighted
+    mean at once.  Per-client params never reach the host."""
+    from repro.sharding.specs import clients_spec
+    key = (id(model), id(optimizer), prox_mu, id(mesh))
+    if key in _sharded_multi_cache:
+        return _sharded_multi_cache[key]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    one_client = make_client_step(model, optimizer, prox_mu)
+    axis = mesh.axis_names[0]
+
+    def shard_body(global_b, xs, ys, masks, active, weights, onehot):
+        opt_b = jax.vmap(optimizer.init)(global_b)
+        params_b, last_loss = cohort_scan(
+            one_client, global_b, opt_b, xs, ys, masks, active, global_b,
+            global_in_axis=0)
+        flat = _flatten_cohort(params_b)                  # (M_loc, N)
+        partial = (weights[:, None] * onehot).T @ flat    # (T, N) segment sum
+        return jax.lax.psum(partial, axis), last_loss
+
+    @jax.jit
+    def run(global_b, xs, ys, masks, active, weights, onehot):
+        in_specs = (jax.tree.map(lambda l: clients_spec(l.ndim, 0, axis),
+                                 global_b),
+                    clients_spec(xs.ndim, 1, axis),
+                    clients_spec(ys.ndim, 1, axis),
+                    clients_spec(masks.ndim, 1, axis),
+                    clients_spec(active.ndim, 1, axis),
+                    clients_spec(1, 0, axis),
+                    clients_spec(2, 0, axis))
+        return shard_map(shard_body, mesh=mesh, in_specs=in_specs,
+                         out_specs=(P(), clients_spec(1, 0, axis)))(
+                             global_b, xs, ys, masks, active, weights, onehot)
+
+    _sharded_multi_cache[key] = run
+    return run
+
+
+@dataclass
+class _Cohort:
+    cids: List[int]
+    streams: List[list]
+    n_steps: List[int]
+    sizes: List[int]
+    trained: List[Any] = field(default_factory=list)   # per-client pytrees
+    flat_rows: List[Any] = field(default_factory=list)  # per-client (N,) rows
+    losses: List[float] = field(default_factory=list)
+    agg_params: Any = None    # set when aggregation was fused on device
+
+
+@dataclass(eq=False)     # identity semantics: trials are packed by object
+class _LiveTrial:
+    spec: TrialSpec
+    srv: FLServer
+    eng: EventDrivenRuntime
+    hp: HyperParams
+    params: Any
+    round_idx: int = 0
+    accuracy: float = 0.0
+    reached: bool = False
+    done: bool = False
+    wall: float = 0.0
+    history: List[RoundRecord] = field(default_factory=list)
+    plan: Any = None
+    cohort: Optional[_Cohort] = None
+    _meta: Any = None          # cached _flatten meta (model-constant)
+
+
+def _make_live(spec: TrialSpec) -> _LiveTrial:
+    srv = build_server(spec)
+    eng = EventDrivenRuntime(srv, fleet=srv.fleet,
+                             config=srv.runtime_config or RuntimeConfig())
+    params = srv.model.init(jax.random.PRNGKey(srv.config.seed))
+    return _LiveTrial(spec=spec, srv=srv, eng=eng,
+                      hp=HyperParams(m=spec.m0, e=spec.e0), params=params)
+
+
+def _group_key(tr: _LiveTrial) -> tuple:
+    return (id(tr.srv.model), id(tr.srv.optimizer), tr.srv.config.prox_mu,
+            tr.srv.config.batch_size)
+
+
+def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
+    """Train one model-group's packed entries; results land back in each
+    trial's cohort.  FedAvg trials keep their clients as rows of the
+    bucket's flat (M, N) matrix (their aggregation runs straight through
+    ``fed_aggregate`` on those rows); other aggregators get per-client
+    pytree slices.  Each trial's global params enter the pack through ONE
+    per-round stack + an on-device gather per bucket, so host-side tree
+    work stays O(trials), not O(clients)."""
+    tr0 = ents[0][0]
+    model, opt = tr0.srv.model, tr0.srv.optimizer
+    bs = tr0.srv.config.batch_size
+    run = _multi_cohort_fn(model, opt, tr0.srv.config.prox_mu)
+
+    trials: List[_LiveTrial] = []
+    slot: Dict[int, int] = {}
+    for tr, _ in ents:
+        if id(tr) not in slot:
+            slot[id(tr)] = len(trials)
+            trials.append(tr)
+    stacked = _tree_stack([tr.params for tr in trials])
+
+    n_steps = [tr.cohort.n_steps[j] for tr, j in ents]
+    for t_pad, idx in sorted(bucket_by_steps(n_steps).items()):
+        sel = [ents[i] for i in idx]
+        m_pad = _pow2(len(sel))    # bound the compiled (T, M) shape set
+        streams = [tr.cohort.streams[j] for tr, j in sel]
+        xs, ys, masks, active = _stack_streams(
+            streams + [[]] * (m_pad - len(sel)), bs, t_pad)
+        slots = np.array([slot[id(tr)] for tr, _ in sel]
+                         + [0] * (m_pad - len(sel)), np.int32)
+        global_b = jax.tree.map(lambda s: s[slots], stacked)
+        params_b, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
+                                  jnp.asarray(masks), jnp.asarray(active))
+        flat = _flatten_cohort(params_b)
+        ll = np.asarray(last_loss)
+        for k, (tr, j) in enumerate(sel):
+            if tr.srv.aggregator.name == "fedavg":
+                tr.cohort.flat_rows[j] = flat[k]
+            else:
+                tr.cohort.trained[j] = jax.tree.map(
+                    lambda p, k=k: p[k], params_b)
+            tr.cohort.losses[j] = float(ll[k])
+
+
+def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
+    """Train one all-FedAvg model-group's packed entries over the
+    ``clients`` mesh axis; every trial's FedAvg aggregate comes back from
+    the device directly (segment sum + psum)."""
+    tr0 = ents[0][0]
+    model, opt = tr0.srv.model, tr0.srv.optimizer
+    bs = tr0.srv.config.batch_size
+    n_dev = int(np.prod(mesh.devices.shape))
+    run = _sharded_multi_fn(model, opt, tr0.srv.config.prox_mu, mesh)
+
+    trials: List[_LiveTrial] = []
+    slot: Dict[int, int] = {}
+    for tr, _ in ents:
+        if id(tr) not in slot:
+            slot[id(tr)] = len(trials)
+            trials.append(tr)
+    n_t = len(trials)
+    # FedAvg weights within each trial: n_j / n_total
+    totals = [float(sum(tr.cohort.sizes)) for tr in trials]
+
+    flat0, meta = _flatten(trials[0].params)
+    agg = jnp.zeros((n_t, flat0.shape[0]), flat0.dtype)
+    n_steps = [tr.cohort.n_steps[j] for tr, j in ents]
+    for t_pad, idx in sorted(bucket_by_steps(n_steps).items()):
+        sel = [ents[i] for i in idx]
+        m_pad = _pow2(len(sel))
+        m_pad = int(np.ceil(m_pad / n_dev) * n_dev)   # shard-divisible
+        pad = m_pad - len(sel)
+        xs, ys, masks, active = _stack_streams(
+            [tr.cohort.streams[j] for tr, j in sel] + [[]] * pad, bs, t_pad)
+        global_b = _tree_stack([tr.params for tr, _ in sel]
+                               + [sel[0][0].params] * pad)
+        w = np.zeros(m_pad, np.float32)
+        onehot = np.zeros((m_pad, n_t), np.float32)
+        for k, (tr, j) in enumerate(sel):
+            s = slot[id(tr)]
+            w[k] = tr.cohort.sizes[j] / totals[s]
+            onehot[k, s] = 1.0
+        partial, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
+                                 jnp.asarray(masks), jnp.asarray(active),
+                                 jnp.asarray(w), jnp.asarray(onehot))
+        agg = agg + partial
+        ll = np.asarray(last_loss)
+        for k, (tr, j) in enumerate(sel):
+            tr.cohort.losses[j] = float(ll[k])
+    # zero-step clients never trained: their weight enters at the trial's
+    # own global params, as in every other execution path
+    for tr, j in ents:
+        if tr.cohort.n_steps[j] == 0:
+            s = slot[id(tr)]
+            zw = tr.cohort.sizes[j] / totals[s]
+            agg = agg.at[s].add(zw * _flatten(tr.params)[0])
+    for tr in trials:
+        tr.cohort.agg_params = _unflatten(agg[slot[id(tr)]], meta)
+
+
+def _fedavg_from_rows(tr: _LiveTrial) -> Any:
+    """FedAvg straight from the packed cohort's flat rows: the identical
+    (weights, stacked rows) inputs ``FedAvg.__call__`` would build from
+    per-client pytrees, without the per-client tree flattening."""
+    from repro.kernels import ops as kernel_ops
+    co = tr.cohort
+    if tr._meta is None:
+        tr._meta = _flatten(tr.params)[1]
+    rows = [r if r is not None else _flatten(tr.params)[0]
+            for r in co.flat_rows]     # zero-step clients stay at global
+    n = float(sum(co.sizes))
+    w = np.array([s / n for s in co.sizes], np.float32)
+    out = kernel_ops.fed_aggregate(jnp.asarray(w, jnp.float32),
+                                   jnp.stack(rows))
+    return _unflatten(out, tr._meta)
+
+
+def _finish_round(tr: _LiveTrial, wall: float):
+    """Aggregate, account, evaluate, record, and step the trial's own
+    controller — the same per-round sequence as the engine's sync loop."""
+    srv, cfg = tr.srv, tr.srv.config
+    if tr.cohort is not None and tr.cohort.cids:
+        co = tr.cohort
+        for j, cid in enumerate(co.cids):
+            srv.selector.update(int(cid), co.losses[j], co.sizes[j])
+        if co.agg_params is not None:      # fused on device (sharded pack)
+            tr.params = co.agg_params
+        elif srv.aggregator.name == "fedavg":
+            tr.params = _fedavg_from_rows(tr)
+        else:
+            updates = [
+                ClientUpdate(
+                    params=(co.trained[j] if co.trained[j] is not None
+                            else tr.params),
+                    n_examples=co.sizes[j], n_steps=co.n_steps[j],
+                    last_loss=co.losses[j], client_id=int(cid))
+                for j, cid in enumerate(co.cids)]
+            tr.params = srv.aggregator(tr.params, updates)
+    round_cost = tr.eng.account_sync_round(tr.plan, tr.hp)
+    r = tr.round_idx
+    if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+        tr.accuracy = srv._evaluate(tr.params)
+    tr.history.append(RoundRecord(
+        r, tr.hp.m, tr.hp.e, tr.accuracy, round_cost, wall,
+        sim_time=tr.eng.clock.now, n_updates=len(tr.plan.included)))
+    tr.round_idx += 1
+    tr.cohort = None
+    tr.plan = None
+    if tr.accuracy >= cfg.target_accuracy:
+        tr.reached = True
+        tr.done = True
+        return
+    tr.hp = srv.tuner.on_round(r, tr.accuracy, round_cost,
+                               srv.cost_model.total, tr.hp)
+    tr.hp = tr.hp.clamped(srv.dataset.n_clients, 100.0)
+    if tr.round_idx >= cfg.max_rounds:
+        tr.done = True
+
+
+def _to_result(tr: _LiveTrial, engine: str) -> TrialResult:
+    res = FLResult(
+        reached_target=tr.reached, rounds=len(tr.history),
+        final_accuracy=tr.accuracy,
+        total_cost=tr.srv.cost_model.total.copy(), history=tr.history,
+        final_m=tr.hp.m, final_e=tr.hp.e, params=tr.params,
+        sim_time=tr.eng.clock.now)
+    return TrialResult.from_flresult(tr.spec, res, tr.wall, engine)
+
+
+def run_vectorized(specs: Sequence[TrialSpec], *, pack: str = "batched",
+                   on_result: Optional[Callable[[TrialResult], None]] = None,
+                   verbose: bool = False) -> List[TrialResult]:
+    """Run every trial concurrently, one packed cohort per virtual round."""
+    if pack not in PACKS:
+        raise ValueError(f"unknown pack {pack!r}; valid packs: "
+                         + ", ".join(PACKS))
+    for s in specs:
+        if s.mode != "sync" or s.compression:
+            raise ValueError(
+                f"trial {s.key()!r} cannot be vectorized (vectorized "
+                "execution covers sync mode without upload compression); "
+                "route it through the sequential engine")
+    mesh = None
+    if pack == "sharded":
+        if jax.device_count() == 1:
+            print("experiments: sharded packing needs a multi-device mesh "
+                  "(jax.device_count() == 1); falling back to batched "
+                  "packing", flush=True)
+            pack = "batched"
+        else:
+            from repro.runtime.sharded import default_clients_mesh
+            mesh = default_clients_mesh()
+
+    trials = [_make_live(s) for s in specs]
+    results: List[TrialResult] = [None] * len(trials)
+    engine = f"vectorized/{pack}"
+    n_rounds = 0
+    while True:
+        live = [tr for tr in trials if not tr.done]
+        if not live:
+            break
+        t0 = time.perf_counter()
+        # 1. plan every live trial's round (per-trial rng streams)
+        for tr in live:
+            tr.plan = tr.eng.plan_sync_round(tr.hp)
+            tr.eng.clock.advance_to(tr.eng.clock.now + tr.plan.round_time)
+        # 2. materialize batch streams (the rng contract) and pack
+        entries: List[Tuple[_LiveTrial, int]] = []
+        for tr in live:
+            cids = tr.plan.train_cids
+            if not cids:
+                tr.cohort = None
+                continue
+            data = [tr.srv.dataset.client_data(c) for c in cids]
+            streams, n_steps = materialize_streams(
+                data, tr.srv.config.batch_size, tr.hp.e, tr.srv.rng)
+            sizes = [len(y) for _, y in data]
+            tr.cohort = _Cohort(cids=cids, streams=streams, n_steps=n_steps,
+                                sizes=sizes, trained=[None] * len(cids),
+                                flat_rows=[None] * len(cids),
+                                losses=[0.0] * len(cids))
+            entries.extend((tr, j) for j in range(len(cids)))
+        # 3. group by model and train each group's packed cohort
+        groups: Dict[tuple, List[Tuple[_LiveTrial, int]]] = {}
+        for ent in entries:
+            groups.setdefault(_group_key(ent[0]), []).append(ent)
+        for ents in groups.values():
+            fused = (pack == "sharded"
+                     and all(tr.srv.aggregator.name == "fedavg"
+                             for tr, _ in ents))
+            if fused:
+                _run_group_sharded(ents, mesh)
+            else:
+                _run_group_batched(ents)
+        # 4. per-trial aggregation + accounting + controller step
+        wall = time.perf_counter() - t0
+        for tr in live:
+            tr.wall += wall / len(live)
+            _finish_round(tr, wall / len(live))
+            if tr.done:
+                res = _to_result(tr, engine)
+                results[trials.index(tr)] = res
+                if on_result is not None:
+                    on_result(res)
+        n_rounds += 1
+        if verbose and n_rounds % 10 == 0:
+            done = sum(tr.done for tr in trials)
+            print(f"  sweep round {n_rounds}: {done}/{len(trials)} trials "
+                  f"done, {len(entries)} clients packed", flush=True)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def run_sweep(specs: Sequence[TrialSpec], *, store=None,
+              engine: str = "vectorized", pack: str = "batched",
+              verbose: bool = False) -> List[TrialResult]:
+    """Run a list of trials and (optionally) append each finished trial to
+    ``store`` as it completes — the unit of resume is the trial, so a killed
+    sweep restarts exactly at the first unfinished key."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; valid engines: "
+                         + ", ".join(ENGINES))
+    results: List[TrialResult] = []
+
+    def emit(res: TrialResult):
+        results.append(res)
+        if store is not None:
+            store.append(res.to_record())
+
+    if engine == "sequential":
+        for spec in specs:
+            emit(run_trial(spec))
+        return results
+
+    vec_keys = {s.key() for s in specs
+                if s.mode == "sync" and not s.compression}
+    rest = [s for s in specs if s.key() not in vec_keys]
+    if rest:
+        print(f"experiments: {len(rest)} trial(s) use async/buffered or "
+              "compressed execution; running them sequentially", flush=True)
+        for spec in rest:
+            emit(run_trial(spec))
+    vec = [s for s in specs if s.key() in vec_keys]
+    if vec:
+        run_vectorized(vec, pack=pack, on_result=emit, verbose=verbose)
+    return results

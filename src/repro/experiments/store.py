@@ -1,0 +1,183 @@
+"""Append-only JSONL result store with resume-by-trial-key, seed
+aggregation, and the paper-style table emitter.
+
+One line per finished trial (the dict from ``TrialResult.to_record``).
+Appends are line-atomic enough for the resume contract: a sweep killed
+mid-write leaves at most one truncated final line, which ``load`` skips —
+so re-invoking the sweep reruns exactly the unfinished trials.
+
+The table emitter reproduces the paper's reporting convention: every
+FedTune trial is normalized against its FixedTuner twin (same dataset,
+aggregator, seed, M0/E0 — ``baseline_key``) through eq. (6) under the
+trial's own preference vector, and the '+x%' numbers are mean +- std over
+seeds.  Positive = FedTune reduced the weighted system overhead.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.costs import SystemCost
+from repro.core.preferences import Preference
+from repro.experiments.grid import TrialSpec, spec_from_dict
+
+
+class ResultStore:
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def load(self) -> List[dict]:
+        """Every valid record; corrupt/truncated lines (a killed writer's
+        tail) are skipped, not fatal."""
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+        return out
+
+    def completed_keys(self) -> set:
+        return {r["key"] for r in self.load()
+                if r.get("status") == "done" and "key" in r}
+
+    def append(self, record: dict):
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def clear(self):
+        if os.path.exists(self.path):
+            os.remove(self.path)
+
+
+# ---------------------------------------------------------------------------
+# aggregation + table emission
+# ---------------------------------------------------------------------------
+
+def improvement_pct(record: dict, baseline: dict) -> float:
+    """The paper's '+x%' convention: -100 * I(fixed, tuned) under the tuned
+    trial's preference (positive = FedTune reduced the weighted overhead)."""
+    pref = Preference(*record["spec"]["preference"])
+    tuned = SystemCost(*record["cost"])
+    fixed = SystemCost(*baseline["cost"])
+    return -100.0 * tuned.weighted_relative_to(fixed, pref)
+
+
+def _cell_id(spec: TrialSpec) -> tuple:
+    """Table cell identity: every result-bearing axis except seed (the
+    aggregation dimension) and tuner (the comparison dimension).  A store
+    holding e.g. both a stragglers and a homogeneous sweep must NOT mix
+    them into one cell as if they were extra seeds."""
+    return (spec.dataset, spec.aggregator, spec.preference, spec.m0,
+            spec.e0, spec.mode, spec.rounds, spec.reduced, spec.het,
+            spec.batch_size, spec.target_accuracy, spec.lr,
+            spec.eval_points, spec.prox_mu, spec.compression)
+
+
+def pair_with_baselines(records: Iterable[dict]) -> List[dict]:
+    """Attach each fedtune record's FixedTuner twin (matched by
+    ``baseline_key``) and its improvement; records without a baseline are
+    dropped (a partial sweep's fedtune rows can't be normalized yet)."""
+    records = list(records)
+    by_key: Dict[str, dict] = {r["key"]: r for r in records
+                               if r.get("status") == "done"}
+    out = []
+    for r in records:
+        if r.get("status") != "done" or r["spec"]["tuner"] != "fedtune":
+            continue
+        base = by_key.get(r.get("baseline_key"))
+        if base is None:
+            continue
+        out.append({**r, "improvement": improvement_pct(r, base)})
+    return out
+
+
+def aggregate_over_seeds(paired: Iterable[dict]) -> List[dict]:
+    """Group paired fedtune records by table cell (all axes except seed)
+    and report mean +- std of improvement / accuracy / rounds."""
+    cells: Dict[tuple, List[dict]] = {}
+    for r in paired:
+        spec = spec_from_dict(r["spec"])
+        cells.setdefault(_cell_id(spec), []).append(r)
+    out = []
+    for cell, rs in sorted(cells.items(), key=lambda kv: repr(kv[0])):
+        imps = np.array([r["improvement"] for r in rs], np.float64)
+        accs = np.array([r["final_accuracy"] for r in rs], np.float64)
+        rounds = np.array([r["rounds"] for r in rs], np.float64)
+        out.append({
+            "dataset": cell[0], "aggregator": cell[1],
+            "preference": list(cell[2]), "m0": cell[3], "e0": cell[4],
+            "het": cell[8],
+            "n_seeds": len(rs),
+            "improvement_mean": float(imps.mean()),
+            "improvement_std": float(imps.std()),
+            "accuracy_mean": float(accs.mean()),
+            "rounds_mean": float(rounds.mean()),
+        })
+    return out
+
+
+def _fmt_pref(p) -> str:
+    return "(" + ",".join(f"{v:g}" for v in p) + ")"
+
+
+def paper_table(records: Iterable[dict], *,
+                title: Optional[str] = None) -> str:
+    """Markdown tables in the paper's layout: one section per dataset, rows
+    = preference vectors, columns = aggregators, cells = mean +- std
+    overhead reduction of FedTune vs the FixedTuner baseline."""
+    agg = aggregate_over_seeds(pair_with_baselines(records))
+    if not agg:
+        return "(no fedtune/baseline pairs to tabulate yet)"
+    lines = []
+    if title:
+        lines.append(f"## {title}")
+    datasets = sorted({a["dataset"] for a in agg})
+    for ds in datasets:
+        rows = [a for a in agg if a["dataset"] == ds]
+        aggs = sorted({a["aggregator"] for a in rows})
+        prefs = []
+        for a in rows:
+            key = tuple(a["preference"])
+            if key not in prefs:
+                prefs.append(key)
+        lines.append(f"\n### {ds} — FedTune overhead reduction vs "
+                     "FixedTuner (+ = better)")
+        lines.append("| preference (a,b,g,d) | " + " | ".join(aggs) + " |")
+        lines.append("|---" * (len(aggs) + 1) + "|")
+        for p in prefs:
+            cells = []
+            for ag in aggs:
+                m = [a for a in rows
+                     if tuple(a["preference"]) == p and a["aggregator"] == ag]
+                if not m:
+                    cells.append("—")
+                    continue
+                parts = []
+                for a in m:   # one entry per (M0, E0) / het grid point
+                    v = (f"{a['improvement_mean']:+.2f}"
+                         f"±{a['improvement_std']:.2f}%")
+                    if len(m) > 1:
+                        v += f" @({a['m0']},{a['e0']:g})"
+                        if a["het"] != "homogeneous":
+                            v += f"/{a['het']}"
+                    parts.append(v)
+                cells.append("; ".join(parts))
+            lines.append(f"| {_fmt_pref(p)} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)

@@ -241,13 +241,21 @@ def apply_async_update(global_params, client_params, *, mix: float,
                              base=scaled_base)
 
 
+AGGREGATORS = {
+    "fedavg": FedAvg,
+    "fedprox": FedAvg,     # proximal term lives client-side
+    "fednova": FedNova,
+    "fedadagrad": FedAdagrad,
+    "fedadam": FedAdam,
+    "fedyogi": FedYogi,
+}
+
+
 def get_aggregator(name: str, **kw) -> Aggregator:
-    table = {
-        "fedavg": FedAvg,
-        "fedprox": FedAvg,     # proximal term lives client-side
-        "fednova": FedNova,
-        "fedadagrad": FedAdagrad,
-        "fedadam": FedAdam,
-        "fedyogi": FedYogi,
-    }
-    return table[name](**kw)
+    try:
+        cls = AGGREGATORS[name]
+    except KeyError:
+        valid = ", ".join(sorted(AGGREGATORS))
+        raise ValueError(f"unknown aggregator {name!r}; valid aggregators: "
+                         f"{valid}") from None
+    return cls(**kw)

@@ -74,6 +74,30 @@ class FLResult:
     sim_time: float = 0.0          # total virtual wall-clock (runtime modes)
 
 
+_eval_fn_cache = {}
+_EVAL_CACHE_MAX = 32
+
+
+def _get_eval_fn(model: Model):
+    """Jitted accuracy kernel, cached per model so the T servers of a sweep
+    (or repeated benchmark constructions over one model) share a single
+    compilation.  The cached closure keeps ``model`` alive, so the id key
+    cannot be recycled while the entry exists; the cache is bounded (FIFO
+    eviction) so a long-lived process looping over fresh models does not
+    pin them all forever."""
+    key = id(model)
+    if key not in _eval_fn_cache:
+        while len(_eval_fn_cache) >= _EVAL_CACHE_MAX:
+            _eval_fn_cache.pop(next(iter(_eval_fn_cache)))
+
+        @jax.jit
+        def eval_fn(params, x, y):
+            logits = model.forward(params, x)
+            return (logits.argmax(-1) == y).mean()
+        _eval_fn_cache[key] = eval_fn
+    return _eval_fn_cache[key]
+
+
 class FLServer:
     def __init__(self, model: Model, dataset: FederatedDataset,
                  aggregator: Aggregator, optimizer: Optimizer,
@@ -89,6 +113,7 @@ class FLServer:
         self.tuner = tuner or Tuner()
         self.rng = np.random.default_rng(config.seed)
         self._eval_fn = None
+        self._eval_batches = None
         self.fleet = fleet
         self.runtime_config = runtime_config
         from repro.federated.selection import get_selector
@@ -111,21 +136,23 @@ class FLServer:
 
     # ------------------------------------------------------------------
     def _evaluate(self, params) -> float:
-        x, y = self.dataset.test_data(self.config.eval_points)
         if self._eval_fn is None:
-            @jax.jit
-            def eval_fn(params, x, y):
-                logits = self.model.forward(params, x)
-                return (logits.argmax(-1) == y).mean()
-            self._eval_fn = eval_fn
-        # batch eval to bound memory
+            self._eval_fn = _get_eval_fn(self.model)
+        if self._eval_batches is None:
+            # the test set never changes across rounds: stage it on device
+            # once (batched to bound memory) instead of re-uploading every
+            # evaluation
+            x, y = self.dataset.test_data(self.config.eval_points)
+            bs = 256
+            self._eval_batches = [
+                (jnp.asarray(x[i:i + bs]), jnp.asarray(y[i:i + bs]),
+                 len(y[i:i + bs])) for i in range(0, len(y), bs)]
         correct = 0.0
-        bs = 256
-        for i in range(0, len(y), bs):
-            acc = self._eval_fn(params, jnp.asarray(x[i:i + bs]),
-                                jnp.asarray(y[i:i + bs]))
-            correct += float(acc) * len(y[i:i + bs])
-        return correct / len(y)
+        total = 0
+        for bx, by, n in self._eval_batches:
+            correct += float(self._eval_fn(params, bx, by)) * n
+            total += n
+        return correct / total
 
     # ------------------------------------------------------------------
     def _client_update(self, params, cid: int, e: float

@@ -65,19 +65,23 @@ def make_client_step(model: Model, optimizer: Optimizer, prox_mu: float):
 
 
 def cohort_scan(one_client, params_b, opt_b, xs, ys, masks, active,
-                global_params):
+                global_params, *, global_in_axis=None):
     """``lax.scan`` over steps with a ``vmap`` over clients inside — the
-    cohort body shared by the batched (whole cohort on one device) and
-    sharded (per-shard slice of the cohort) execution paths.
+    cohort body shared by the batched (whole cohort on one device), sharded
+    (per-shard slice of the cohort), and multi-trial sweep (clients of many
+    trials packed flat) execution paths.
 
     xs: (T, M, B, ...); active: (T, M) bool step mask freezing clients
-    that ran out of real batches."""
+    that ran out of real batches.  ``global_in_axis`` is the vmap axis for
+    ``global_params``: None (default) broadcasts one global model to every
+    client; 0 gives each client its own reference params — what the sweep
+    runner uses to pack clients of trials whose global models differ."""
 
     def scan_step(carry, inp):
         params_b, opt_b, last_loss = carry
         bx, by, bm, act = inp
         new_p, new_o, l = jax.vmap(
-            one_client, in_axes=(0, 0, 0, 0, 0, None))(
+            one_client, in_axes=(0, 0, 0, 0, 0, global_in_axis))(
                 params_b, opt_b, bx, by, bm, global_params)
 
         def keep(new, old):

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import numpy as np
@@ -51,6 +51,10 @@ from repro.federated.compression import upload_factor
 from repro.federated.server import FLResult, FLServer, RoundRecord
 from repro.runtime.events import ARRIVAL, DROPOUT, EventQueue, VirtualClock
 from repro.runtime.profiles import Fleet, homogeneous_fleet
+
+
+RUNTIME_MODES = ("sync", "async", "buffered")
+CLIENT_EXECS = ("sequential", "batched", "sharded")
 
 
 @dataclass
@@ -69,6 +73,37 @@ class RuntimeConfig:
     client_exec: str = "sequential"    # sync client-execution backend:
                                        # sequential | batched | sharded
     system_seed: int = 0               # availability/dropout stream
+
+    def __post_init__(self):
+        # fail at construction time (e.g. sweep-grid expansion), not rounds
+        # into a trial
+        if self.mode not in RUNTIME_MODES:
+            raise ValueError(
+                f"unknown runtime mode {self.mode!r}; valid modes: "
+                + ", ".join(RUNTIME_MODES))
+        if self.client_exec not in CLIENT_EXECS:
+            raise ValueError(
+                f"unknown client_exec {self.client_exec!r}; valid backends: "
+                + ", ".join(CLIENT_EXECS))
+
+
+class SyncRoundPlan(NamedTuple):
+    """One sync round's participation decision, fixed BEFORE any training
+    runs: who was dispatched, who made the deadline, and what the round
+    costs in virtual time.  Produced by ``plan_sync_round`` — shared by the
+    engine's own sync loop and the multi-trial sweep runner
+    (repro.experiments.runner), which plans every live trial's round with
+    this exact code before packing their cohorts together."""
+    active: List[int]       # dispatched clients (post availability retries)
+    sizes: List[int]        # their dataset sizes
+    comp: List[float]       # per-client simulated compute time
+    trans: List[float]      # per-client simulated transfer time
+    included: List[int]     # indices into ``active`` that aggregate
+    round_time: float       # virtual-clock advance for the round
+
+    @property
+    def train_cids(self) -> List[int]:
+        return [self.active[i] for i in self.included]
 
 
 @dataclass
@@ -162,8 +197,87 @@ class EventDrivenRuntime:
     # ------------------------------------------------------------------
     # sync: deadline rounds with straggler cutoff
     # ------------------------------------------------------------------
+    def plan_sync_round(self, hp: HyperParams) -> SyncRoundPlan:
+        """Decide one sync round's participation: selection (+ availability
+        retries), per-client timing, dropout draws, and the deadline cut.
+        Consumes the selector/server rng and the system rng exactly once per
+        round — the single source of randomness ordering for the engine's
+        sync loop AND the multi-trial sweep runner."""
+        srv, rt = self.srv, self.rt
+        m = min(hp.m, srv.dataset.n_clients)
+        participants = [int(c) for c in srv.selector.select(m)]
+        active = [c for c in participants if self._available(c)]
+        # replace unavailable clients (bounded retries) so sync rounds
+        # run at the same effective M as the async modes hold in flight
+        tried = set(participants)
+        for _ in range(5):
+            if len(active) >= m or len(tried) >= srv.dataset.n_clients:
+                break
+            k = min(srv.dataset.n_clients, m + len(tried))
+            for cid in (int(c) for c in srv.selector.select(k)):
+                if len(active) >= m:
+                    break
+                if cid in tried:
+                    continue
+                tried.add(cid)
+                if self._available(cid):
+                    active.append(cid)
+
+        # inclusion is a pure function of fleet timing, client sizes,
+        # and the dropout draws — decide it BEFORE training so cut
+        # stragglers and dropouts cost only virtual time, not host
+        # wall-clock (their simulated work is still charged below)
+        sizes = [int(srv.dataset.client_sizes[c]) for c in active]
+        comp = [self._comp_time(c, n, hp.e) for c, n in zip(active, sizes)]
+        trans = [self._trans_time(c) for c in active]
+        total = [c + t for c, t in zip(comp, trans)]
+        survived = [not self._drops(c) for c in active]
+
+        # deadline: absolute budget or completion quantile over the cohort
+        deadline = np.inf
+        if rt.deadline is not None:
+            deadline = rt.deadline
+        elif rt.deadline_quantile < 1.0 and total:
+            deadline = float(np.quantile(total, rt.deadline_quantile))
+        order = np.argsort(np.asarray(total, np.float64),
+                           kind="stable") if total else []
+        chosen = set()             # indices into active, by arrival order
+        for i in order:
+            i = int(i)
+            if survived[i] and (total[i] <= deadline
+                                or len(chosen) < rt.min_updates):
+                chosen.add(i)
+        # train + aggregate in dispatch order (matches the legacy loop
+        # exactly when nothing is cut)
+        included = [i for i in range(len(active)) if i in chosen]
+        cut_any = len(included) < sum(survived)
+        if included:
+            waited = max(total[i] for i in included)
+            round_time = max(deadline, waited) if (
+                cut_any and np.isfinite(deadline)) else waited
+        else:
+            round_time = deadline if np.isfinite(deadline) else (
+                max(total) if total else 0.0)
+        return SyncRoundPlan(active=active, sizes=sizes, comp=comp,
+                             trans=trans, included=included,
+                             round_time=round_time)
+
+    def account_sync_round(self, plan: SyncRoundPlan,
+                           hp: HyperParams):
+        """Charge one planned sync round to the cost model: critical-path
+        times over the included arrivals, exact work/traffic sums over the
+        dispatched cohort."""
+        return self.srv.cost_model.add_timed_round(
+            comp_time=max((plan.comp[i] for i in plan.included), default=0.0),
+            trans_time=max((plan.trans[i] for i in plan.included),
+                           default=0.0),
+            comp_load=self._c1 * hp.e * float(sum(plan.sizes)),
+            trans_load=(self._down * len(plan.active)
+                        + self._up * len(plan.included)),
+        )
+
     def _run_sync(self, params) -> FLResult:
-        srv, cfg, rt = self.srv, self.srv.config, self.rt
+        srv, cfg = self.srv, self.srv.config
         hp = HyperParams(m=cfg.m, e=cfg.e)
         history: List[RoundRecord] = []
         accuracy = 0.0
@@ -171,65 +285,12 @@ class EventDrivenRuntime:
 
         for r in range(cfg.max_rounds):
             t0 = time.perf_counter()
-            m = min(hp.m, srv.dataset.n_clients)
-            participants = [int(c) for c in srv.selector.select(m)]
-            active = [c for c in participants if self._available(c)]
-            # replace unavailable clients (bounded retries) so sync rounds
-            # run at the same effective M as the async modes hold in flight
-            tried = set(participants)
-            for _ in range(5):
-                if len(active) >= m or len(tried) >= srv.dataset.n_clients:
-                    break
-                k = min(srv.dataset.n_clients, m + len(tried))
-                for cid in (int(c) for c in srv.selector.select(k)):
-                    if len(active) >= m:
-                        break
-                    if cid in tried:
-                        continue
-                    tried.add(cid)
-                    if self._available(cid):
-                        active.append(cid)
-
-            # inclusion is a pure function of fleet timing, client sizes,
-            # and the dropout draws — decide it BEFORE training so cut
-            # stragglers and dropouts cost only virtual time, not host
-            # wall-clock (their simulated work is still charged below)
-            sizes = [int(srv.dataset.client_sizes[c]) for c in active]
-            comp = [self._comp_time(c, n, hp.e) for c, n in zip(active, sizes)]
-            trans = [self._trans_time(c) for c in active]
-            total = [c + t for c, t in zip(comp, trans)]
-            survived = [not self._drops(c) for c in active]
-
-            # deadline: absolute budget or completion quantile over the cohort
-            start = self.clock.now
-            deadline = np.inf
-            if rt.deadline is not None:
-                deadline = rt.deadline
-            elif rt.deadline_quantile < 1.0 and total:
-                deadline = float(np.quantile(total, rt.deadline_quantile))
-            order = np.argsort(np.asarray(total, np.float64),
-                               kind="stable") if total else []
-            chosen = set()             # indices into active, by arrival order
-            for i in order:
-                i = int(i)
-                if survived[i] and (total[i] <= deadline
-                                    or len(chosen) < rt.min_updates):
-                    chosen.add(i)
-            # train + aggregate in dispatch order (matches the legacy loop
-            # exactly when nothing is cut)
-            included = [i for i in range(len(active)) if i in chosen]
-            cut_any = len(included) < sum(survived)
-            if included:
-                waited = max(total[i] for i in included)
-                round_time = max(deadline, waited) if (
-                    cut_any and np.isfinite(deadline)) else waited
-            else:
-                round_time = deadline if np.isfinite(deadline) else (
-                    max(total) if total else 0.0)
-            self.clock.advance_to(start + round_time)
+            plan = self.plan_sync_round(hp)
+            self.clock.advance_to(self.clock.now + plan.round_time)
+            included, active = plan.included, plan.active
 
             if included:
-                train_cids = [active[i] for i in included]
+                train_cids = plan.train_cids
                 if self.client_exec == "sharded":
                     # aggregation already happened on device (psum across
                     # the clients mesh axis) — no per-client updates exist
@@ -242,13 +303,7 @@ class EventDrivenRuntime:
                         updates = [srv._client_update(params, cid, hp.e)[0]
                                    for cid in train_cids]
                     params = srv.aggregator(params, updates)
-            round_cost = srv.cost_model.add_timed_round(
-                comp_time=max((comp[i] for i in included), default=0.0),
-                trans_time=max((trans[i] for i in included), default=0.0),
-                comp_load=self._c1 * hp.e * float(sum(sizes)),
-                trans_load=(self._down * len(active)
-                            + self._up * len(included)),
-            )
+            round_cost = self.account_sync_round(plan, hp)
 
             if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
                 accuracy = srv._evaluate(params)

@@ -4,6 +4,7 @@ properties: massively distributed, unbalanced, non-IID."""
 import numpy as np
 
 from repro.data import emnist_like, speech_command_like, cifar100_like
+from repro.data.synthetic import DataSpec, make_dataset
 
 
 def test_massively_distributed_and_unbalanced():
@@ -77,3 +78,35 @@ def test_test_data_pooling():
     x, y = ds.test_data(max_points=256)
     assert len(x) == len(y) <= 256
     assert x.dtype == np.float32
+
+
+def test_test_data_cache_grows_for_larger_requests():
+    """Regression: a first small test_data call must not permanently
+    truncate the pooled test set for later, larger requests."""
+    ds = emnist_like(reduced=True)
+    x_small, y_small = ds.test_data(max_points=32)
+    assert len(y_small) == 32
+    x_big, y_big = ds.test_data(max_points=512)
+    assert len(y_big) == 512
+    # determinism: the small request is a prefix of the regenerated set
+    np.testing.assert_array_equal(x_small, x_big[:32])
+    np.testing.assert_array_equal(y_small, y_big[:32])
+    # shrinking again serves from cache without truncating it
+    _, y_mid = ds.test_data(max_points=128)
+    assert len(y_mid) == 128
+    _, y_big2 = ds.test_data(max_points=512)
+    assert len(y_big2) == 512
+
+
+def test_test_data_exhaustion_is_cached():
+    """Requests beyond the whole held-out pool return everything there is,
+    and don't regenerate on every call."""
+    ds = make_dataset(DataSpec(
+        name="tiny_test_pool", n_classes=4, shape=(8,), n_train_clients=4,
+        n_test_clients=2, size_log_mean=1.0, size_log_std=0.1, seed=3))
+    x1, y1 = ds.test_data(max_points=10_000)
+    assert ds._test_exhausted and len(y1) < 10_000
+    cached = ds._test_cache
+    x2, _ = ds.test_data(max_points=20_000)
+    assert ds._test_cache is cached     # no regeneration
+    np.testing.assert_array_equal(x1, x2)

@@ -1,0 +1,178 @@
+"""Tests for the sweep-orchestration subsystem (repro.experiments):
+grid validation at expansion time, vectorized-vs-independent trial parity,
+store resume semantics, and the paper-style table emitter."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.experiments import (CANONICAL_PREFERENCE, ResultStore, SweepSpec,
+                               TrialSpec, paper_table, parse_preferences,
+                               run_sweep, run_trial, run_vectorized)
+from repro.experiments.grid import spec_from_dict
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device mesh (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=4)")
+
+
+def tiny_spec(**kw):
+    base = dict(dataset="emnist", aggregator="fedavg", seed=0,
+                tuner="fedtune", m0=3, e0=1.0, rounds=3,
+                target_accuracy=0.99, batch_size=5, eval_points=128)
+    base.update(kw)
+    return TrialSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# grid expansion + validation
+# ---------------------------------------------------------------------------
+
+def test_grid_expands_product_and_collapses_fixed_baselines():
+    sweep = SweepSpec(datasets=("emnist",),
+                      aggregators=("fedavg", "fedadam"),
+                      preferences=parse_preferences("0,14"),
+                      seeds=(0, 1), base=tiny_spec())
+    specs = sweep.expand()
+    # fedtune: 2 agg x 2 pref x 2 seeds = 8; fixed: 2 agg x 2 seeds = 4
+    assert len(specs) == 12
+    assert len({s.key() for s in specs}) == 12
+    fixed = [s for s in specs if s.tuner == "fixed"]
+    assert len(fixed) == 4
+    assert all(s.preference == CANONICAL_PREFERENCE for s in fixed)
+    # every fedtune trial's baseline twin is in the grid
+    keys = {s.key() for s in specs}
+    for s in specs:
+        if s.tuner == "fedtune":
+            assert s.baseline_key() in keys
+
+
+def test_grid_unknown_aggregator_raises_at_expansion():
+    sweep = SweepSpec(aggregators=("fedavg", "fedsgd"), base=tiny_spec())
+    with pytest.raises(ValueError, match="fedavg"):
+        sweep.expand()
+
+
+def test_grid_unknown_client_exec_and_mode_raise():
+    with pytest.raises(ValueError, match="sequential"):
+        tiny_spec(client_exec="warp").validate()
+    with pytest.raises(ValueError, match="sync"):
+        tiny_spec(mode="psychic").validate()
+    with pytest.raises(ValueError, match="emnist"):
+        tiny_spec(dataset="mnist").validate()
+    with pytest.raises(ValueError, match="preference"):
+        tiny_spec(preference=(1.0, 1.0, 0.0, 0.0)).validate()
+
+
+def test_spec_key_roundtrip_through_dict():
+    s = tiny_spec(aggregator="fednova", preference=(0.5, 0.5, 0.0, 0.0))
+    assert spec_from_dict(s.to_dict()) == s
+
+
+def test_parse_preferences_forms():
+    assert len(parse_preferences("all")) == 15
+    assert parse_preferences("0") == [(1.0, 0.0, 0.0, 0.0)]
+    assert parse_preferences("1,0,0,0;0,1,0,0") == [(1.0, 0.0, 0.0, 0.0),
+                                                   (0.0, 1.0, 0.0, 0.0)]
+    with pytest.raises(ValueError):
+        parse_preferences("99")
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-trial parity: T=4 packed == 4 independent FLServer.run()
+# ---------------------------------------------------------------------------
+
+def assert_trial_parity(base, vec):
+    """Round records must be identical: accuracies, FedTune (M, E)
+    trajectories, and cost totals."""
+    assert base.history_acc == vec.history_acc
+    assert base.history_m == vec.history_m
+    assert base.history_e == vec.history_e
+    assert base.final_accuracy == vec.final_accuracy
+    assert (base.final_m, base.final_e) == (vec.final_m, vec.final_e)
+    np.testing.assert_allclose(base.cost, vec.cost, rtol=0, atol=0)
+    assert base.reached == vec.reached
+    assert base.rounds == vec.rounds
+
+
+def test_vectorized_matches_independent_runs_fedavg():
+    specs = [tiny_spec(seed=s) for s in range(4)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_matches_independent_runs_fedadam():
+    """One adaptive-server aggregator: per-trial optimizer state (m, v) must
+    stay private to each packed trial."""
+    specs = [tiny_spec(seed=s, aggregator="fedadam") for s in range(4)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_mixed_aggregators_and_fixed_tuner():
+    """Trials with different aggregators and tuners pack into one cohort
+    without cross-talk."""
+    specs = [tiny_spec(seed=0, aggregator="fedavg"),
+             tiny_spec(seed=1, aggregator="fednova"),
+             tiny_spec(seed=0, tuner="fixed",
+                       preference=CANONICAL_PREFERENCE)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_rejects_unpackable_trials():
+    with pytest.raises(ValueError, match="sequential engine"):
+        run_vectorized([tiny_spec(mode="async")])
+    with pytest.raises(ValueError, match="pack"):
+        run_vectorized([tiny_spec()], pack="origami")
+
+
+@multidevice
+def test_sharded_pack_matches_batched_pack():
+    """The clients-mesh packed cohort (per-trial segment sum + psum) agrees
+    with the single-device pack up to float reassociation."""
+    specs = [tiny_spec(seed=s) for s in range(3)]
+    vb = run_vectorized(specs, pack="batched")
+    vs = run_vectorized(specs, pack="sharded")
+    for b, s in zip(vb, vs):
+        assert b.history_m == s.history_m
+        assert b.history_e == s.history_e
+        np.testing.assert_allclose(b.history_acc, s.history_acc, atol=1e-3)
+        np.testing.assert_allclose(b.cost, s.cost, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# store: resume + table emission
+# ---------------------------------------------------------------------------
+
+def test_store_resume_skips_completed_keys(tmp_path):
+    store = ResultStore(str(tmp_path / "r.jsonl"))
+    specs = [tiny_spec(seed=s, rounds=2) for s in range(2)]
+    run_sweep(specs, store=store)
+    assert store.completed_keys() == {s.key() for s in specs}
+    # a re-invocation would filter on completed_keys: nothing pending
+    pending = [s for s in specs if s.key() not in store.completed_keys()]
+    assert pending == []
+    # corrupt tail (killed mid-write) is skipped, earlier records survive
+    with open(store.path, "a") as f:
+        f.write('{"key": "trunc')
+    assert len(store.load()) == 2
+
+
+def test_paper_table_reports_fedtune_vs_fixed(tmp_path):
+    store = ResultStore(str(tmp_path / "t.jsonl"))
+    specs = [tiny_spec(rounds=2),
+             tiny_spec(rounds=2, tuner="fixed",
+                       preference=CANONICAL_PREFERENCE)]
+    run_sweep(specs, store=store)
+    table = paper_table(store.load())
+    assert "emnist" in table and "fedavg" in table and "%" in table
+    # unpaired records tabulate to nothing, not an error
+    assert "no fedtune" in paper_table([])
