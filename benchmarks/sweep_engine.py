@@ -8,21 +8,24 @@ This benchmark runs the same T-trial grid (emnist-reduced, FedTune, seeds
 
   sequential — T full ``FLServer.run()`` calls, one after another (the
                pre-sweep-engine workflow)
-  vectorized — ``run_vectorized`` packing all T trials per virtual round
+  vectorized — ``run_vectorized`` packing all T trials: per virtual round
+               (sync) or per merged-event-queue macro-step with one
+               arrival-lane per trial (``--mode async|buffered``)
 
 Both engines are warmed once (same shapes, so the second run measures
 steady state, not XLA compilation) and parity is checked on the per-trial
-round records: identical accuracies and identical FedTune (M, E)
-trajectories == the vectorized engine is a faithful T-way replica.
+round records: identical accuracies, costs, FedTune (M, E) trajectories —
+and, for the event-driven modes, identical dispatch and staleness logs ==
+the vectorized engine is a faithful T-way replica.
 
 Emits the usual CSV rows plus one BENCH-format JSON line (and ``--json``
 writes it to a file for CI artifact upload):
 
-  BENCH {"bench": "sweep_engine", "t": 8, "seq_s": ..., "vec_s": ...,
-         "speedup": ..., "bitmatch": true, "max_acc_diff": 0.0}
+  BENCH {"bench": "sweep_engine", "mode": "sync", "t": 8, "seq_s": ...,
+         "vec_s": ..., "speedup": ..., "bitmatch": true, "max_acc_diff": 0.0}
 
 Usage: PYTHONPATH=src:. python benchmarks/sweep_engine.py [--t 8]
-       [--rounds 4] [--json sweep_bench.json]
+       [--rounds 4] [--mode async] [--json sweep_bench.json]
 """
 
 from __future__ import annotations
@@ -35,10 +38,14 @@ from benchmarks.common import emit
 from repro.experiments import TrialSpec, run_trial, run_vectorized
 
 
-def _specs(t: int, rounds: int):
+def _specs(t: int, rounds: int, mode: str):
+    # event-driven modes run E0=2.0: each arrival is one client's training,
+    # so deeper local runs are the regime where packing arrivals pays
+    e0 = 1.0 if mode == "sync" else 2.0
     return [TrialSpec(dataset="emnist", aggregator="fedavg", seed=s,
-                      tuner="fedtune", m0=10, e0=1.0, rounds=rounds,
-                      target_accuracy=0.99, batch_size=5, eval_points=256)
+                      tuner="fedtune", m0=10, e0=e0, rounds=rounds,
+                      target_accuracy=0.99, batch_size=5, eval_points=256,
+                      mode=mode)
             for s in range(t)]
 
 
@@ -46,11 +53,11 @@ def _run_sequential(specs):
     return [run_trial(s) for s in specs]
 
 
-def main(settings=None, *, t: int = 8, rounds: int = 4,
+def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
          pack: str = "batched", json_path: str = None):
     del settings    # reduced scale only: the sweep is over T, not data size
     import jax
-    specs = _specs(t, rounds)
+    specs = _specs(t, rounds, mode)
 
     # warm both engines (compilation + dataset materialization), then time
     # the steady state — grids are deterministic, so shapes repeat exactly
@@ -76,13 +83,19 @@ def main(settings=None, *, t: int = 8, rounds: int = 4,
                 bitmatch = False
         if tuple(b.cost) != tuple(v.cost):
             bitmatch = False
+        # event-driven modes: the full dispatch schedule and staleness
+        # sequence must replay exactly too
+        if (b.dispatch_log, b.staleness_log) != (v.dispatch_log,
+                                                 v.staleness_log):
+            bitmatch = False
 
     speedup = seq_s / vec_s if vec_s > 0 else float("inf")
-    emit(f"sweep_engine/sequential_t{t}", seq_s * 1e6, "baseline")
-    emit(f"sweep_engine/vectorized_t{t}", vec_s * 1e6,
+    emit(f"sweep_engine/{mode}_sequential_t{t}", seq_s * 1e6, "baseline")
+    emit(f"sweep_engine/{mode}_vectorized_t{t}", vec_s * 1e6,
          f"speedup_vs_seq={speedup:.2f}x")
-    payload = {"bench": "sweep_engine", "t": t, "rounds": rounds,
-               "pack": pack, "devices": jax.device_count(),
+    payload = {"bench": "sweep_engine", "mode": mode, "t": t,
+               "rounds": rounds, "pack": pack,
+               "devices": jax.device_count(),
                "seq_s": round(seq_s, 4), "vec_s": round(vec_s, 4),
                "speedup": round(speedup, 3), "bitmatch": bitmatch,
                "max_acc_diff": max_acc_diff}
@@ -98,8 +111,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--t", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--mode", default="sync",
+                    choices=("sync", "async", "buffered"),
+                    help="runtime mode of the benchmarked trials (async/"
+                         "buffered exercise the merged event-queue engine)")
     ap.add_argument("--pack", default="batched",
                     choices=("batched", "sharded"))
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    main(t=args.t, rounds=args.rounds, pack=args.pack, json_path=args.json)
+    main(t=args.t, rounds=args.rounds, mode=args.mode, pack=args.pack,
+         json_path=args.json)

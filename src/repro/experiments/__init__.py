@@ -1,15 +1,22 @@
 """Sweep orchestration: whole populations of FL trials as one workload.
 
-``grid``   — TrialSpec/SweepSpec product grids with eager validation.
-``runner`` — sequential and vectorized (trials-as-an-axis) execution.
-``store``  — append-only JSONL results, resume keys, paper-style tables.
+``grid``   — TrialSpec/SweepSpec product grids with eager validation
+             (axes: preference x aggregator x dataset x seed x (M0,E0)
+             x tuner x runtime mode x fleet profile).
+``runner`` — sequential and vectorized (trials-as-an-axis) execution:
+             sync trials pack per virtual round, async/buffered trials
+             pack off a merged multi-trial event queue; both bit-identical
+             to standalone runs.
+``store``  — append-only JSONL results, resume keys, paper-style tables
+             (per-mode/per-profile columns, legacy-row tolerant).
 """
 
 from repro.experiments.grid import (CANONICAL_PREFERENCE,  # noqa: F401
                                     SweepSpec, TrialSpec, parse_preferences,
                                     spec_from_dict)
 from repro.experiments.runner import (TrialResult, build_server,  # noqa: F401
-                                      run_sweep, run_trial, run_vectorized)
+                                      run_sweep, run_trial, run_vectorized,
+                                      run_vectorized_events)
 from repro.experiments.store import (ResultStore,  # noqa: F401
                                      aggregate_over_seeds, improvement_pct,
                                      pair_with_baselines, paper_table)

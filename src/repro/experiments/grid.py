@@ -11,7 +11,8 @@ name raises a ValueError naming the valid options at grid-expansion time,
 not minutes into trial 37.
 
 ``SweepSpec.expand()`` is the product over
-    preferences x aggregators x datasets x seeds x (M0, E0) x tuners,
+    preferences x aggregators x datasets x seeds x (M0, E0) x tuners
+    x runtime modes x fleet profiles,
 with one reduction: fixed-tuner (baseline) trials ignore the preference
 vector, so the preference axis is collapsed to ``CANONICAL_PREFERENCE`` for
 them and duplicates are dropped — T fedtune trials share one fixed baseline
@@ -34,6 +35,32 @@ CANONICAL_PREFERENCE = (0.25, 0.25, 0.25, 0.25)
 
 @dataclass(frozen=True)
 class TrialSpec:
+    """One FL training, fully determined — the unit of sweep work.
+
+    Result-bearing fields (all part of ``key()``):
+      dataset     — synthetic federation family: speech_command | emnist
+                    | cifar100 (``reduced`` selects the small CI variant).
+      aggregator  — server aggregation: fedavg | fedprox | fednova |
+                    fedadagrad | fedadam | fedyogi.
+      preference  — the paper's (α, β, γ, δ) weights over CompT/TransT/
+                    CompL/TransL; must sum to 1.
+      seed        — drives model init, server rng (selection + batch
+                    order), system rng, and fleet sampling.
+      tuner       — fedtune (Alg. 1 controller) | fixed (the baseline
+                    the tables normalize against).
+      mode        — runtime regime: sync | async (FedAsync) | buffered
+                    (FedBuff).
+      het         — fleet heterogeneity profile: homogeneous | mild |
+                    stragglers | mobile (runtime/profiles.py).
+      m0, e0      — initial participants per round / local passes: the
+                    (M, E) pair FedTune tunes from.
+      rounds      — max rounds (sync) or max aggregations (async/
+                    buffered); target_accuracy stops a trial early.
+      compression — None | 'int8' upload deltas (sequential-engine only).
+
+    Execution-only fields (absent from ``key()`` because every backend is
+    result-parity-equal, pinned in tests): ``client_exec``.
+    """
     dataset: str = "emnist"
     aggregator: str = "fedavg"
     preference: Tuple[float, float, float, float] = CANONICAL_PREFERENCE
@@ -139,7 +166,12 @@ def spec_from_dict(d: dict) -> TrialSpec:
 @dataclass
 class SweepSpec:
     """Product grid over the experiment axes.  ``inits`` carries the
-    (M0, E0) axis as pairs."""
+    (M0, E0) axis as pairs; ``modes`` spans the runtime regimes
+    (sync/async/buffered) and ``hets`` the fleet heterogeneity profiles
+    (homogeneous/mild/stragglers/mobile — see runtime/profiles.py), so one
+    grid can cover the paper's aggregator rows ACROSS runtime regimes and
+    device fleets.  Any axis left at its default contributes a single
+    column, keeping pre-existing store keys stable."""
     datasets: Sequence[str] = ("emnist",)
     aggregators: Sequence[str] = ("fedavg",)
     preferences: Sequence[Tuple[float, float, float, float]] = (
@@ -148,6 +180,7 @@ class SweepSpec:
     tuners: Sequence[str] = VALID_TUNERS
     inits: Sequence[Tuple[int, float]] = ((5, 2.0),)
     modes: Sequence[str] = ("sync",)
+    hets: Sequence[str] = ("homogeneous",)
     base: TrialSpec = field(default_factory=TrialSpec)   # shared settings
 
     def expand(self) -> List[TrialSpec]:
@@ -155,14 +188,16 @@ class SweepSpec:
         Order is deterministic (itertools.product over the given axis
         order), so ``--limit N`` resume prefixes are stable."""
         seen = {}
-        for ds, agg, pref, seed, tn, (m0, e0), mode in itertools.product(
-                self.datasets, self.aggregators, self.preferences,
-                self.seeds, self.tuners, self.inits, self.modes):
+        for ds, agg, pref, seed, tn, (m0, e0), mode, het in \
+                itertools.product(
+                    self.datasets, self.aggregators, self.preferences,
+                    self.seeds, self.tuners, self.inits, self.modes,
+                    self.hets):
             if tn == "fixed":
                 pref = CANONICAL_PREFERENCE   # baseline ignores preference
             spec = replace(self.base, dataset=ds, aggregator=agg,
                            preference=tuple(pref), seed=seed, tuner=tn,
-                           m0=m0, e0=e0, mode=mode).validate()
+                           m0=m0, e0=e0, mode=mode, het=het).validate()
             seen.setdefault(spec.key(), spec)
         return list(seen.values())
 

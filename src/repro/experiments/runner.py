@@ -31,11 +31,24 @@ PR 1-2 and runs all of them per virtual round:
               accuracy and steps its (M, E) independently; finished trials
               drop out of the pack.
 
+Async/buffered trials vectorize through a second path (``run_vectorized_
+events``) built on ONE merged virtual-clock event queue spanning all live
+trials (events tagged with trial id, ties ordered (time, trial_key,
+per-trial push seq) — see runtime/events.py).  Each macro-step advances
+every live trial to its next pending client completion (dropouts handled
+inline), packs those arrivals into one flat cohort — each vmap lane
+training from ITS trial's dispatch-snapshot params via ``global_in_axis=0``
+— then routes each trained lane back to its trial's FedAsync mixer or
+FedBuff buffer on the host, exactly as the standalone event loop would
+(the loop's plan/apply/account/finish phases are the engine's own
+``plan_event``/``apply_event``/``finish_event_round`` methods).
+
 Parity contract (pinned in tests/test_experiments.py): a T-trial vectorized
-sweep produces per-trial round records — accuracies, costs, FedTune (M, E)
-trajectories — identical to T independent ``FLServer.run()`` calls with
-matching seeds.  Lanes of a vmapped cohort are computed independently, so
-packing MORE clients around a trial does not change its floats.
+sweep — sync, async, or buffered — produces per-trial round records
+(accuracies, costs, FedTune (M, E) trajectories, dispatch/staleness logs)
+identical to T independent ``FLServer.run()`` calls with matching seeds.
+Lanes of a vmapped cohort are computed independently, so packing MORE
+clients around a trial does not change its floats.
 """
 
 from __future__ import annotations
@@ -62,6 +75,7 @@ from repro.runtime.batched import (_pow2, _stack_streams, bucket_by_steps,
                                    cohort_scan, make_client_step,
                                    materialize_streams)
 from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig
+from repro.runtime.events import MergedEventQueue, TrialQueueView
 from repro.runtime.profiles import sample_fleet
 
 ENGINES = ("vectorized", "sequential")
@@ -139,6 +153,17 @@ def build_server(spec: TrialSpec) -> FLServer:
 
 @dataclass
 class TrialResult:
+    """One finished trial, flattened for the JSONL store.
+
+    ``history_*`` are the per-round trajectories the parity tests compare;
+    ``dispatch_log``/``staleness_log`` (async/buffered runtime modes only,
+    empty otherwise) record every dispatch as (virtual time, client id,
+    model version) and the staleness of every applied arrival — they are
+    compared in the event-engine parity tests but deliberately NOT
+    serialized by ``to_record`` (the store schema stays stable and small).
+    ``engine`` names the execution path that produced the result
+    (``sequential``, ``vectorized/<pack>``, ``vectorized-events/<pack>``);
+    it is informational — engines are result-parity-equal."""
     spec: TrialSpec
     reached: bool
     rounds: int
@@ -152,6 +177,8 @@ class TrialResult:
     history_m: List[int]
     history_e: List[float]
     history_acc: List[float]
+    dispatch_log: List[tuple] = field(default_factory=list)
+    staleness_log: List[int] = field(default_factory=list)
 
     @classmethod
     def from_flresult(cls, spec: TrialSpec, res: FLResult, wall: float,
@@ -163,7 +190,9 @@ class TrialResult:
             sim_time=float(res.sim_time), wall=wall, engine=engine,
             history_m=[r.m for r in res.history],
             history_e=[float(r.e) for r in res.history],
-            history_acc=[float(r.accuracy) for r in res.history])
+            history_acc=[float(r.accuracy) for r in res.history],
+            dispatch_log=list(res.dispatch_log or []),
+            staleness_log=list(res.staleness_log or []))
 
     def to_record(self) -> dict:
         return {
@@ -478,19 +507,13 @@ def _to_result(tr: _LiveTrial, engine: str) -> TrialResult:
     return TrialResult.from_flresult(tr.spec, res, tr.wall, engine)
 
 
-def run_vectorized(specs: Sequence[TrialSpec], *, pack: str = "batched",
-                   on_result: Optional[Callable[[TrialResult], None]] = None,
-                   verbose: bool = False) -> List[TrialResult]:
-    """Run every trial concurrently, one packed cohort per virtual round."""
-    if pack not in PACKS:
-        raise ValueError(f"unknown pack {pack!r}; valid packs: "
-                         + ", ".join(PACKS))
-    for s in specs:
-        if s.mode != "sync" or s.compression:
-            raise ValueError(
-                f"trial {s.key()!r} cannot be vectorized (vectorized "
-                "execution covers sync mode without upload compression); "
-                "route it through the sequential engine")
+def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
+                         pack: str = "batched",
+                         on_result: Optional[Callable] = None,
+                         verbose: bool = False) -> List[TrialResult]:
+    """Run every sync-mode trial concurrently, one packed cohort per
+    virtual round (plan -> pack -> reduce -> step, as described in the
+    module docstring)."""
     mesh = None
     if pack == "sharded":
         if jax.device_count() == 1:
@@ -562,15 +585,291 @@ def run_vectorized(specs: Sequence[TrialSpec], *, pack: str = "batched",
 
 
 # ---------------------------------------------------------------------------
-# entry point
+# the merged-queue event engine (async / buffered trials)
 # ---------------------------------------------------------------------------
+
+@dataclass(eq=False)     # identity semantics: trials are packed by object
+class _EventTrial:
+    """One live async/buffered trial of a merged-queue sweep: its server,
+    runtime engine, event-loop state, and the facade binding it onto the
+    sweep's merged event queue."""
+    spec: TrialSpec
+    srv: FLServer
+    eng: EventDrivenRuntime
+    view: TrialQueueView
+    st: Any = None             # repro.runtime.engine.EventLoopState
+    done: bool = False
+    wall: float = 0.0
+
+
+@dataclass
+class _Lane:
+    """One packed arrival: trial + its in-flight record + the batch stream
+    materialized at the standalone loop's exact rng point.  ``params`` and
+    ``loss`` are filled by the cohort training."""
+    tr: _EventTrial
+    fl: Any                    # repro.runtime.engine._InFlight
+    stream: list
+    n_steps: int
+    params: Any = None
+    loss: float = 0.0
+
+
+def _make_event_live(spec: TrialSpec, merged: MergedEventQueue,
+                     trial_ord: int) -> _EventTrial:
+    srv = build_server(spec)
+    eng = EventDrivenRuntime(srv, fleet=srv.fleet,
+                             config=srv.runtime_config or RuntimeConfig())
+    view = TrialQueueView(merged, trial_ord)
+    tr = _EventTrial(spec=spec, srv=srv, eng=eng, view=view)
+    params = srv.model.init(jax.random.PRNGKey(srv.config.seed))
+    # initial concurrency dispatches straight into the merged queue
+    tr.st = eng.init_event_state(params, queue=view)
+    return tr
+
+
+def _coalesce_buckets(buckets: Dict[int, List[int]],
+                      min_lanes: int = 4) -> Dict[int, List[int]]:
+    """Merge under-filled step buckets upward into the next-larger one.
+
+    The event pack holds at most one lane per trial, so strict
+    ``bucket_by_steps`` grouping would often produce singleton buckets —
+    one compiled dispatch per lane, which is exactly the overhead packing
+    exists to amortize.  Promoting a small bucket's lanes into a larger
+    t_pad only adds masked (frozen-state) steps, so results are unchanged;
+    for big packs the original waste bound still applies because full
+    buckets are left alone."""
+    out: Dict[int, List[int]] = {}
+    pending: List[int] = []
+    for t_pad in sorted(buckets):
+        pending.extend(buckets[t_pad])
+        if len(pending) >= min_lanes or t_pad == max(buckets):
+            out[t_pad] = pending     # the max bucket absorbs any tail
+            pending = []
+    return out
+
+
+def _run_event_group(lanes: List[_Lane]):
+    """Train one model-group's packed arrivals: one vmap lane per trial,
+    each lane starting local training from ITS trial's dispatch-snapshot
+    params (``global_in_axis=0`` also anchors the FedProx term there, as
+    ``local_train`` does).  Buckets by pow2 step count (small buckets
+    coalesced upward — see ``_coalesce_buckets``) and pads the lane axis
+    to a pow2 so compiled (T, M) shapes repeat across macro-steps — and
+    are SHARED with the sync sweep path (same ``_multi_cohort_fn``)."""
+    tr0 = lanes[0].tr
+    model, opt = tr0.srv.model, tr0.srv.optimizer
+    bs = tr0.srv.config.batch_size
+    run = _multi_cohort_fn(model, opt, tr0.srv.config.prox_mu)
+    buckets = _coalesce_buckets(
+        bucket_by_steps([ln.n_steps for ln in lanes]))
+    for t_pad, idx in sorted(buckets.items()):
+        sel = [lanes[i] for i in idx]
+        m_pad = _pow2(len(sel))    # bound the compiled (T, M) shape set
+        xs, ys, masks, active = _stack_streams(
+            [ln.stream for ln in sel] + [[]] * (m_pad - len(sel)),
+            bs, t_pad)
+        global_b = _tree_stack([ln.fl.params for ln in sel]
+                               + [sel[0].fl.params] * (m_pad - len(sel)))
+        params_b, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
+                                  jnp.asarray(masks), jnp.asarray(active))
+        ll = np.asarray(last_loss)
+        # one host transfer per leaf, then free numpy views per lane — much
+        # cheaper than a device-slice dispatch per (lane, leaf)
+        leaves, treedef = jax.tree.flatten(params_b)
+        np_leaves = [np.asarray(l) for l in leaves]
+        for k, ln in enumerate(sel):
+            ln.params = jax.tree.unflatten(treedef, [l[k] for l in np_leaves])
+            ln.loss = float(ll[k])
+
+
+def run_vectorized_events(specs: Sequence[TrialSpec], *,
+                          pack: str = "batched",
+                          on_result: Optional[Callable] = None,
+                          verbose: bool = False) -> List[TrialResult]:
+    """Run T async/buffered trials concurrently off ONE merged event queue.
+
+    Each macro-step: (1) COLLECT — pop the merged queue in deterministic
+    (time, trial_key, seq) order, advancing every live trial to its next
+    pending arrival; dropouts are handled inline (loads charged, concurrency
+    refilled), and events of trials that already contributed an arrival are
+    deferred untouched (an arrival must be trained and applied before its
+    trial's later events may be processed — FedAsync/FedBuff state is
+    sequential per trial).  Each collected arrival's batch stream is
+    materialized at the exact point the standalone loop would consume the
+    trial's server rng.  (2) PACK — all collected arrivals train as one
+    flat cohort (one vmap lane per trial, each from its own dispatch
+    snapshot).  (3) APPLY — per trial on the host: selector update, FedAsync
+    mixing / FedBuff buffering, accounting, evaluation, FedTune step, and
+    concurrency refill, via the engine's own event-loop methods.
+
+    Parity: bit-identical to each trial's standalone ``FLServer.run()``
+    (accuracies, costs, dispatch/staleness logs, (M, E) trajectories)."""
+    for s in specs:
+        if s.mode not in ("async", "buffered") or s.compression:
+            raise ValueError(
+                f"trial {s.key()!r} is not an event-driven trial "
+                "(run_vectorized_events covers async/buffered modes "
+                "without upload compression)")
+    if pack == "sharded":
+        # event packs are one-arrival-per-trial wide and FedAsync/FedBuff
+        # mixing is per-trial host state — there is no cross-client
+        # aggregation to fuse on device, so the mesh layout buys nothing
+        print("experiments: sharded packing does not apply to event-driven "
+              "(async/buffered) trials — per-trial mixing is host-side; "
+              "using the batched pack", flush=True)
+        pack = "batched"
+
+    merged = MergedEventQueue()
+    # trial ordinals from sorted keys: the merged queue's cross-trial tie
+    # order is then independent of the caller's spec order
+    order = sorted(range(len(specs)), key=lambda i: specs[i].key())
+    trials: List[_EventTrial] = [None] * len(specs)
+    by_ord: Dict[int, _EventTrial] = {}
+    for trial_ord, i in enumerate(order):
+        tr = _make_event_live(specs[i], merged, trial_ord)
+        trials[i] = tr
+        by_ord[trial_ord] = tr
+    results: List[TrialResult] = [None] * len(specs)
+    engine = f"vectorized-events/{pack}"
+
+    def end_trial(tr: _EventTrial):
+        tr.eng.account_event_tail(tr.st)
+        tr.done = True
+        res = TrialResult.from_flresult(tr.spec, tr.eng.event_result(tr.st),
+                                        tr.wall, engine)
+        results[trials.index(tr)] = res
+        if on_result is not None:
+            on_result(res)
+
+    n_steps_total = 0
+    while True:
+        live = [tr for tr in trials if not tr.done]
+        if not live:
+            break
+        t0 = time.perf_counter()
+        # 1. COLLECT one pending arrival per live trial
+        lanes: List[_Lane] = []
+        packed = set()
+        stash = []
+        while merged and len(packed) < len(live):
+            ev = merged.pop()
+            tr = by_ord[ev.trial_ord]
+            if tr.done:
+                continue               # stale event of a finished trial
+            if id(tr) in packed:
+                stash.append(ev)       # defer: this trial already packed
+                continue
+            tr.eng.clock.advance_to(ev.time)
+            fl = tr.eng.plan_event(tr.st, ev)
+            if fl is None:             # dropout: refill and keep collecting
+                tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,
+                                              queue=tr.view)
+                continue
+            data = [tr.srv.dataset.client_data(fl.client_id)]
+            streams, n_steps = materialize_streams(
+                data, tr.srv.config.batch_size, fl.e, tr.srv.rng)
+            lanes.append(_Lane(tr=tr, fl=fl, stream=streams[0],
+                               n_steps=n_steps[0]))
+            packed.add(id(tr))
+        for ev in stash:
+            merged.requeue(ev)
+        # a live trial with nothing queued ends exactly as the standalone
+        # loop does on an empty queue (the dispatch deadlock guard makes
+        # this unreachable in practice, but the semantics must match)
+        for tr in live:
+            if id(tr) not in packed and not tr.view:
+                end_trial(tr)
+        # 2. PACK: train all collected arrivals as one cohort per model group
+        groups: Dict[tuple, List[_Lane]] = {}
+        for ln in lanes:
+            if ln.n_steps == 0:        # zero-step client: stays at snapshot
+                ln.params, ln.loss = ln.fl.params, 0.0
+                continue
+            groups.setdefault(_group_key(ln.tr), []).append(ln)
+        for group in groups.values():
+            _run_event_group(group)
+        # 3. APPLY per trial, in collect (= merged pop) order
+        wall = time.perf_counter() - t0
+        share = wall / max(len(lanes), 1)
+        for ln in lanes:
+            tr, fl = ln.tr, ln.fl
+            tr.wall += share
+            tr.srv.selector.update(int(fl.client_id), ln.loss,
+                                   fl.n_examples)
+            aggregated, staleness = tr.eng.apply_event(tr.st, fl, ln.params)
+            if aggregated:
+                tr.eng.finish_event_round(tr.st, staleness, share)
+                if tr.st.reached:
+                    end_trial(tr)
+                    continue
+            tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,
+                                          queue=tr.view)
+            if len(tr.st.history) >= tr.srv.config.max_rounds:
+                end_trial(tr)
+        n_steps_total += 1
+        if verbose and n_steps_total % 20 == 0:
+            done = sum(tr.done for tr in trials)
+            print(f"  event sweep step {n_steps_total}: {done}/{len(trials)}"
+                  f" trials done, {len(lanes)} arrivals packed", flush=True)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def run_vectorized(specs: Sequence[TrialSpec], *, pack: str = "batched",
+                   on_result: Optional[Callable[[TrialResult], None]] = None,
+                   verbose: bool = False) -> List[TrialResult]:
+    """Run every trial concurrently: sync trials through the round-packed
+    engine (one cohort per virtual round), async/buffered trials through
+    the merged-event-queue engine (one cohort per macro-step).  Both reuse
+    the same compiled ``_multi_cohort_fn`` shapes.  Results come back in
+    input-spec order; ``on_result`` fires per trial as it finishes.
+
+    Upload-compressed trials cannot vectorize (the packed cohort trades in
+    raw params, not quantized deltas) — route them through ``run_trial``/
+    the sequential engine."""
+    if pack not in PACKS:
+        raise ValueError(f"unknown pack {pack!r}; valid packs: "
+                         + ", ".join(PACKS))
+    for s in specs:
+        if s.compression:
+            raise ValueError(
+                f"trial {s.key()!r} cannot be vectorized (vectorized "
+                "execution covers uncompressed uploads only); route it "
+                "through the sequential engine")
+    sync_specs = [s for s in specs if s.mode == "sync"]
+    event_specs = [s for s in specs if s.mode != "sync"]
+    out: Dict[str, TrialResult] = {}
+
+    def keep(res: TrialResult):
+        out[res.spec.key()] = res
+        if on_result is not None:
+            on_result(res)
+
+    if sync_specs:
+        _run_vectorized_sync(sync_specs, pack=pack, on_result=keep,
+                             verbose=verbose)
+    if event_specs:
+        run_vectorized_events(event_specs, pack=pack, on_result=keep,
+                              verbose=verbose)
+    return [out[s.key()] for s in specs]
+
 
 def run_sweep(specs: Sequence[TrialSpec], *, store=None,
               engine: str = "vectorized", pack: str = "batched",
               verbose: bool = False) -> List[TrialResult]:
     """Run a list of trials and (optionally) append each finished trial to
     ``store`` as it completes — the unit of resume is the trial, so a killed
-    sweep restarts exactly at the first unfinished key."""
+    sweep restarts exactly at the first unfinished key.
+
+    ``engine='vectorized'`` packs every uncompressed trial (sync trials per
+    virtual round, async/buffered trials off the merged event queue); only
+    upload-compressed trials fall back to one-at-a-time execution.
+    ``engine='sequential'`` runs everything one ``FLServer.run()`` at a
+    time — engines are result-parity-equal, so stores can mix them."""
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; valid engines: "
                          + ", ".join(ENGINES))
@@ -586,15 +885,13 @@ def run_sweep(specs: Sequence[TrialSpec], *, store=None,
             emit(run_trial(spec))
         return results
 
-    vec_keys = {s.key() for s in specs
-                if s.mode == "sync" and not s.compression}
-    rest = [s for s in specs if s.key() not in vec_keys]
+    rest = [s for s in specs if s.compression]
     if rest:
-        print(f"experiments: {len(rest)} trial(s) use async/buffered or "
-              "compressed execution; running them sequentially", flush=True)
+        print(f"experiments: {len(rest)} trial(s) use upload compression; "
+              "running them sequentially", flush=True)
         for spec in rest:
             emit(run_trial(spec))
-    vec = [s for s in specs if s.key() in vec_keys]
+    vec = [s for s in specs if not s.compression]
     if vec:
         run_vectorized(vec, pack=pack, on_result=emit, verbose=verbose)
     return results

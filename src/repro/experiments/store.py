@@ -10,7 +10,11 @@ The table emitter reproduces the paper's reporting convention: every
 FedTune trial is normalized against its FixedTuner twin (same dataset,
 aggregator, seed, M0/E0 — ``baseline_key``) through eq. (6) under the
 trial's own preference vector, and the '+x%' numbers are mean +- std over
-seeds.  Positive = FedTune reduced the weighted system overhead.
+seeds.  Positive = FedTune reduced the weighted system overhead.  Stores
+spanning several fleet profiles or runtime modes render those as extra
+column suffixes (``fedavg·stragglers``); records from before those axes
+existed tabulate under the defaults (homogeneous/sync) instead of
+KeyError-ing, so old stores keep resuming and tabulating.
 """
 
 from __future__ import annotations
@@ -70,10 +74,18 @@ class ResultStore:
 # aggregation + table emission
 # ---------------------------------------------------------------------------
 
+def _spec_of(record: dict) -> TrialSpec:
+    """The record's TrialSpec, tolerant of legacy rows: fields a record
+    predates (e.g. ``het`` before fleet-profile axes existed) fall back to
+    the TrialSpec defaults instead of KeyError-ing — resuming or tabulating
+    an old store must never crash on schema growth."""
+    return spec_from_dict(record.get("spec") or {})
+
+
 def improvement_pct(record: dict, baseline: dict) -> float:
     """The paper's '+x%' convention: -100 * I(fixed, tuned) under the tuned
     trial's preference (positive = FedTune reduced the weighted overhead)."""
-    pref = Preference(*record["spec"]["preference"])
+    pref = Preference(*_spec_of(record).preference)
     tuned = SystemCost(*record["cost"])
     fixed = SystemCost(*baseline["cost"])
     return -100.0 * tuned.weighted_relative_to(fixed, pref)
@@ -96,10 +108,10 @@ def pair_with_baselines(records: Iterable[dict]) -> List[dict]:
     dropped (a partial sweep's fedtune rows can't be normalized yet)."""
     records = list(records)
     by_key: Dict[str, dict] = {r["key"]: r for r in records
-                               if r.get("status") == "done"}
+                               if r.get("status") == "done" and "key" in r}
     out = []
     for r in records:
-        if r.get("status") != "done" or r["spec"]["tuner"] != "fedtune":
+        if r.get("status") != "done" or _spec_of(r).tuner != "fedtune":
             continue
         base = by_key.get(r.get("baseline_key"))
         if base is None:
@@ -113,7 +125,7 @@ def aggregate_over_seeds(paired: Iterable[dict]) -> List[dict]:
     and report mean +- std of improvement / accuracy / rounds."""
     cells: Dict[tuple, List[dict]] = {}
     for r in paired:
-        spec = spec_from_dict(r["spec"])
+        spec = _spec_of(r)
         cells.setdefault(_cell_id(spec), []).append(r)
     out = []
     for cell, rs in sorted(cells.items(), key=lambda kv: repr(kv[0])):
@@ -123,7 +135,7 @@ def aggregate_over_seeds(paired: Iterable[dict]) -> List[dict]:
         out.append({
             "dataset": cell[0], "aggregator": cell[1],
             "preference": list(cell[2]), "m0": cell[3], "e0": cell[4],
-            "het": cell[8],
+            "mode": cell[5], "het": cell[8],
             "n_seeds": len(rs),
             "improvement_mean": float(imps.mean()),
             "improvement_std": float(imps.std()),
@@ -137,11 +149,29 @@ def _fmt_pref(p) -> str:
     return "(" + ",".join(f"{v:g}" for v in p) + ")"
 
 
+def _column_of(row: dict, multi_het: bool, multi_mode: bool) -> str:
+    """Column identity for one aggregated cell: the aggregator, widened by
+    runtime-mode and fleet-profile suffixes when the store spans those axes
+    (e.g. ``fedavg·async`` or ``fedavg·stragglers``) so a mode/het sweep
+    renders as side-by-side columns instead of collapsing into one."""
+    col = row["aggregator"]
+    if multi_mode and row.get("mode"):
+        col += f"·{row['mode']}"
+    if multi_het:
+        col += f"·{row.get('het') or 'homogeneous'}"
+    return col
+
+
 def paper_table(records: Iterable[dict], *,
                 title: Optional[str] = None) -> str:
     """Markdown tables in the paper's layout: one section per dataset, rows
     = preference vectors, columns = aggregators, cells = mean +- std
-    overhead reduction of FedTune vs the FixedTuner baseline."""
+    overhead reduction of FedTune vs the FixedTuner baseline.  When the
+    store spans several fleet profiles (``SweepSpec.hets``) or runtime
+    modes, the aggregator columns split per profile/mode
+    (``fedavg·stragglers``, ``fedavg·async``, ...); legacy records written
+    before those axes existed default to homogeneous/sync rather than
+    erroring."""
     agg = aggregate_over_seeds(pair_with_baselines(records))
     if not agg:
         return "(no fedtune/baseline pairs to tabulate yet)"
@@ -151,7 +181,9 @@ def paper_table(records: Iterable[dict], *,
     datasets = sorted({a["dataset"] for a in agg})
     for ds in datasets:
         rows = [a for a in agg if a["dataset"] == ds]
-        aggs = sorted({a["aggregator"] for a in rows})
+        multi_het = len({a.get("het") or "homogeneous" for a in rows}) > 1
+        multi_mode = len({a.get("mode") or "sync" for a in rows}) > 1
+        cols = sorted({_column_of(a, multi_het, multi_mode) for a in rows})
         prefs = []
         for a in rows:
             key = tuple(a["preference"])
@@ -159,23 +191,25 @@ def paper_table(records: Iterable[dict], *,
                 prefs.append(key)
         lines.append(f"\n### {ds} — FedTune overhead reduction vs "
                      "FixedTuner (+ = better)")
-        lines.append("| preference (a,b,g,d) | " + " | ".join(aggs) + " |")
-        lines.append("|---" * (len(aggs) + 1) + "|")
+        lines.append("| preference (a,b,g,d) | " + " | ".join(cols) + " |")
+        lines.append("|---" * (len(cols) + 1) + "|")
         for p in prefs:
             cells = []
-            for ag in aggs:
+            for col in cols:
                 m = [a for a in rows
-                     if tuple(a["preference"]) == p and a["aggregator"] == ag]
+                     if tuple(a["preference"]) == p
+                     and _column_of(a, multi_het, multi_mode) == col]
                 if not m:
                     cells.append("—")
                     continue
                 parts = []
-                for a in m:   # one entry per (M0, E0) / het grid point
+                for a in m:   # one entry per remaining (M0, E0) grid point
                     v = (f"{a['improvement_mean']:+.2f}"
                          f"±{a['improvement_std']:.2f}%")
                     if len(m) > 1:
                         v += f" @({a['m0']},{a['e0']:g})"
-                        if a["het"] != "homogeneous":
+                        if not multi_het and (
+                                a.get("het") or "homogeneous") != "homogeneous":
                             v += f"/{a['het']}"
                     parts.append(v)
                 cells.append("; ".join(parts))

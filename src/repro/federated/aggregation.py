@@ -229,16 +229,29 @@ class FedBuffAggregator:
         return out
 
 
+@jax.jit
+def _async_mix(a, global_params, client_params):
+    scaled_base = jax.tree.map(lambda p: p * (1.0 - a), global_params)
+    flat_c, meta = _flatten(client_params)
+    flat_b, _ = _flatten(scaled_base)
+    w = jnp.reshape(a, (1,)).astype(jnp.float32)
+    return _unflatten(kernel_ops.fed_aggregate(w, flat_c[None, :], flat_b),
+                      meta)
+
+
 def apply_async_update(global_params, client_params, *, mix: float,
                        staleness: int, alpha: float = 0.5,
                        kind: str = "polynomial"):
     """FedAsync [Xie'19] model mixing: theta <- (1-a) theta + a theta_k with
-    a = mix * s(staleness).  Runs through the fed_aggregate kernel."""
+    a = mix * s(staleness).  Runs through the fed_aggregate kernel inside a
+    single jitted call (cached per parameter tree structure/shape by jit,
+    with ``a`` traced) — async runtimes call this on EVERY arrival, so the
+    eager flatten/scale/combine chain it replaces (~15 dispatches) was a
+    per-arrival hot spot for both the standalone event loop and the
+    vectorized event sweep."""
     a = float(np.clip(mix * staleness_weight(staleness, alpha, kind),
                       0.0, 1.0))
-    scaled_base = jax.tree.map(lambda p: p * (1.0 - a), global_params)
-    return _weighted_combine(np.array([a], np.float32), [client_params],
-                             base=scaled_base)
+    return _async_mix(a, global_params, client_params)
 
 
 AGGREGATORS = {

@@ -72,6 +72,10 @@ class FLResult:
     final_e: float
     params: Any = None             # final global model parameters
     sim_time: float = 0.0          # total virtual wall-clock (runtime modes)
+    dispatch_log: Optional[List[tuple]] = None   # async/buffered: every
+                                   # dispatch as (virtual t, cid, version)
+    staleness_log: Optional[List[int]] = None    # async/buffered: staleness
+                                   # of each applied (non-dropout) arrival
 
 
 _eval_fn_cache = {}

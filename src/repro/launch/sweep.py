@@ -1,10 +1,13 @@
 """Sweep launcher: run whole grids of FedTune trials as one workload.
 
 Expands a product grid (datasets x aggregators x preferences x seeds x
-(M0,E0) x tuners), skips every trial already present in the JSONL result
-store (resume-by-trial-key — kill the process and re-invoke to continue),
-and runs the rest through the vectorized trials-as-an-axis engine
-(repro.experiments.runner) or one-at-a-time.
+(M0,E0) x tuners x runtime modes x fleet profiles), skips every trial
+already present in the JSONL result store (resume-by-trial-key — kill the
+process and re-invoke to continue), and runs the rest through the
+vectorized trials-as-an-axis engine (repro.experiments.runner) or
+one-at-a-time.  Sync trials pack per virtual round; async/buffered trials
+pack off a merged multi-trial event queue — both bit-identical to
+independent runs, so engines can be mixed freely against one store.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.sweep \
@@ -15,6 +18,10 @@ Usage:
   # the paper's 15 preference vectors on one dataset
   PYTHONPATH=src python -m repro.launch.sweep --preferences all --rounds 30
 
+  # runtime regimes and fleet profiles as grid axes (columns in --table)
+  PYTHONPATH=src python -m repro.launch.sweep --mode sync,async,buffered \
+      --het homogeneous,stragglers --rounds 10 --table
+
   # CI smoke: a fixed 24-trial reduced grid; --limit N runs only the first
   # N pending trials (the second invocation resumes the remainder)
   PYTHONPATH=src python -m repro.launch.sweep --preset smoke --limit 8
@@ -22,9 +29,12 @@ Usage:
 
 ``--preferences`` takes 'all', indices into the paper's Table-4 list
 ('0,4,14'), or literal quads separated by ';'.  ``--init`` carries the
-(M0, E0) axis as colon pairs: '5:2.0;10:1.0'.  ``--pack sharded`` lays the
-packed cohort over the ``clients`` mesh axis (multi-device; on CPU set
-XLA_FLAGS=--xla_force_host_platform_device_count=8).
+(M0, E0) axis as colon pairs: '5:2.0;10:1.0'.  ``--mode`` and ``--het``
+take comma lists and become grid axes.  ``--pack sharded`` lays the packed
+sync cohort over the ``clients`` mesh axis (multi-device; on CPU set
+XLA_FLAGS=--xla_force_host_platform_device_count=8); event-driven trials
+always use the batched pack (their per-trial FedAsync/FedBuff mixing is
+host-side, so there is nothing to fuse on-device).
 """
 
 from __future__ import annotations
@@ -48,6 +58,23 @@ def smoke_grid():
     )
 
 
+def smoke_async_grid():
+    """The CI event-runtime smoke grid: 8 tiny trials spanning the async
+    and buffered runtime modes (fedtune + fixed baselines per mode), all
+    vectorized off the merged event queue."""
+    from repro.experiments import SweepSpec, TrialSpec, parse_preferences
+    return SweepSpec(
+        datasets=("emnist",),
+        aggregators=("fedavg",),
+        preferences=parse_preferences("14"),
+        seeds=(0, 1),
+        inits=((4, 1.0),),
+        modes=("async", "buffered"),
+        base=TrialSpec(rounds=2, target_accuracy=0.99, batch_size=5,
+                       eval_points=128),
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="emnist",
@@ -67,8 +94,11 @@ def main():
     ap.add_argument("--target", type=float, default=0.5)
     ap.add_argument("--batch-size", type=int, default=10)
     ap.add_argument("--mode", default="sync",
-                    choices=("sync", "async", "buffered"))
-    ap.add_argument("--het", default="homogeneous")
+                    help="comma list of runtime modes (grid axis): "
+                         "sync,async,buffered")
+    ap.add_argument("--het", default="homogeneous",
+                    help="comma list of fleet profiles (grid axis): "
+                         "homogeneous,mild,stragglers,mobile")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale datasets (default: reduced)")
     ap.add_argument("--engine", default="vectorized",
@@ -76,7 +106,8 @@ def main():
     ap.add_argument("--pack", default="batched",
                     choices=("batched", "sharded"),
                     help="vectorized cohort packing: one device (batched) "
-                         "or the clients mesh axis (sharded)")
+                         "or the clients mesh axis (sharded; sync trials "
+                         "only — event-driven trials pack batched)")
     ap.add_argument("--out", default="runs/sweep.jsonl",
                     help="JSONL result store (resume key source)")
     ap.add_argument("--no-resume", action="store_true",
@@ -86,8 +117,11 @@ def main():
                     help="run at most N pending trials (0 = all)")
     ap.add_argument("--table", action="store_true",
                     help="emit the paper-style overhead-reduction table")
-    ap.add_argument("--preset", default=None, choices=("smoke",),
-                    help="named grid (smoke = the 24-trial CI grid)")
+    ap.add_argument("--preset", default=None,
+                    choices=("smoke", "smoke-async"),
+                    help="named grid (smoke = the 24-trial CI grid; "
+                         "smoke-async = the 8-trial async/buffered "
+                         "event-runtime grid)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
@@ -96,6 +130,8 @@ def main():
 
     if args.preset == "smoke":
         sweep = smoke_grid()
+    elif args.preset == "smoke-async":
+        sweep = smoke_async_grid()
     else:
         inits = []
         for pair in args.init.split(";"):
@@ -108,9 +144,10 @@ def main():
             seeds=tuple(range(args.seed_base, args.seed_base + args.seeds)),
             tuners=tuple(args.tuners.split(",")),
             inits=tuple(inits),
-            modes=(args.mode,),
+            modes=tuple(args.mode.split(",")),
+            hets=tuple(args.het.split(",")),
             base=TrialSpec(rounds=args.rounds, target_accuracy=args.target,
-                           batch_size=args.batch_size, het=args.het,
+                           batch_size=args.batch_size,
                            reduced=not args.full),
         )
     specs = sweep.expand()     # validates every axis value eagerly

@@ -7,8 +7,10 @@ aggregation), and a vmapped batched client-execution path.
 """
 
 from repro.runtime.batched import batched_local_train  # noqa: F401
-from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig  # noqa: F401
-from repro.runtime.events import EventQueue, VirtualClock  # noqa: F401
+from repro.runtime.engine import (EventDrivenRuntime,  # noqa: F401
+                                  EventLoopState, RuntimeConfig)
+from repro.runtime.events import (EventQueue, MergedEventQueue,  # noqa: F401
+                                  TrialQueueView, VirtualClock)
 from repro.runtime.sharded import (ShardedRound,  # noqa: F401
                                    sharded_fedavg_train)
 from repro.runtime.profiles import (PROFILES, DeviceClass, Fleet,  # noqa: F401

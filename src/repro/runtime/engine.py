@@ -24,6 +24,12 @@ one device, batched.py), or sharded (cohort laid out over a ``clients``
 mesh axis with on-device psum aggregation, sharded.py; auto-falls back to
 batched on a single device).
 
+Both the sync round and the async/buffered event loop are factored into
+plan/apply/account/finish pieces (``plan_sync_round``/``account_sync_round``
+and the ``EventLoopState`` methods) so the multi-trial sweep engine
+(repro.experiments.runner) replays the exact same decisions and rng order
+while replacing only the training step with packed cohorts.
+
 Timing model (virtual seconds; unit-rate reference devices keep the numbers
 in the same scale as the paper's eqs. 2-5): a dispatched client downloads
 the model, computes ``E`` passes at its device speed, and uploads its update
@@ -38,8 +44,8 @@ bit-reproducible from its seeds.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Any, Dict, List, NamedTuple, Optional
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import numpy as np
@@ -59,6 +65,15 @@ CLIENT_EXECS = ("sequential", "batched", "sharded")
 
 @dataclass
 class RuntimeConfig:
+    """The runtime's two orthogonal knobs and their mode-specific settings.
+
+    ``mode`` picks WHEN results arrive (sync deadline rounds / FedAsync /
+    FedBuff); ``client_exec`` picks HOW a sync round's local training
+    executes (see the fallback matrix in docs/ARCHITECTURE.md).  Names are
+    validated at construction — a sweep grid fails at expansion time, not
+    rounds into trial 37.  Invariant pinned in tests/test_runtime.py:
+    ``RuntimeConfig()`` (sync, no deadline) over a homogeneous fleet
+    reproduces ``FLServer.run_legacy`` round for round, bit-exactly."""
     mode: str = "sync"                 # sync | async | buffered
     deadline: Optional[float] = None   # sync: absolute round deadline (virtual s)
     deadline_quantile: float = 1.0     # sync: cut stragglers above this
@@ -115,6 +130,51 @@ class _InFlight:
     n_examples: int
     comp_time: float
     trans_time: float
+
+
+@dataclass
+class EventLoopState:
+    """Host-side state of ONE async/buffered trial's event loop, factored
+    out of ``_run_event_loop`` so the standalone engine and the vectorized
+    multi-trial sweep runner (repro.experiments.runner) drive the SAME
+    plan/apply/account/finish code — the async/buffered analogue of
+    ``SyncRoundPlan``.
+
+    Lifecycle per arrival event (the contract the sweep runner replays):
+
+      1. ``plan_event``    — pop the in-flight record, charge its traffic/
+                             compute loads; returns None for a dropout.
+      2. (train)           — the client's local training from its dispatch
+                             snapshot ``_InFlight.params``.  The standalone
+                             loop runs ``FLServer._client_update``; the
+                             sweep runner packs many trials' arrivals into
+                             one vectorized cohort instead.
+      3. ``apply_event``   — staleness-discounted FedAsync mixing or a
+                             FedBuff buffer add (+flush when full).
+      4. ``finish_event_round`` (only if an aggregation happened) —
+                             cost accounting, evaluation, history record,
+                             FedTune controller step, target check.
+      5. ``fill_event_concurrency`` — top in-flight clients back up to M.
+
+    All stochasticity (selection, availability, dropout, batch order) flows
+    through the owning runtime's rngs in exactly this order, which is what
+    makes a vectorized trial bit-identical to its standalone run."""
+    hp: HyperParams
+    params: Any                    # current global model
+    buffer: FedBuffAggregator      # buffered mode's K-slot delta buffer
+    version: int = 0               # server model version (increments per agg)
+    inflight: Dict[int, _InFlight] = field(default_factory=dict)
+    pend_comp: List[float] = field(default_factory=list)
+    pend_trans: List[float] = field(default_factory=list)
+    pend_comp_load: float = 0.0
+    pend_trans_load: float = 0.0
+    last_agg_clock: float = 0.0
+    history: List[RoundRecord] = field(default_factory=list)
+    accuracy: float = 0.0
+    reached: bool = False
+    # bookkeeping compared in the sweep parity tests (consumes no rng):
+    dispatch_log: List[tuple] = field(default_factory=list)   # (t, cid, ver)
+    staleness_log: List[int] = field(default_factory=list)    # per arrival
 
 
 class EventDrivenRuntime:
@@ -185,6 +245,9 @@ class EventDrivenRuntime:
 
     # ------------------------------------------------------------------
     def run(self, params=None) -> FLResult:
+        """Run the trial to target accuracy or the round budget under the
+        configured mode; ``params`` defaults to a fresh seed-determined
+        model init (identical to the legacy loop's)."""
         cfg = self.srv.config
         if params is None:
             params = self.srv.model.init(jax.random.PRNGKey(cfg.seed))
@@ -355,148 +418,198 @@ class EventDrivenRuntime:
         return res.params
 
     # ------------------------------------------------------------------
-    # async / buffered: a true event loop over the virtual clock
+    # async / buffered: a true event loop over the virtual clock.
+    # The loop is factored into plan/apply/account/finish methods over an
+    # ``EventLoopState`` (the async analogue of plan_sync_round/
+    # account_sync_round) so the vectorized multi-trial sweep runner can
+    # drive T trials' event loops off ONE merged queue, replacing only the
+    # training step with a packed cohort.
     # ------------------------------------------------------------------
-    def _run_event_loop(self, params) -> FLResult:
+    def init_event_state(self, params, queue=None) -> EventLoopState:
+        """Fresh event-loop state with the initial concurrency dispatched at
+        t=0.  ``queue`` defaults to the runtime's own ``EventQueue``; the
+        sweep runner passes a ``TrialQueueView`` onto its merged queue."""
+        cfg, rt = self.srv.config, self.rt
+        st = EventLoopState(
+            hp=HyperParams(m=cfg.m, e=cfg.e), params=params,
+            buffer=FedBuffAggregator(
+                buffer_k=rt.buffer_k, server_lr=rt.server_lr,
+                staleness_alpha=rt.staleness_alpha,
+                staleness_kind=rt.staleness_kind))
+        self.fill_event_concurrency(st, 0.0, queue)
+        return st
+
+    def dispatch_event(self, st: EventLoopState, cid: int, now: float,
+                       queue=None):
+        """Send the current global model to one client: snapshot
+        ``st.params``/``st.version`` into an ``_InFlight`` record, draw the
+        client's mid-round dropout (system rng), and schedule its
+        arrival/dropout event at ``now + comp + trans``."""
+        queue = self.queue if queue is None else queue
+        srv = self.srv
+        n = int(srv.dataset.client_sizes[cid])
+        comp = self._comp_time(cid, n, st.hp.e)
+        trans = self._trans_time(cid)
+        st.inflight[cid] = _InFlight(cid, st.params, st.version, st.hp.e,
+                                     n, comp, trans)
+        st.dispatch_log.append((float(now), int(cid), st.version))
+        kind = DROPOUT if self._drops(cid) else ARRIVAL
+        queue.push(now + comp + trans, kind, client_id=cid)
+
+    def fill_event_concurrency(self, st: EventLoopState, now: float,
+                               queue=None):
+        """Top up in-flight clients to M.  The selector is asked for a
+        cohort large enough to survive the in-flight exclusion, so
+        deterministic rankers (deadline/guided/smallest) hand out their
+        next-best candidates instead of re-proposing the one client
+        already dispatched (which would collapse concurrency to 1)."""
+        queue = self.queue if queue is None else queue
+        srv = self.srv
+        target = min(st.hp.m, srv.dataset.n_clients)
+        for _ in range(5):               # availability retry passes
+            need = target - len(st.inflight)
+            if need <= 0:
+                return
+            k = min(srv.dataset.n_clients, need + len(st.inflight))
+            candidates = [int(c) for c in srv.selector.select(k)
+                          if int(c) not in st.inflight]
+            for cid in candidates:
+                if len(st.inflight) >= target:
+                    return
+                if self._available(cid):
+                    self.dispatch_event(st, cid, now, queue)
+        # deadlock guard: nothing in flight and nothing queued means the
+        # simulation would halt — model a persistent retry succeeding
+        if not st.inflight and not queue:
+            cohort = [int(c) for c in srv.selector.select(1)]
+            if cohort:
+                self.dispatch_event(st, cohort[0], now, queue)
+
+    def plan_event(self, st: EventLoopState, ev) -> Optional[_InFlight]:
+        """Process one popped event's host-side half: retire its in-flight
+        record and charge the traffic/compute loads (download always
+        happened; compute too — a dropout dies on the way back up, AFTER
+        the work was spent).  Returns the in-flight record whose client
+        must now train, or None for a dropout (caller refills concurrency
+        and moves on).  The caller advances the clock to ``ev.time`` first."""
+        fl = st.inflight.pop(ev.client_id)
+        st.pend_comp_load += self._c1 * fl.e * fl.n_examples
+        st.pend_trans_load += self._down
+        if ev.kind == DROPOUT:
+            return None
+        st.pend_trans_load += self._up
+        st.pend_comp.append(fl.comp_time)
+        st.pend_trans.append(fl.trans_time)
+        return fl
+
+    def apply_event(self, st: EventLoopState, fl: _InFlight,
+                    client_params) -> Tuple[bool, int]:
+        """Fold one trained arrival into the global model: FedAsync
+        staleness-discounted mixing (async — always aggregates) or a
+        FedBuff delta-buffer add, flushing through the ``fed_aggregate``
+        kernel when K deltas accumulated.  ``client_params`` must be the
+        client's locally trained params starting from its dispatch snapshot
+        ``fl.params``.  Returns (aggregated, staleness)."""
+        rt = self.rt
+        staleness = st.version - fl.version
+        st.staleness_log.append(int(staleness))
+        if rt.mode == "async":
+            st.params = apply_async_update(
+                st.params, client_params, mix=rt.async_mix,
+                staleness=staleness, alpha=rt.staleness_alpha,
+                kind=rt.staleness_kind)
+            return True, staleness
+        # buffered
+        delta = jax.tree.map(lambda a, b: a - b, client_params, fl.params)
+        st.buffer.add(delta, staleness)
+        if st.buffer.full:
+            st.params = st.buffer.flush(st.params)
+            return True, staleness
+        return False, staleness
+
+    def account_event_round(self, st: EventLoopState):
+        """Charge one aggregation window to the cost model: the virtual
+        clock advance since the last aggregation, split by the contributing
+        arrivals' own compute/transfer ratio (exact in the one-arrival
+        case), plus the exact load sums.  Resets the pending accumulators."""
+        dt = self.clock.now - st.last_agg_clock
+        csum, tsum = sum(st.pend_comp), sum(st.pend_trans)
+        frac = csum / (csum + tsum) if (csum + tsum) > 0 else 0.0
+        round_cost = self.srv.cost_model.add_timed_round(
+            comp_time=dt * frac, trans_time=dt * (1.0 - frac),
+            comp_load=st.pend_comp_load, trans_load=st.pend_trans_load)
+        st.pend_comp, st.pend_trans = [], []
+        st.pend_comp_load = st.pend_trans_load = 0.0
+        st.last_agg_clock = self.clock.now
+        return round_cost
+
+    def finish_event_round(self, st: EventLoopState, staleness: int,
+                           wall: float):
+        """Complete one aggregation: bump the model version, account the
+        window, evaluate on schedule, record history, and step the FedTune
+        controller — or set ``st.reached`` and stop if the target accuracy
+        was hit (the controller does NOT step on the final round)."""
         srv, cfg, rt = self.srv, self.srv.config, self.rt
-        hp = HyperParams(m=cfg.m, e=cfg.e)
-        history: List[RoundRecord] = []
-        accuracy = 0.0
-        reached = False
-        version = 0
-        inflight: Dict[int, _InFlight] = {}
-        buffer = FedBuffAggregator(
-            buffer_k=rt.buffer_k, server_lr=rt.server_lr,
-            staleness_alpha=rt.staleness_alpha,
-            staleness_kind=rt.staleness_kind)
-        # per-aggregation accounting accumulators
-        pend_comp, pend_trans = [], []
-        pend_comp_load = pend_trans_load = 0.0
-        last_agg_clock = 0.0
+        st.version += 1
+        r = len(st.history)
+        round_cost = self.account_event_round(st)
+        if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+            st.accuracy = srv._evaluate(st.params)
+        st.history.append(RoundRecord(
+            r, st.hp.m, st.hp.e, st.accuracy, round_cost, wall,
+            sim_time=self.clock.now,
+            n_updates=(1 if rt.mode == "async" else rt.buffer_k)))
+        if cfg.log_every and (r + 1) % cfg.log_every == 0:
+            print(f"  agg {r+1:4d}  acc={st.accuracy:.4f}  M={st.hp.m} "
+                  f"E={st.hp.e:g}  stale={staleness} "
+                  f"t_sim={self.clock.now:.3g}", flush=True)
+        if st.accuracy >= cfg.target_accuracy:
+            st.reached = True
+            return
+        st.hp = srv.tuner.on_round(r, st.accuracy, round_cost,
+                                   srv.cost_model.total, st.hp)
+        st.hp = st.hp.clamped(srv.dataset.n_clients, 100.0)
+
+    def account_event_tail(self, st: EventLoopState):
+        """Arrivals after the last aggregation (including a partially
+        filled FedBuff buffer) did real downloads and compute the clock
+        charged for — account their window's loads even though no further
+        flush happens."""
+        if st.pend_comp_load > 0.0 or st.pend_trans_load > 0.0:
+            self.account_event_round(st)
+
+    def event_result(self, st: EventLoopState) -> FLResult:
+        """Package a finished event-loop state (standalone or merged)."""
+        return FLResult(
+            reached_target=st.reached, rounds=len(st.history),
+            final_accuracy=st.accuracy,
+            total_cost=self.srv.cost_model.total.copy(), history=st.history,
+            final_m=st.hp.m, final_e=st.hp.e, params=st.params,
+            sim_time=self.clock.now, dispatch_log=st.dispatch_log,
+            staleness_log=st.staleness_log)
+
+    def _run_event_loop(self, params) -> FLResult:
+        srv, cfg = self.srv, self.srv.config
+        st = self.init_event_state(params)
         last_wall = time.perf_counter()
 
-        def dispatch(cid: int, now: float):
-            n = int(srv.dataset.client_sizes[cid])
-            comp = self._comp_time(cid, n, hp.e)
-            trans = self._trans_time(cid)
-            inflight[cid] = _InFlight(cid, params, version, hp.e, n,
-                                      comp, trans)
-            kind = DROPOUT if self._drops(cid) else ARRIVAL
-            self.queue.push(now + comp + trans, kind, client_id=cid)
-
-        def fill_concurrency(now: float):
-            """Top up in-flight clients to M.  The selector is asked for a
-            cohort large enough to survive the in-flight exclusion, so
-            deterministic rankers (deadline/guided/smallest) hand out their
-            next-best candidates instead of re-proposing the one client
-            already dispatched (which would collapse concurrency to 1)."""
-            target = min(hp.m, srv.dataset.n_clients)
-            for _ in range(5):               # availability retry passes
-                need = target - len(inflight)
-                if need <= 0:
-                    return
-                k = min(srv.dataset.n_clients, need + len(inflight))
-                candidates = [int(c) for c in srv.selector.select(k)
-                              if int(c) not in inflight]
-                for cid in candidates:
-                    if len(inflight) >= target:
-                        return
-                    if self._available(cid):
-                        dispatch(cid, now)
-            # deadlock guard: nothing in flight and nothing queued means the
-            # simulation would halt — model a persistent retry succeeding
-            if not inflight and not self.queue:
-                cohort = [int(c) for c in srv.selector.select(1)]
-                if cohort:
-                    dispatch(cohort[0], now)
-
-        fill_concurrency(0.0)
-
-        while self.queue and len(history) < cfg.max_rounds and not reached:
+        while self.queue and len(st.history) < cfg.max_rounds \
+                and not st.reached:
             ev = self.queue.pop()
             self.clock.advance_to(ev.time)
-            fl = inflight.pop(ev.client_id)
-
-            # traffic/compute loads: download always happened; compute too
-            # (a dropout dies on the way back up, after the work was spent)
-            pend_comp_load += self._c1 * fl.e * fl.n_examples
-            pend_trans_load += self._down
-            if ev.kind == DROPOUT:
-                fill_concurrency(self.clock.now)
+            fl = self.plan_event(st, ev)
+            if fl is None:                   # dropout: refill and move on
+                self.fill_event_concurrency(st, self.clock.now)
                 continue
-            pend_trans_load += self._up
-            pend_comp.append(fl.comp_time)
-            pend_trans.append(fl.trans_time)
-
             upd, _n = srv._client_update(fl.params, fl.client_id, fl.e)
-            staleness = version - fl.version
-
-            aggregated = False
-            if rt.mode == "async":
-                params = apply_async_update(
-                    params, upd.params, mix=rt.async_mix,
-                    staleness=staleness, alpha=rt.staleness_alpha,
-                    kind=rt.staleness_kind)
-                aggregated = True
-            else:  # buffered
-                delta = jax.tree.map(lambda a, b: a - b, upd.params,
-                                     fl.params)
-                buffer.add(delta, staleness)
-                if buffer.full:
-                    params = buffer.flush(params)
-                    aggregated = True
-
+            aggregated, staleness = self.apply_event(st, fl, upd.params)
             if aggregated:
-                version += 1
-                r = len(history)
-                # time overheads: the virtual clock advance since the last
-                # aggregation, split by the contributing arrivals' own
-                # compute/transfer ratio (exact in the one-arrival case)
-                dt = self.clock.now - last_agg_clock
-                csum, tsum = sum(pend_comp), sum(pend_trans)
-                frac = csum / (csum + tsum) if (csum + tsum) > 0 else 0.0
-                round_cost = srv.cost_model.add_timed_round(
-                    comp_time=dt * frac, trans_time=dt * (1.0 - frac),
-                    comp_load=pend_comp_load, trans_load=pend_trans_load)
-                pend_comp, pend_trans = [], []
-                pend_comp_load = pend_trans_load = 0.0
-                last_agg_clock = self.clock.now
-
-                if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
-                    accuracy = srv._evaluate(params)
                 now_wall = time.perf_counter()
-                history.append(RoundRecord(
-                    r, hp.m, hp.e, accuracy, round_cost,
-                    now_wall - last_wall, sim_time=self.clock.now,
-                    n_updates=(1 if rt.mode == "async" else rt.buffer_k)))
+                self.finish_event_round(st, staleness, now_wall - last_wall)
                 last_wall = now_wall
-                if cfg.log_every and (r + 1) % cfg.log_every == 0:
-                    print(f"  agg {r+1:4d}  acc={accuracy:.4f}  M={hp.m} "
-                          f"E={hp.e:g}  stale={staleness} "
-                          f"t_sim={self.clock.now:.3g}", flush=True)
-                if accuracy >= cfg.target_accuracy:
-                    reached = True
+                if st.reached:
                     break
-                hp = srv.tuner.on_round(r, accuracy, round_cost,
-                                        srv.cost_model.total, hp)
-                hp = hp.clamped(srv.dataset.n_clients, 100.0)
+            self.fill_event_concurrency(st, self.clock.now)
 
-            fill_concurrency(self.clock.now)
-
-        # arrivals after the last aggregation (including a partially filled
-        # FedBuff buffer) did real downloads and compute the clock charged
-        # for — account their loads even though no further flush happens
-        if pend_comp_load > 0.0 or pend_trans_load > 0.0:
-            dt = self.clock.now - last_agg_clock
-            csum, tsum = sum(pend_comp), sum(pend_trans)
-            frac = csum / (csum + tsum) if (csum + tsum) > 0 else 0.0
-            srv.cost_model.add_timed_round(
-                comp_time=dt * frac, trans_time=dt * (1.0 - frac),
-                comp_load=pend_comp_load, trans_load=pend_trans_load)
-
-        return FLResult(
-            reached_target=reached, rounds=len(history),
-            final_accuracy=accuracy,
-            total_cost=srv.cost_model.total.copy(), history=history,
-            final_m=hp.m, final_e=hp.e, params=params,
-            sim_time=self.clock.now)
+        self.account_event_tail(st)
+        return self.event_result(st)

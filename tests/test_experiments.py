@@ -85,7 +85,8 @@ def test_parse_preferences_forms():
 
 def assert_trial_parity(base, vec):
     """Round records must be identical: accuracies, FedTune (M, E)
-    trajectories, and cost totals."""
+    trajectories, cost totals — and for event-driven (async/buffered)
+    trials, the full dispatch schedule and staleness sequence."""
     assert base.history_acc == vec.history_acc
     assert base.history_m == vec.history_m
     assert base.history_e == vec.history_e
@@ -94,6 +95,8 @@ def assert_trial_parity(base, vec):
     np.testing.assert_allclose(base.cost, vec.cost, rtol=0, atol=0)
     assert base.reached == vec.reached
     assert base.rounds == vec.rounds
+    assert base.dispatch_log == vec.dispatch_log
+    assert base.staleness_log == vec.staleness_log
 
 
 def test_vectorized_matches_independent_runs_fedavg():
@@ -129,9 +132,73 @@ def test_vectorized_mixed_aggregators_and_fixed_tuner():
 
 def test_vectorized_rejects_unpackable_trials():
     with pytest.raises(ValueError, match="sequential engine"):
-        run_vectorized([tiny_spec(mode="async")])
+        run_vectorized([tiny_spec(compression="int8")])
     with pytest.raises(ValueError, match="pack"):
         run_vectorized([tiny_spec()], pack="origami")
+
+
+# ---------------------------------------------------------------------------
+# merged-event-queue parity: T=4 vectorized async/buffered == 4 independent
+# FLServer.run() calls (accuracies, costs, dispatch/staleness records,
+# (M, E) trajectories) — the PR-4 acceptance bar
+# ---------------------------------------------------------------------------
+
+def test_vectorized_async_matches_independent_runs():
+    specs = [tiny_spec(seed=s, mode="async") for s in range(4)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert b.staleness_log, "async trials must record staleness"
+        assert b.dispatch_log, "async trials must record dispatches"
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_buffered_matches_independent_runs():
+    """FedBuff trials: K-deep delta buffers stay private per trial, and
+    flush-round records replay exactly."""
+    specs = [tiny_spec(seed=s, mode="buffered", rounds=2) for s in range(4)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_async_heterogeneous_fleet_parity():
+    """A straggler fleet exercises the merged queue's dropout path (loads
+    charged, concurrency refilled inline) and wide arrival-time spreads."""
+    specs = [tiny_spec(seed=s, mode="async", het="stragglers")
+             for s in range(3)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_event_rerun_reproduces_exactly():
+    """Re-running a merged-queue sweep replays the identical event order:
+    same dispatch schedule, staleness sequence, and round records (the
+    resume/re-run determinism the merged queue's (time, trial_key, seq)
+    tie order exists to guarantee)."""
+    specs = [tiny_spec(seed=s, mode="async") for s in range(3)]
+    first = run_vectorized(specs)
+    second = run_vectorized(specs)
+    for a, b in zip(first, second):
+        assert_trial_parity(a, b)
+
+
+def test_vectorized_mixed_modes_one_sweep():
+    """One run_vectorized call spanning all three runtime regimes: sync
+    trials pack per round, async/buffered off the merged queue, results in
+    input order, every trial bit-matching its standalone run."""
+    specs = [tiny_spec(seed=0, mode="sync"),
+             tiny_spec(seed=1, mode="async"),
+             tiny_spec(seed=2, mode="buffered", rounds=2),
+             tiny_spec(seed=3, mode="async", aggregator="fedadam")]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for s, b, v in zip(specs, base, vec):
+        assert v.spec == s
+        assert_trial_parity(b, v)
 
 
 @multidevice
@@ -176,3 +243,68 @@ def test_paper_table_reports_fedtune_vs_fixed(tmp_path):
     assert "emnist" in table and "fedavg" in table and "%" in table
     # unpaired records tabulate to nothing, not an error
     assert "no fedtune" in paper_table([])
+
+
+def test_store_resume_covers_event_trials(tmp_path):
+    """Async trials run through run_sweep land in the store and resume by
+    key exactly like sync ones."""
+    store = ResultStore(str(tmp_path / "a.jsonl"))
+    specs = [tiny_spec(seed=s, mode="async", rounds=2) for s in range(2)]
+    res = run_sweep(specs, store=store)
+    assert all(r.engine.startswith("vectorized-events") for r in res)
+    assert store.completed_keys() == {s.key() for s in specs}
+
+
+# ---------------------------------------------------------------------------
+# fleet-profile axes + het-aware / legacy-tolerant table emission
+# ---------------------------------------------------------------------------
+
+def test_sweep_hets_axis_expands_and_keys_distinct():
+    sweep = SweepSpec(datasets=("emnist",), aggregators=("fedavg",),
+                      preferences=parse_preferences("14"), seeds=(0,),
+                      hets=("homogeneous", "stragglers"), base=tiny_spec())
+    specs = sweep.expand()
+    # (fedtune + fixed) x 2 profiles, all distinct keys
+    assert len(specs) == 4
+    assert {s.het for s in specs} == {"homogeneous", "stragglers"}
+    assert len({s.key() for s in specs}) == 4
+
+
+def _fake_record(spec, cost, drop_spec_keys=()):
+    d = spec.to_dict()
+    for k in drop_spec_keys:
+        d.pop(k, None)
+    return {"key": spec.key(), "status": "done",
+            "baseline_key": spec.baseline_key(), "spec": d,
+            "reached": False, "rounds": spec.rounds,
+            "final_accuracy": 0.4, "final_m": spec.m0, "final_e": spec.e0,
+            "cost": cost, "sim_time": 1.0, "wall": 0.1, "engine": "test",
+            "history_m": [], "history_e": [], "history_acc": []}
+
+
+def test_paper_table_renders_het_profile_columns():
+    rows = []
+    for het in ("homogeneous", "stragglers"):
+        tuned = tiny_spec(het=het)
+        fixed = tiny_spec(het=het, tuner="fixed",
+                          preference=CANONICAL_PREFERENCE)
+        rows.append(_fake_record(tuned, [80.0, 80.0, 80.0, 80.0]))
+        rows.append(_fake_record(fixed, [100.0, 100.0, 100.0, 100.0]))
+    table = paper_table(rows)
+    assert "fedavg·homogeneous" in table
+    assert "fedavg·stragglers" in table
+
+
+def test_paper_table_tolerates_legacy_rows_missing_het():
+    """Records written before the het/preference fields existed (pre-PR-4
+    stores) must tabulate under the defaults, not KeyError."""
+    tuned = tiny_spec()
+    fixed = tiny_spec(tuner="fixed", preference=CANONICAL_PREFERENCE)
+    rows = [_fake_record(tuned, [80.0] * 4,
+                         drop_spec_keys=("het", "preference")),
+            _fake_record(fixed, [100.0] * 4, drop_spec_keys=("het",))]
+    table = paper_table(rows)
+    assert "fedavg" in table and "%" in table
+    # and a record with no spec dict at all is skipped, not fatal
+    assert "no fedtune" in paper_table([{"key": "x", "status": "done",
+                                         "cost": [1, 1, 1, 1]}])

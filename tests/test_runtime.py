@@ -60,6 +60,36 @@ def test_event_queue_orders_by_time_then_push_order():
     assert [e.kind for e in popped] == ["arrival", "dropout", "arrival"]
 
 
+def test_merged_event_queue_deterministic_tie_order():
+    """The multi-trial queue's total order is (time, trial_ord, per-trial
+    push seq): cross-trial ties at one instant break by the trial's stable
+    ordinal, within-trial ties by push order — the same order the trial's
+    standalone EventQueue would pop, so merged re-runs replay each trial's
+    events identically."""
+    from repro.runtime.events import MergedEventQueue, TrialQueueView
+    q = MergedEventQueue()
+    q.push(1, 2.0, "arrival", client_id=10)
+    q.push(0, 2.0, "arrival", client_id=11)
+    q.push(1, 2.0, "dropout", client_id=12)   # trial 1, pushed later
+    q.push(0, 1.0, "arrival", client_id=13)
+    popped = [q.pop() for _ in range(4)]
+    assert [(e.time, e.trial_ord, e.client_id) for e in popped] == [
+        (1.0, 0, 13), (2.0, 0, 11), (2.0, 1, 10), (2.0, 1, 12)]
+
+    # requeue restores the exact original key (deferred events of a packed
+    # trial must not change their place in the order)
+    q.requeue(popped[1])
+    q.requeue(popped[2])
+    assert q.pop() is popped[1] and q.pop() is popped[2]
+
+    # the per-trial facade answers per-trial emptiness, not global
+    view0, view1 = TrialQueueView(q, 0), TrialQueueView(q, 1)
+    assert not view0 and not view1
+    view1.push(3.0, "arrival", client_id=7)
+    assert not view0 and view1 and len(view1) == 1
+    assert q.pop().client_id == 7
+
+
 def test_virtual_clock_is_monotonic():
     c = VirtualClock()
     c.advance_to(3.0)

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link in README.md and
+docs/*.md must resolve to a real file (or directory) in the repo.
+
+External links (http/https/mailto) and pure in-page anchors (#...) are
+skipped — this guards the internal doc graph, not the internet.  A link
+with an anchor (``path#section``) is checked on its path part.
+
+Usage: python tools/check_docs_links.py [repo_root]
+Exit status 0 when every link resolves; 1 otherwise (broken links listed
+on stderr).  Run by the CI ``docs`` job and by tests/test_docs.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) — target captured up to the first unescaped ')'; images
+# (![alt](target)) match too, which is what we want
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: str):
+    """The markdown files whose links we guarantee: README.md + docs/."""
+    files = []
+    for pattern in ("README.md", "docs/*.md", "docs/**/*.md"):
+        files.extend(glob.glob(os.path.join(root, pattern), recursive=True))
+    return sorted(set(files))
+
+
+def links_in(path: str):
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # fenced code blocks routinely contain [x](y)-shaped shell/python text
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return _LINK_RE.findall(text)
+
+
+def broken_links(root: str):
+    """[(doc, link, resolved_path), ...] for every unresolvable link."""
+    out = []
+    for doc in doc_files(root):
+        for link in links_in(doc):
+            if link.startswith(_SKIP_PREFIXES):
+                continue
+            target = link.split("#", 1)[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(doc), target))
+            if not os.path.exists(resolved):
+                out.append((os.path.relpath(doc, root), link, resolved))
+    return out
+
+
+def main(root: str = ".") -> int:
+    docs = doc_files(root)
+    if not docs:
+        print(f"check_docs_links: no markdown files under {root!r}",
+              file=sys.stderr)
+        return 1
+    broken = broken_links(root)
+    n_links = sum(1 for d in docs for _l in links_in(d))
+    if broken:
+        for doc, link, resolved in broken:
+            print(f"BROKEN {doc}: ({link}) -> {resolved}", file=sys.stderr)
+        print(f"check_docs_links: {len(broken)} broken of {n_links} links "
+              f"in {len(docs)} files", file=sys.stderr)
+        return 1
+    print(f"check_docs_links: OK — {n_links} links in {len(docs)} files "
+          "all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
