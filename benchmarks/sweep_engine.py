@@ -2,15 +2,25 @@
 
 The sweep engine's claim is that trials are an *axis*, not a queue: packing
 every live trial's cohort into one scan/vmap amortizes the per-step
-dispatch overhead that dominates T independent runs on small FL models.
-This benchmark runs the same T-trial grid (emnist-reduced, FedTune, seeds
-0..T-1) both ways and reports wall-clock, speedup, and parity:
+dispatch overhead that dominates T independent runs on small FL models —
+and, since the stacked evaluation subsystem, the per-aggregation evals of
+all live trials execute as one dispatch too.  This benchmark runs the same
+T-trial grid (emnist-reduced, FedTune over the paper's preference vectors
+so all trials share one dataset and one test set) both ways and reports
+wall-clock, phase split, speedup, and parity:
 
   sequential — T full ``FLServer.run()`` calls, one after another (the
                pre-sweep-engine workflow)
   vectorized — ``run_vectorized`` packing all T trials: per virtual round
                (sync) or per merged-event-queue macro-step with one
                arrival-lane per trial (``--mode async|buffered``)
+
+Wall-clock is split into ``train_s`` (cohort/client training dispatches),
+``eval_s`` (accuracy dispatches), and ``other_s`` (host orchestration)
+through the ``repro.perf`` counters, so the eval-amortization win of the
+stacked evaluator is visible separately from the training win.
+``--compression int8`` runs the same grid with upload-compressed trials —
+they vectorize lane-wise, so ``sequential_trials`` must stay 0.
 
 Both engines are warmed once (same shapes, so the second run measures
 steady state, not XLA compilation) and parity is checked on the per-trial
@@ -22,10 +32,14 @@ Emits the usual CSV rows plus one BENCH-format JSON line (and ``--json``
 writes it to a file for CI artifact upload):
 
   BENCH {"bench": "sweep_engine", "mode": "sync", "t": 8, "seq_s": ...,
-         "vec_s": ..., "speedup": ..., "bitmatch": true, "max_acc_diff": 0.0}
+         "vec_s": ..., "speedup": ..., "bitmatch": true,
+         "train_s": ..., "eval_s": ..., "other_s": ...,
+         "seq_phases": {...}, "vec_phases": {...},
+         "sequential_trials": 0, ...}
 
 Usage: PYTHONPATH=src:. python benchmarks/sweep_engine.py [--t 8]
-       [--rounds 4] [--mode async] [--json sweep_bench.json]
+       [--rounds 4] [--mode async] [--compression int8]
+       [--json sweep_bench.json]
 """
 
 from __future__ import annotations
@@ -35,17 +49,24 @@ import json
 import time
 
 from benchmarks.common import emit
+from repro import perf
+from repro.core.preferences import PAPER_PREFERENCES
 from repro.experiments import TrialSpec, run_trial, run_vectorized
 
 
-def _specs(t: int, rounds: int, mode: str):
+def _specs(t: int, rounds: int, mode: str, compression: str = None):
     # event-driven modes run E0=2.0: each arrival is one client's training,
-    # so deeper local runs are the regime where packing arrivals pays
+    # so deeper local runs are the regime where packing arrivals pays.
+    # Trials span the paper's preference vectors at one seed: they share a
+    # dataset (and test set), so the stacked evaluator amortizes their
+    # per-aggregation evals into one dispatch.
     e0 = 1.0 if mode == "sync" else 2.0
-    return [TrialSpec(dataset="emnist", aggregator="fedavg", seed=s,
+    return [TrialSpec(dataset="emnist", aggregator="fedavg", seed=0,
+                      preference=PAPER_PREFERENCES[
+                          s % len(PAPER_PREFERENCES)].as_tuple(),
                       tuner="fedtune", m0=10, e0=e0, rounds=rounds,
                       target_accuracy=0.99, batch_size=5, eval_points=256,
-                      mode=mode)
+                      mode=mode, compression=compression)
             for s in range(t)]
 
 
@@ -53,23 +74,35 @@ def _run_sequential(specs):
     return [run_trial(s) for s in specs]
 
 
+def _timed_phases(fn):
+    """Run ``fn`` with fresh perf counters; returns (result, phase dict)."""
+    perf.reset()
+    t0 = time.perf_counter()
+    res = fn()
+    total = time.perf_counter() - t0
+    train = perf.seconds("train")
+    ev = perf.seconds("eval")
+    return res, total, {
+        "total_s": round(total, 4), "train_s": round(train, 4),
+        "eval_s": round(ev, 4),
+        "other_s": round(max(total - train - ev, 0.0), 4)}
+
+
 def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
-         pack: str = "batched", json_path: str = None):
+         pack: str = "batched", compression: str = None,
+         json_path: str = None):
     del settings    # reduced scale only: the sweep is over T, not data size
     import jax
-    specs = _specs(t, rounds, mode)
+    specs = _specs(t, rounds, mode, compression)
 
     # warm both engines (compilation + dataset materialization), then time
     # the steady state — grids are deterministic, so shapes repeat exactly
     _run_sequential(specs)
-    t0 = time.perf_counter()
-    seq = _run_sequential(specs)
-    seq_s = time.perf_counter() - t0
+    seq, seq_s, seq_phases = _timed_phases(lambda: _run_sequential(specs))
 
     run_vectorized(specs, pack=pack)
-    t0 = time.perf_counter()
-    vec = run_vectorized(specs, pack=pack)
-    vec_s = time.perf_counter() - t0
+    vec, vec_s, vec_phases = _timed_phases(
+        lambda: run_vectorized(specs, pack=pack))
 
     bitmatch = True
     max_acc_diff = 0.0
@@ -95,10 +128,21 @@ def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
          f"speedup_vs_seq={speedup:.2f}x")
     payload = {"bench": "sweep_engine", "mode": mode, "t": t,
                "rounds": rounds, "pack": pack,
+               "compression": compression,
                "devices": jax.device_count(),
                "seq_s": round(seq_s, 4), "vec_s": round(vec_s, 4),
                "speedup": round(speedup, 3), "bitmatch": bitmatch,
-               "max_acc_diff": max_acc_diff}
+               "max_acc_diff": max_acc_diff,
+               # the vectorized run's phase split (+ both engines' full
+               # splits): eval_s amortization is the stacked evaluator's win
+               "train_s": vec_phases["train_s"],
+               "eval_s": vec_phases["eval_s"],
+               "other_s": vec_phases["other_s"],
+               "seq_phases": seq_phases, "vec_phases": vec_phases,
+               # compressed grids must vectorize: no trial may have taken
+               # the one-at-a-time path
+               "sequential_trials": sum(
+                   not r.engine.startswith("vectorized") for r in vec)}
     print("BENCH " + json.dumps(payload), flush=True)
     if json_path:
         with open(json_path, "w") as f:
@@ -117,7 +161,13 @@ if __name__ == "__main__":
                          "buffered exercise the merged event-queue engine)")
     ap.add_argument("--pack", default="batched",
                     choices=("batched", "sharded"))
+    ap.add_argument("--compression", default=None,
+                    choices=(None, "none", "int8"),
+                    help="upload compression for every trial (int8 trials "
+                         "vectorize lane-wise)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
     main(t=args.t, rounds=args.rounds, mode=args.mode, pack=args.pack,
+         compression=None if args.compression in (None, "none")
+         else args.compression,
          json_path=args.json)

@@ -56,7 +56,10 @@ class TrialSpec:
                     (M, E) pair FedTune tunes from.
       rounds      — max rounds (sync) or max aggregations (async/
                     buffered); target_accuracy stops a trial early.
-      compression — None | 'int8' upload deltas (sequential-engine only).
+      compression — None | 'int8' upload deltas; compressed trials
+                    vectorize like any others (the quantize->dequantize
+                    round trip is a per-lane transform in the cohort
+                    packers).
 
     Execution-only fields (absent from ``key()`` because every backend is
     result-parity-equal, pinned in tests): ``client_exec``.
@@ -167,11 +170,12 @@ def spec_from_dict(d: dict) -> TrialSpec:
 class SweepSpec:
     """Product grid over the experiment axes.  ``inits`` carries the
     (M0, E0) axis as pairs; ``modes`` spans the runtime regimes
-    (sync/async/buffered) and ``hets`` the fleet heterogeneity profiles
-    (homogeneous/mild/stragglers/mobile — see runtime/profiles.py), so one
-    grid can cover the paper's aggregator rows ACROSS runtime regimes and
-    device fleets.  Any axis left at its default contributes a single
-    column, keeping pre-existing store keys stable."""
+    (sync/async/buffered), ``hets`` the fleet heterogeneity profiles
+    (homogeneous/mild/stragglers/mobile — see runtime/profiles.py), and
+    ``compressions`` the upload-compression methods (None/'int8'), so one
+    grid can cover the paper's aggregator rows ACROSS runtime regimes,
+    device fleets, and upload budgets.  Any axis left at its default
+    contributes a single column, keeping pre-existing store keys stable."""
     datasets: Sequence[str] = ("emnist",)
     aggregators: Sequence[str] = ("fedavg",)
     preferences: Sequence[Tuple[float, float, float, float]] = (
@@ -181,6 +185,7 @@ class SweepSpec:
     inits: Sequence[Tuple[int, float]] = ((5, 2.0),)
     modes: Sequence[str] = ("sync",)
     hets: Sequence[str] = ("homogeneous",)
+    compressions: Sequence[Optional[str]] = (None,)
     base: TrialSpec = field(default_factory=TrialSpec)   # shared settings
 
     def expand(self) -> List[TrialSpec]:
@@ -188,16 +193,19 @@ class SweepSpec:
         Order is deterministic (itertools.product over the given axis
         order), so ``--limit N`` resume prefixes are stable."""
         seen = {}
-        for ds, agg, pref, seed, tn, (m0, e0), mode, het in \
+        for ds, agg, pref, seed, tn, (m0, e0), mode, het, comp in \
                 itertools.product(
                     self.datasets, self.aggregators, self.preferences,
                     self.seeds, self.tuners, self.inits, self.modes,
-                    self.hets):
+                    self.hets, self.compressions):
             if tn == "fixed":
                 pref = CANONICAL_PREFERENCE   # baseline ignores preference
+            if comp in (None, "none"):
+                comp = None                   # one spelling, stable keys
             spec = replace(self.base, dataset=ds, aggregator=agg,
                            preference=tuple(pref), seed=seed, tuner=tn,
-                           m0=m0, e0=e0, mode=mode, het=het).validate()
+                           m0=m0, e0=e0, mode=mode, het=het,
+                           compression=comp).validate()
             seen.setdefault(spec.key(), spec)
         return list(seen.values())
 
@@ -205,11 +213,16 @@ class SweepSpec:
 def parse_preferences(text: str) -> List[Tuple[float, float, float, float]]:
     """CLI preference parsing: 'all' -> the paper's 15 vectors; '0,4,14' ->
     indices into PAPER_PREFERENCES; '1,0,0,0;0.25,0.25,0.25,0.25' ->
-    literal quads separated by ';'."""
+    literal quads separated by ';'.
+
+    A bare 4-element comma list is ambiguous (four indices or one quad);
+    quads must sum to 1, so it parses as a quad only when it does —
+    '1,0,0,0' is the first paper vector, '0,1,4,14' is four indices."""
     text = text.strip()
     if text == "all":
         return [p.as_tuple() for p in PAPER_PREFERENCES]
-    if ";" in text or text.count(",") == 3:
+
+    def quads() -> List[Tuple[float, float, float, float]]:
         out = []
         for quad in text.split(";"):
             vals = tuple(float(v) for v in quad.split(","))
@@ -217,6 +230,12 @@ def parse_preferences(text: str) -> List[Tuple[float, float, float, float]]:
                 raise ValueError(f"preference {quad!r} is not a quad")
             out.append(vals)
         return out
+
+    if ";" in text:
+        return quads()
+    if text.count(",") == 3 and abs(sum(
+            float(v) for v in text.split(",")) - 1.0) < 1e-6:
+        return quads()
     out = []
     for idx in text.split(","):
         i = int(idx)

@@ -27,9 +27,17 @@ PR 1-2 and runs all of them per virtual round:
               (runtime/sharded.py's mesh) and computes per-trial FedAvg
               partial sums on device — a segment-sum by trial id completed
               by a psum — so per-client params never reach the host.
-  4. STEP   — each trial's own FedTune controller sees its round cost and
-              accuracy and steps its (M, E) independently; finished trials
-              drop out of the pack.
+  4. STEP   — every due trial's evaluation runs as ONE stacked dispatch
+              per (model, dataset) group (federated/evaluation.py's
+              ``StackedEvaluator``), then each trial's own FedTune
+              controller sees its round cost and accuracy and steps its
+              (M, E) independently; finished trials drop out of the pack.
+
+  Upload-compressed trials are packed like any others: the quantize->
+  dequantize round trip runs as a per-lane transform on the packed rows
+  (``compress_delta_lanes``, masked per lane by each trial's
+  ``TrialSpec.compression``), bit-identical to the sequential path's
+  per-client ``compress_delta``.
 
 Async/buffered trials vectorize through a second path (``run_vectorized_
 events``) built on ONE merged virtual-clock event queue spanning all live
@@ -61,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import perf
 from repro.configs.paper_models import MLPConfig
 from repro.core import CostModel, FedTune, FedTuneConfig, Preference
 from repro.core.tuner import FixedTuner, HyperParams
@@ -68,6 +77,9 @@ from repro.data import cifar100_like, emnist_like, speech_command_like
 from repro.experiments.grid import TrialSpec
 from repro.federated import FLConfig, FLServer, get_aggregator
 from repro.federated.aggregation import ClientUpdate, _flatten, _unflatten
+from repro.federated.compression import (compress_delta_lanes, lane_mask,
+                                         lane_roundtrip)
+from repro.federated.evaluation import eval_due, evaluate_stacked
 from repro.federated.server import FLResult, RoundRecord
 from repro.models import build_model
 from repro.optim.optimizers import get_optimizer
@@ -251,14 +263,18 @@ def _flatten_cohort(params_b):
     return jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
 
 
-def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh):
+def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh,
+                      compressed: bool = False):
     """Packed cohort over the ``clients`` mesh axis with per-trial FedAvg
-    fused on device: each device trains its slice of the flat cohort, forms
-    the (T, N) segment partial sum (w_i * onehot_trial_i outer the flat
-    params), and a psum across the axis completes every trial's weighted
-    mean at once.  Per-client params never reach the host."""
+    fused on device: each device trains its slice of the flat cohort,
+    applies the per-lane upload round trip where ``enabled`` (compressed
+    trials' lanes — the segment sum must aggregate what the server would
+    reconstruct), forms the (T, N) segment partial sum (w_i *
+    onehot_trial_i outer the flat params), and a psum across the axis
+    completes every trial's weighted mean at once.  Per-client params
+    never reach the host."""
     from repro.sharding.specs import clients_spec
-    key = (id(model), id(optimizer), prox_mu, id(mesh))
+    key = (id(model), id(optimizer), prox_mu, id(mesh), compressed)
     if key in _sharded_multi_cache:
         return _sharded_multi_cache[key]
     from jax.experimental.shard_map import shard_map
@@ -267,17 +283,20 @@ def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh):
     one_client = make_client_step(model, optimizer, prox_mu)
     axis = mesh.axis_names[0]
 
-    def shard_body(global_b, xs, ys, masks, active, weights, onehot):
+    def shard_body(global_b, xs, ys, masks, active, weights, onehot,
+                   enabled):
         opt_b = jax.vmap(optimizer.init)(global_b)
         params_b, last_loss = cohort_scan(
             one_client, global_b, opt_b, xs, ys, masks, active, global_b,
             global_in_axis=0)
+        if compressed:
+            params_b = lane_roundtrip(global_b, params_b, enabled)
         flat = _flatten_cohort(params_b)                  # (M_loc, N)
         partial = (weights[:, None] * onehot).T @ flat    # (T, N) segment sum
         return jax.lax.psum(partial, axis), last_loss
 
     @jax.jit
-    def run(global_b, xs, ys, masks, active, weights, onehot):
+    def run(global_b, xs, ys, masks, active, weights, onehot, enabled):
         in_specs = (jax.tree.map(lambda l: clients_spec(l.ndim, 0, axis),
                                  global_b),
                     clients_spec(xs.ndim, 1, axis),
@@ -285,10 +304,12 @@ def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh):
                     clients_spec(masks.ndim, 1, axis),
                     clients_spec(active.ndim, 1, axis),
                     clients_spec(1, 0, axis),
-                    clients_spec(2, 0, axis))
+                    clients_spec(2, 0, axis),
+                    clients_spec(1, 0, axis))
         return shard_map(shard_body, mesh=mesh, in_specs=in_specs,
                          out_specs=(P(), clients_spec(1, 0, axis)))(
-                             global_b, xs, ys, masks, active, weights, onehot)
+                             global_b, xs, ys, masks, active, weights,
+                             onehot, enabled)
 
     _sharded_multi_cache[key] = run
     return run
@@ -321,6 +342,7 @@ class _LiveTrial:
     history: List[RoundRecord] = field(default_factory=list)
     plan: Any = None
     cohort: Optional[_Cohort] = None
+    round_cost: Any = None     # set by _reduce_round, consumed by _finish_round
     _meta: Any = None          # cached _flatten meta (model-constant)
 
 
@@ -345,7 +367,11 @@ def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
     ``fed_aggregate`` on those rows); other aggregators get per-client
     pytree slices.  Each trial's global params enter the pack through ONE
     per-round stack + an on-device gather per bucket, so host-side tree
-    work stays O(trials), not O(clients)."""
+    work stays O(trials), not O(clients).  Lanes of upload-compressed
+    trials go through the quantize->dequantize round trip against their
+    trial's global params (``compress_delta_lanes``) before unpacking —
+    bit-identical per lane to the sequential path's ``compress_delta``,
+    and masked off for uncompressed lanes so mixed grids pack together."""
     tr0 = ents[0][0]
     model, opt = tr0.srv.model, tr0.srv.optimizer
     bs = tr0.srv.config.batch_size
@@ -371,6 +397,10 @@ def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
         global_b = jax.tree.map(lambda s: s[slots], stacked)
         params_b, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
                                   jnp.asarray(masks), jnp.asarray(active))
+        mask = lane_mask([tr.srv.config.compression for tr, _ in sel]
+                         + [None] * (m_pad - len(sel)))
+        if mask is not None:
+            params_b = compress_delta_lanes(global_b, params_b, mask)
         flat = _flatten_cohort(params_b)
         ll = np.asarray(last_loss)
         for k, (tr, j) in enumerate(sel):
@@ -390,7 +420,10 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
     model, opt = tr0.srv.model, tr0.srv.optimizer
     bs = tr0.srv.config.batch_size
     n_dev = int(np.prod(mesh.devices.shape))
-    run = _sharded_multi_fn(model, opt, tr0.srv.config.prox_mu, mesh)
+    compressed = any(tr.srv.config.compression not in (None, "none")
+                     for tr, _ in ents)
+    run = _sharded_multi_fn(model, opt, tr0.srv.config.prox_mu, mesh,
+                            compressed)
 
     trials: List[_LiveTrial] = []
     slot: Dict[int, int] = {}
@@ -416,13 +449,16 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
                                + [sel[0][0].params] * pad)
         w = np.zeros(m_pad, np.float32)
         onehot = np.zeros((m_pad, n_t), np.float32)
+        enabled = np.zeros(m_pad, bool)
         for k, (tr, j) in enumerate(sel):
             s = slot[id(tr)]
             w[k] = tr.cohort.sizes[j] / totals[s]
             onehot[k, s] = 1.0
+            enabled[k] = tr.srv.config.compression not in (None, "none")
         partial, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
                                  jnp.asarray(masks), jnp.asarray(active),
-                                 jnp.asarray(w), jnp.asarray(onehot))
+                                 jnp.asarray(w), jnp.asarray(onehot),
+                                 jnp.asarray(enabled))
         agg = agg + partial
         ll = np.asarray(last_loss)
         for k, (tr, j) in enumerate(sel):
@@ -455,10 +491,12 @@ def _fedavg_from_rows(tr: _LiveTrial) -> Any:
     return _unflatten(out, tr._meta)
 
 
-def _finish_round(tr: _LiveTrial, wall: float):
-    """Aggregate, account, evaluate, record, and step the trial's own
-    controller — the same per-round sequence as the engine's sync loop."""
-    srv, cfg = tr.srv, tr.srv.config
+def _reduce_round(tr: _LiveTrial):
+    """Per-trial selector updates, aggregation, and cost accounting — the
+    pre-evaluation half of the engine's sync round sequence.  Evaluation
+    is deliberately NOT here: the sweep loop batches every due trial's
+    eval into one stacked dispatch between reduce and finish."""
+    srv = tr.srv
     if tr.cohort is not None and tr.cohort.cids:
         co = tr.cohort
         for j, cid in enumerate(co.cids):
@@ -476,16 +514,28 @@ def _finish_round(tr: _LiveTrial, wall: float):
                     last_loss=co.losses[j], client_id=int(cid))
                 for j, cid in enumerate(co.cids)]
             tr.params = srv.aggregator(tr.params, updates)
-    round_cost = tr.eng.account_sync_round(tr.plan, tr.hp)
+    tr.round_cost = tr.eng.account_sync_round(tr.plan, tr.hp)
+
+
+def _finish_round(tr: _LiveTrial, wall: float,
+                  accuracy: Optional[float] = None):
+    """Record the round and step the trial's own controller — the
+    post-evaluation half of the engine's sync round sequence.
+    ``accuracy`` is the trial's lane of the stacked evaluation (None when
+    this round is not on the eval schedule: the last measured accuracy
+    carries forward, as in the standalone loop)."""
+    srv, cfg = tr.srv, tr.srv.config
+    round_cost = tr.round_cost
     r = tr.round_idx
-    if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
-        tr.accuracy = srv._evaluate(tr.params)
+    if accuracy is not None:
+        tr.accuracy = accuracy
     tr.history.append(RoundRecord(
         r, tr.hp.m, tr.hp.e, tr.accuracy, round_cost, wall,
         sim_time=tr.eng.clock.now, n_updates=len(tr.plan.included)))
     tr.round_idx += 1
     tr.cohort = None
     tr.plan = None
+    tr.round_cost = None
     if tr.accuracy >= cfg.target_accuracy:
         tr.reached = True
         tr.done = True
@@ -558,19 +608,31 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         groups: Dict[tuple, List[Tuple[_LiveTrial, int]]] = {}
         for ent in entries:
             groups.setdefault(_group_key(ent[0]), []).append(ent)
-        for ents in groups.values():
-            fused = (pack == "sharded"
-                     and all(tr.srv.aggregator.name == "fedavg"
-                             for tr, _ in ents))
-            if fused:
-                _run_group_sharded(ents, mesh)
-            else:
-                _run_group_batched(ents)
-        # 4. per-trial aggregation + accounting + controller step
+        with perf.timed("train"):
+            for ents in groups.values():
+                fused = (pack == "sharded"
+                         and all(tr.srv.aggregator.name == "fedavg"
+                                 for tr, _ in ents))
+                if fused:
+                    _run_group_sharded(ents, mesh)
+                else:
+                    _run_group_batched(ents)
+        # 4. per-trial aggregation + accounting, then ONE stacked eval of
+        #    every due trial (grouped by model/dataset), then per-trial
+        #    record + controller step
+        for tr in live:
+            _reduce_round(tr)
+        due = [tr for tr in live
+               if eval_due(tr.round_idx, tr.srv.config.eval_every,
+                           tr.srv.config.max_rounds)]
+        accs = evaluate_stacked(
+            [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
+              tr.params) for tr in due], mesh=mesh)
+        acc_of = {id(tr): a for tr, a in zip(due, accs)}
         wall = time.perf_counter() - t0
         for tr in live:
             tr.wall += wall / len(live)
-            _finish_round(tr, wall / len(live))
+            _finish_round(tr, wall / len(live), acc_of.get(id(tr)))
             if tr.done:
                 res = _to_result(tr, engine)
                 results[trials.index(tr)] = res
@@ -673,6 +735,12 @@ def _run_event_group(lanes: List[_Lane]):
                                + [sel[0].fl.params] * (m_pad - len(sel)))
         params_b, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
                                   jnp.asarray(masks), jnp.asarray(active))
+        # upload-compressed lanes: quantize->dequantize against the lane's
+        # dispatch snapshot, exactly what _client_update does per arrival
+        mask = lane_mask([ln.tr.srv.config.compression for ln in sel]
+                         + [None] * (m_pad - len(sel)))
+        if mask is not None:
+            params_b = compress_delta_lanes(global_b, params_b, mask)
         ll = np.asarray(last_loss)
         # one host transfer per leaf, then free numpy views per lane — much
         # cheaper than a device-slice dispatch per (lane, leaf)
@@ -706,11 +774,11 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
     Parity: bit-identical to each trial's standalone ``FLServer.run()``
     (accuracies, costs, dispatch/staleness logs, (M, E) trajectories)."""
     for s in specs:
-        if s.mode not in ("async", "buffered") or s.compression:
+        if s.mode not in ("async", "buffered"):
             raise ValueError(
                 f"trial {s.key()!r} is not an event-driven trial "
-                "(run_vectorized_events covers async/buffered modes "
-                "without upload compression)")
+                "(run_vectorized_events covers the async/buffered modes; "
+                "sync trials pack per round via run_vectorized)")
     if pack == "sharded":
         # event packs are one-arrival-per-trial wide and FedAsync/FedBuff
         # mixing is per-trial host state — there is no cross-client
@@ -787,19 +855,39 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
                 ln.params, ln.loss = ln.fl.params, 0.0
                 continue
             groups.setdefault(_group_key(ln.tr), []).append(ln)
-        for group in groups.values():
-            _run_event_group(group)
-        # 3. APPLY per trial, in collect (= merged pop) order
+        with perf.timed("train"):
+            for group in groups.values():
+                _run_event_group(group)
+        # 3. APPLY per trial, in collect (= merged pop) order: first fold
+        #    every lane into its trial's global model, then evaluate every
+        #    aggregating-and-due trial in ONE stacked dispatch (grouped by
+        #    model/dataset), then finish/refill per trial.  Evaluation
+        #    consumes no rng and each trial's clock is private, so hoisting
+        #    the evals between apply and finish preserves the standalone
+        #    loop's per-trial operation order exactly.
         wall = time.perf_counter() - t0
         share = wall / max(len(lanes), 1)
+        applied = []
         for ln in lanes:
             tr, fl = ln.tr, ln.fl
             tr.wall += share
             tr.srv.selector.update(int(fl.client_id), ln.loss,
                                    fl.n_examples)
             aggregated, staleness = tr.eng.apply_event(tr.st, fl, ln.params)
+            applied.append((ln, aggregated, staleness))
+        due = [ln.tr for ln, aggregated, _s in applied
+               if aggregated and eval_due(len(ln.tr.st.history),
+                                          ln.tr.srv.config.eval_every,
+                                          ln.tr.srv.config.max_rounds)]
+        accs = evaluate_stacked(
+            [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
+              tr.st.params) for tr in due])
+        acc_of = {id(tr): a for tr, a in zip(due, accs)}
+        for ln, aggregated, staleness in applied:
+            tr = ln.tr
             if aggregated:
-                tr.eng.finish_event_round(tr.st, staleness, share)
+                tr.eng.finish_event_round(tr.st, staleness, share,
+                                          accuracy=acc_of.get(id(tr)))
                 if tr.st.reached:
                     end_trial(tr)
                     continue
@@ -828,18 +916,13 @@ def run_vectorized(specs: Sequence[TrialSpec], *, pack: str = "batched",
     the same compiled ``_multi_cohort_fn`` shapes.  Results come back in
     input-spec order; ``on_result`` fires per trial as it finishes.
 
-    Upload-compressed trials cannot vectorize (the packed cohort trades in
-    raw params, not quantized deltas) — route them through ``run_trial``/
-    the sequential engine."""
+    Upload-compressed trials vectorize like any others: the quantize->
+    dequantize round trip is a per-lane transform inside the cohort
+    packers (``compress_delta_lanes``), masked off for uncompressed lanes,
+    so mixed grids pack into one cohort."""
     if pack not in PACKS:
         raise ValueError(f"unknown pack {pack!r}; valid packs: "
                          + ", ".join(PACKS))
-    for s in specs:
-        if s.compression:
-            raise ValueError(
-                f"trial {s.key()!r} cannot be vectorized (vectorized "
-                "execution covers uncompressed uploads only); route it "
-                "through the sequential engine")
     sync_specs = [s for s in specs if s.mode == "sync"]
     event_specs = [s for s in specs if s.mode != "sync"]
     out: Dict[str, TrialResult] = {}
@@ -865,9 +948,9 @@ def run_sweep(specs: Sequence[TrialSpec], *, store=None,
     ``store`` as it completes — the unit of resume is the trial, so a killed
     sweep restarts exactly at the first unfinished key.
 
-    ``engine='vectorized'`` packs every uncompressed trial (sync trials per
-    virtual round, async/buffered trials off the merged event queue); only
-    upload-compressed trials fall back to one-at-a-time execution.
+    ``engine='vectorized'`` packs EVERY trial (sync trials per virtual
+    round, async/buffered trials off the merged event queue; compressed
+    trials quantize per lane inside the pack — nothing falls back).
     ``engine='sequential'`` runs everything one ``FLServer.run()`` at a
     time — engines are result-parity-equal, so stores can mix them."""
     if engine not in ENGINES:
@@ -885,13 +968,6 @@ def run_sweep(specs: Sequence[TrialSpec], *, store=None,
             emit(run_trial(spec))
         return results
 
-    rest = [s for s in specs if s.compression]
-    if rest:
-        print(f"experiments: {len(rest)} trial(s) use upload compression; "
-              "running them sequentially", flush=True)
-        for spec in rest:
-            emit(run_trial(spec))
-    vec = [s for s in specs if not s.compression]
-    if vec:
-        run_vectorized(vec, pack=pack, on_result=emit, verbose=verbose)
+    if specs:
+        run_vectorized(specs, pack=pack, on_result=emit, verbose=verbose)
     return results

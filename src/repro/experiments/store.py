@@ -11,10 +11,11 @@ FedTune trial is normalized against its FixedTuner twin (same dataset,
 aggregator, seed, M0/E0 — ``baseline_key``) through eq. (6) under the
 trial's own preference vector, and the '+x%' numbers are mean +- std over
 seeds.  Positive = FedTune reduced the weighted system overhead.  Stores
-spanning several fleet profiles or runtime modes render those as extra
-column suffixes (``fedavg·stragglers``); records from before those axes
-existed tabulate under the defaults (homogeneous/sync) instead of
-KeyError-ing, so old stores keep resuming and tabulating.
+spanning several fleet profiles, runtime modes, or compression methods
+render those as extra column suffixes (``fedavg·stragglers``,
+``fedavg·int8``); records from before those axes existed tabulate under
+the defaults (homogeneous/sync/uncompressed) instead of KeyError-ing, so
+old stores keep resuming and tabulating.
 """
 
 from __future__ import annotations
@@ -135,7 +136,7 @@ def aggregate_over_seeds(paired: Iterable[dict]) -> List[dict]:
         out.append({
             "dataset": cell[0], "aggregator": cell[1],
             "preference": list(cell[2]), "m0": cell[3], "e0": cell[4],
-            "mode": cell[5], "het": cell[8],
+            "mode": cell[5], "het": cell[8], "compression": cell[14],
             "n_seeds": len(rs),
             "improvement_mean": float(imps.mean()),
             "improvement_std": float(imps.std()),
@@ -149,16 +150,22 @@ def _fmt_pref(p) -> str:
     return "(" + ",".join(f"{v:g}" for v in p) + ")"
 
 
-def _column_of(row: dict, multi_het: bool, multi_mode: bool) -> str:
+def _column_of(row: dict, multi_het: bool, multi_mode: bool,
+               multi_comp: bool = False) -> str:
     """Column identity for one aggregated cell: the aggregator, widened by
-    runtime-mode and fleet-profile suffixes when the store spans those axes
-    (e.g. ``fedavg·async`` or ``fedavg·stragglers``) so a mode/het sweep
-    renders as side-by-side columns instead of collapsing into one."""
+    runtime-mode, fleet-profile, and compression suffixes when the store
+    spans those axes (e.g. ``fedavg·async``, ``fedavg·stragglers``,
+    ``fedavg·int8``) so a mode/het/compression sweep renders as
+    side-by-side columns instead of collapsing into one.  Legacy rows
+    written before an axis existed default to that axis's default value
+    (homogeneous / sync / no compression)."""
     col = row["aggregator"]
     if multi_mode and row.get("mode"):
         col += f"·{row['mode']}"
     if multi_het:
         col += f"·{row.get('het') or 'homogeneous'}"
+    if multi_comp:
+        col += f"·{row.get('compression') or 'none'}"
     return col
 
 
@@ -183,7 +190,10 @@ def paper_table(records: Iterable[dict], *,
         rows = [a for a in agg if a["dataset"] == ds]
         multi_het = len({a.get("het") or "homogeneous" for a in rows}) > 1
         multi_mode = len({a.get("mode") or "sync" for a in rows}) > 1
-        cols = sorted({_column_of(a, multi_het, multi_mode) for a in rows})
+        multi_comp = len({a.get("compression") or "none"
+                          for a in rows}) > 1
+        cols = sorted({_column_of(a, multi_het, multi_mode, multi_comp)
+                       for a in rows})
         prefs = []
         for a in rows:
             key = tuple(a["preference"])
@@ -198,7 +208,8 @@ def paper_table(records: Iterable[dict], *,
             for col in cols:
                 m = [a for a in rows
                      if tuple(a["preference"]) == p
-                     and _column_of(a, multi_het, multi_mode) == col]
+                     and _column_of(a, multi_het, multi_mode,
+                                    multi_comp) == col]
                 if not m:
                     cells.append("—")
                     continue

@@ -1,5 +1,7 @@
 from repro.federated.aggregation import get_aggregator
 from repro.federated.client import local_train
+from repro.federated.evaluation import Evaluator, StackedEvaluator
 from repro.federated.server import FLConfig, FLServer
 
-__all__ = ["get_aggregator", "local_train", "FLConfig", "FLServer"]
+__all__ = ["get_aggregator", "local_train", "FLConfig", "FLServer",
+           "Evaluator", "StackedEvaluator"]

@@ -5,17 +5,50 @@ parameters, cutting the paper's TransL by ~4x on the upload half of each
 round; the server dequantizes before aggregation.  This composes with
 FedTune: the controller sees the reduced TransL through the cost model's
 ``upload_factor`` and steers (M, E) accordingly.
+
+Compression is a *lane transform*: the quantize->dequantize round trip is
+one leaf function (``_roundtrip_leaf``) exposed two ways —
+
+  ``compress_delta``       — per-tree, what ``FLServer._client_update``
+                             applies after one client's local training.
+  ``compress_delta_lanes`` — vmapped over an (M, ...)-stacked cohort with
+                             an optional per-lane enable mask, what the
+                             batched/sharded/sweep cohort packers apply to
+                             their packed rows (each lane quantized against
+                             ITS trial's dispatch-time global params).
+
+Both entry points are jitted compilations of the same graph, so lane i of
+the stacked transform is BIT-identical to the per-tree round trip — which
+is what lets upload-compressed trials run through the vectorized sweep
+engines instead of falling back to one-at-a-time execution (pinned in
+tests/test_extensions.py and tests/test_experiments.py).
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # bytes(transmitted)/bytes(f32) for the upload half of a round
 FACTORS = {None: 1.0, "none": 1.0, "int8": 0.25 + 1e-3}
+
+
+def _roundtrip_leaf(g, c):
+    """One leaf's quantize->transmit->dequantize simulation: symmetric
+    int8 over the delta, per-leaf scale, zero deltas reconstruct exactly
+    (the 1e-12 clamp only guards the 0/0 of an all-zero delta)."""
+    delta = (c - g).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(delta)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(delta / scale), -127, 127).astype(jnp.int8)
+    return g + (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+@jax.jit
+def _tree_roundtrip(global_params, client_params):
+    return jax.tree.map(_roundtrip_leaf, global_params, client_params)
 
 
 def compress_delta(global_params: Any, client_params: Any,
@@ -24,14 +57,54 @@ def compress_delta(global_params: Any, client_params: Any,
     client params the SERVER reconstructs."""
     if method in (None, "none"):
         return client_params
+    upload_factor(method)          # ValueError naming valid methods
+    return _tree_roundtrip(global_params, client_params)
 
-    def roundtrip(g, c):
-        delta = (c - g).astype(jnp.float32)
-        scale = jnp.maximum(jnp.max(jnp.abs(delta)) / 127.0, 1e-12)
-        q = jnp.clip(jnp.round(delta / scale), -127, 127).astype(jnp.int8)
-        return (g + (q.astype(jnp.float32) * scale).astype(g.dtype))
 
-    return jax.tree.map(roundtrip, global_params, client_params)
+def lane_roundtrip(global_b: Any, params_b: Any, enabled=None) -> Any:
+    """The round trip vmapped over an (M, ...)-stacked cohort: lane i is
+    quantized against ITS reference params ``global_b[i]`` (the trial's
+    dispatch-time global model).  ``enabled`` is an optional (M,) bool mask
+    — lanes of uncompressed trials pass through unchanged, so mixed grids
+    pack into one cohort.  Pure jax: callable inside jit / shard_map (the
+    sharded packer fuses it before its on-device segment sum)."""
+    def leaf(g, c):
+        rec = jax.vmap(_roundtrip_leaf)(g, c)
+        if enabled is None:
+            return rec
+        gate = enabled.reshape((-1,) + (1,) * (rec.ndim - 1))
+        return jnp.where(gate, rec, c)
+    return jax.tree.map(leaf, global_b, params_b)
+
+
+@jax.jit
+def _lanes_all(global_b, params_b):
+    return lane_roundtrip(global_b, params_b)
+
+
+@jax.jit
+def _lanes_masked(global_b, params_b, enabled):
+    return lane_roundtrip(global_b, params_b, enabled)
+
+
+def compress_delta_lanes(global_b: Any, params_b: Any,
+                         enabled=None) -> Any:
+    """Jitted entry point for the cohort packers: ``lane_roundtrip`` as its
+    own dispatch, bit-identical per lane to ``compress_delta`` on that
+    lane's (global, params) pair."""
+    if enabled is None:
+        return _lanes_all(global_b, params_b)
+    return _lanes_masked(global_b, params_b, jnp.asarray(enabled))
+
+
+def lane_mask(methods: Sequence[Optional[str]]) -> Optional[np.ndarray]:
+    """Per-lane enable mask from the lanes' ``TrialSpec.compression``
+    values; None when no lane compresses (the packers skip the transform
+    entirely).  Unknown methods raise, naming the valid ones."""
+    for m in methods:
+        upload_factor(m)
+    mask = np.array([m not in (None, "none") for m in methods], bool)
+    return mask if mask.any() else None
 
 
 def upload_factor(method: str | None) -> float:

@@ -21,7 +21,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costs import CostModel, SystemCost
@@ -29,6 +28,7 @@ from repro.core.tuner import HyperParams, Tuner
 from repro.data.synthetic import FederatedDataset
 from repro.federated.aggregation import Aggregator, ClientUpdate
 from repro.federated.client import local_train
+from repro.federated.evaluation import eval_due
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 
@@ -78,30 +78,6 @@ class FLResult:
                                    # of each applied (non-dropout) arrival
 
 
-_eval_fn_cache = {}
-_EVAL_CACHE_MAX = 32
-
-
-def _get_eval_fn(model: Model):
-    """Jitted accuracy kernel, cached per model so the T servers of a sweep
-    (or repeated benchmark constructions over one model) share a single
-    compilation.  The cached closure keeps ``model`` alive, so the id key
-    cannot be recycled while the entry exists; the cache is bounded (FIFO
-    eviction) so a long-lived process looping over fresh models does not
-    pin them all forever."""
-    key = id(model)
-    if key not in _eval_fn_cache:
-        while len(_eval_fn_cache) >= _EVAL_CACHE_MAX:
-            _eval_fn_cache.pop(next(iter(_eval_fn_cache)))
-
-        @jax.jit
-        def eval_fn(params, x, y):
-            logits = model.forward(params, x)
-            return (logits.argmax(-1) == y).mean()
-        _eval_fn_cache[key] = eval_fn
-    return _eval_fn_cache[key]
-
-
 class FLServer:
     def __init__(self, model: Model, dataset: FederatedDataset,
                  aggregator: Aggregator, optimizer: Optimizer,
@@ -116,8 +92,7 @@ class FLServer:
         self.config = config
         self.tuner = tuner or Tuner()
         self.rng = np.random.default_rng(config.seed)
-        self._eval_fn = None
-        self._eval_batches = None
+        self._evaluator = None
         self.fleet = fleet
         self.runtime_config = runtime_config
         from repro.federated.selection import get_selector
@@ -139,24 +114,20 @@ class FLServer:
                                      est_times=est_times)
 
     # ------------------------------------------------------------------
+    @property
+    def evaluator(self):
+        """This trial's ``Evaluator`` (federated/evaluation.py): the jitted
+        accuracy kernel comes from the shared bounded LRU and the test
+        batches from the per-dataset staging cache, so the T servers of a
+        sweep share one compilation and one on-device test set."""
+        if self._evaluator is None:
+            from repro.federated.evaluation import Evaluator
+            self._evaluator = Evaluator(self.model, self.dataset,
+                                        self.config.eval_points)
+        return self._evaluator
+
     def _evaluate(self, params) -> float:
-        if self._eval_fn is None:
-            self._eval_fn = _get_eval_fn(self.model)
-        if self._eval_batches is None:
-            # the test set never changes across rounds: stage it on device
-            # once (batched to bound memory) instead of re-uploading every
-            # evaluation
-            x, y = self.dataset.test_data(self.config.eval_points)
-            bs = 256
-            self._eval_batches = [
-                (jnp.asarray(x[i:i + bs]), jnp.asarray(y[i:i + bs]),
-                 len(y[i:i + bs])) for i in range(0, len(y), bs)]
-        correct = 0.0
-        total = 0
-        for bx, by, n in self._eval_batches:
-            correct += float(self._eval_fn(params, bx, by)) * n
-            total += n
-        return correct / total
+        return self.evaluator.evaluate(params)
 
     # ------------------------------------------------------------------
     def _client_update(self, params, cid: int, e: float
@@ -164,16 +135,18 @@ class FLServer:
         """Run one client's local training against ``params``.  Shared by the
         legacy loop and the event-driven runtime so both consume the server
         rng stream identically (batch permutations)."""
+        from repro import perf
         cfg = self.config
         x, y = self.dataset.client_data(int(cid))
-        upd = local_train(
-            self.model, params, x, y, passes=e,
-            batch_size=cfg.batch_size, optimizer=self.optimizer,
-            rng=self.rng, prox_mu=cfg.prox_mu)
-        if cfg.compression:
-            from repro.federated.compression import compress_delta
-            upd = upd._replace(params=compress_delta(
-                params, upd.params, cfg.compression))
+        with perf.timed("train"):
+            upd = local_train(
+                self.model, params, x, y, passes=e,
+                batch_size=cfg.batch_size, optimizer=self.optimizer,
+                rng=self.rng, prox_mu=cfg.prox_mu)
+            if cfg.compression:
+                from repro.federated.compression import compress_delta
+                upd = upd._replace(params=compress_delta(
+                    params, upd.params, cfg.compression))
         upd = upd._replace(client_id=int(cid))
         self.selector.update(int(cid), upd.last_loss, len(y))
         return upd, len(y)
@@ -216,7 +189,7 @@ class FLServer:
                 examples, hp.e,
                 upload_factor=upload_factor(cfg.compression))
 
-            if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+            if eval_due(r, cfg.eval_every, cfg.max_rounds):
                 accuracy = self._evaluate(params)
             wall = time.perf_counter() - t0
             history.append(RoundRecord(r, hp.m, hp.e, accuracy,

@@ -22,6 +22,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.sweep --mode sync,async,buffered \
       --het homogeneous,stragglers --rounds 10 --table
 
+  # upload compression as a grid axis: int8 trials vectorize like any
+  # others (per-lane quantization inside the packed cohorts)
+  PYTHONPATH=src python -m repro.launch.sweep --compression none,int8 \
+      --mode sync,async --rounds 10 --table
+
   # CI smoke: a fixed 24-trial reduced grid; --limit N runs only the first
   # N pending trials (the second invocation resumes the remainder)
   PYTHONPATH=src python -m repro.launch.sweep --preset smoke --limit 8
@@ -99,6 +104,10 @@ def main():
     ap.add_argument("--het", default="homogeneous",
                     help="comma list of fleet profiles (grid axis): "
                          "homogeneous,mild,stragglers,mobile")
+    ap.add_argument("--compression", default="none",
+                    help="comma list of upload-compression methods (grid "
+                         "axis): none,int8 — compressed trials vectorize "
+                         "like any others (lane-wise quantization)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale datasets (default: reduced)")
     ap.add_argument("--engine", default="vectorized",
@@ -146,6 +155,9 @@ def main():
             inits=tuple(inits),
             modes=tuple(args.mode.split(",")),
             hets=tuple(args.het.split(",")),
+            compressions=tuple(
+                None if c in ("", "none") else c
+                for c in args.compression.split(",")),
             base=TrialSpec(rounds=args.rounds, target_accuracy=args.target,
                            batch_size=args.batch_size,
                            reduced=not args.full),

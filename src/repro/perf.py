@@ -1,0 +1,58 @@
+"""Lightweight wall-clock phase counters.
+
+The sweep engines interleave three kinds of work per round/macro-step:
+client training (the packed cohort dispatches), evaluation (the stacked
+accuracy dispatches), and host-side orchestration (planning, rng streams,
+aggregation bookkeeping).  ``benchmarks/sweep_engine.py`` splits its BENCH
+timings into ``train_s`` / ``eval_s`` / ``other_s`` through these counters
+so a perf win in one phase (e.g. eval amortization) is visible instead of
+being averaged away in the total.
+
+Counters accumulate host wall-clock around the timed block.  JAX dispatch
+is asynchronous, so a phase's device time is attributed to the phase that
+eventually blocks on its results — both training and evaluation blocks end
+in host conversions (``np.asarray`` / ``float``), which keeps the split
+honest at benchmark granularity.  Not thread-safe; the sweep engines are
+single-threaded.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict
+
+_seconds: Dict[str, float] = {}
+_calls: Dict[str, int] = {}
+
+
+def add(name: str, seconds: float):
+    _seconds[name] = _seconds.get(name, 0.0) + seconds
+    _calls[name] = _calls.get(name, 0) + 1
+
+
+@contextmanager
+def timed(name: str):
+    """Accumulate the block's wall-clock under ``name``."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        add(name, time.perf_counter() - t0)
+
+
+def seconds(name: str) -> float:
+    return _seconds.get(name, 0.0)
+
+
+def calls(name: str) -> int:
+    return _calls.get(name, 0)
+
+
+def snapshot() -> Dict[str, float]:
+    return dict(_seconds)
+
+
+def reset():
+    _seconds.clear()
+    _calls.clear()

@@ -165,11 +165,15 @@ def batched_local_train(model: Model, global_params,
                         data: Sequence[Tuple[np.ndarray, np.ndarray]], *,
                         passes: float, batch_size: int, optimizer: Optimizer,
                         rng: np.random.Generator, prox_mu: float = 0.0,
-                        client_ids: Optional[Sequence[int]] = None
+                        client_ids: Optional[Sequence[int]] = None,
+                        compression: Optional[str] = None
                         ) -> List[ClientUpdate]:
     """Train all clients in ``data`` from ``global_params`` concurrently.
     Returns one ClientUpdate per client (in input order), matching
-    ``local_train`` run sequentially with the same rng."""
+    ``local_train`` run sequentially with the same rng.  ``compression``
+    applies the upload quantize->dequantize round trip to every trained
+    lane (federated/compression.py), as the sequential path does per
+    client."""
     run_cohort = _make_cohort_fn(model, optimizer, prox_mu)
     streams, n_steps = materialize_streams(data, batch_size, passes, rng)
     assert max(n_steps) > 0, "cohort with zero local steps"
@@ -183,12 +187,15 @@ def batched_local_train(model: Model, global_params,
         xs, ys, masks, active = _stack_streams(
             [streams[i] for i in idx], batch_size, t_pad)
         m = len(idx)
-        params_b = jax.tree.map(
+        global_b = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (m,) + p.shape), global_params)
-        opt_b = jax.vmap(optimizer.init)(params_b)
+        opt_b = jax.vmap(optimizer.init)(global_b)
         params_b, last_loss = run_cohort(
-            params_b, opt_b, jnp.asarray(xs), jnp.asarray(ys),
+            global_b, opt_b, jnp.asarray(xs), jnp.asarray(ys),
             jnp.asarray(masks), jnp.asarray(active), global_params)
+        if compression not in (None, "none"):
+            from repro.federated.compression import compress_delta_lanes
+            params_b = compress_delta_lanes(global_b, params_b)
         last_loss = np.asarray(last_loss)
         for j, i in enumerate(idx):
             params_out[i] = jax.tree.map(lambda p, j=j: p[j], params_b)

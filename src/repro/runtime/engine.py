@@ -54,6 +54,7 @@ from repro.core.tuner import HyperParams
 from repro.federated.aggregation import (FedBuffAggregator,
                                          apply_async_update)
 from repro.federated.compression import upload_factor
+from repro.federated.evaluation import eval_due
 from repro.federated.server import FLResult, FLServer, RoundRecord
 from repro.runtime.events import ARRIVAL, DROPOUT, EventQueue, VirtualClock
 from repro.runtime.profiles import Fleet, homogeneous_fleet
@@ -207,10 +208,10 @@ class EventDrivenRuntime:
             mode = "batched"    # legacy flag
         if mode == "sequential":
             return mode
-        if rt.mode != "sync" or server.config.compression:
+        if rt.mode != "sync":
             print(f"runtime: {mode} execution applies to the sync mode "
-                  "without upload compression; using the sequential "
-                  "client loop", flush=True)
+                  "(async/buffered train one arrival at a time); using "
+                  "the sequential client loop", flush=True)
             return "sequential"
         if mode == "sharded" and jax.device_count() == 1:
             print("runtime: sharded execution needs a multi-device mesh "
@@ -368,7 +369,7 @@ class EventDrivenRuntime:
                     params = srv.aggregator(params, updates)
             round_cost = self.account_sync_round(plan, hp)
 
-            if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+            if eval_due(r, cfg.eval_every, cfg.max_rounds):
                 accuracy = srv._evaluate(params)
             wall = time.perf_counter() - t0
             history.append(RoundRecord(r, hp.m, hp.e, accuracy, round_cost,
@@ -399,7 +400,8 @@ class EventDrivenRuntime:
         updates = batched_local_train(
             srv.model, params, data, passes=e,
             batch_size=srv.config.batch_size, optimizer=srv.optimizer,
-            rng=srv.rng, prox_mu=srv.config.prox_mu, client_ids=active)
+            rng=srv.rng, prox_mu=srv.config.prox_mu, client_ids=active,
+            compression=srv.config.compression)
         sizes = [len(y) for _, y in data]
         for upd, n in zip(updates, sizes):
             srv.selector.update(upd.client_id, upd.last_loss, n)
@@ -412,7 +414,8 @@ class EventDrivenRuntime:
         res = sharded_fedavg_train(
             srv.model, params, data, passes=e,
             batch_size=srv.config.batch_size, optimizer=srv.optimizer,
-            rng=srv.rng, prox_mu=srv.config.prox_mu, client_ids=active)
+            rng=srv.rng, prox_mu=srv.config.prox_mu, client_ids=active,
+            compression=srv.config.compression)
         for cid, loss, n in zip(active, res.last_losses, res.n_examples):
             srv.selector.update(int(cid), float(loss), n)
         return res.params
@@ -544,16 +547,24 @@ class EventDrivenRuntime:
         return round_cost
 
     def finish_event_round(self, st: EventLoopState, staleness: int,
-                           wall: float):
+                           wall: float, accuracy: Optional[float] = None):
         """Complete one aggregation: bump the model version, account the
         window, evaluate on schedule, record history, and step the FedTune
         controller — or set ``st.reached`` and stop if the target accuracy
-        was hit (the controller does NOT step on the final round)."""
+        was hit (the controller does NOT step on the final round).
+
+        ``accuracy`` is the eval hook for the vectorized sweep runner: it
+        evaluates every aggregating trial's params in ONE stacked dispatch
+        (federated/evaluation.py) and hands each trial its lane's result
+        here — bit-identical to the single-trial eval this method would
+        otherwise run on schedule."""
         srv, cfg, rt = self.srv, self.srv.config, self.rt
         st.version += 1
         r = len(st.history)
         round_cost = self.account_event_round(st)
-        if (r + 1) % cfg.eval_every == 0 or r == cfg.max_rounds - 1:
+        if accuracy is not None:
+            st.accuracy = accuracy
+        elif eval_due(r, cfg.eval_every, cfg.max_rounds):
             st.accuracy = srv._evaluate(st.params)
         st.history.append(RoundRecord(
             r, st.hp.m, st.hp.e, st.accuracy, round_cost, wall,

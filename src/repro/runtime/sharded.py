@@ -77,26 +77,34 @@ def _flatten_cohort(params_b):
 
 
 def _make_sharded_cohort_fn(model: Model, optimizer: Optimizer,
-                            prox_mu: float, mesh):
-    key = (id(model), id(optimizer), prox_mu, id(mesh))
+                            prox_mu: float, mesh,
+                            compression: Optional[str] = None):
+    key = (id(model), id(optimizer), prox_mu, id(mesh),
+           compression if compression not in (None, "none") else None)
     if key in _sharded_fn_cache:
         return _sharded_fn_cache[key]
 
     one_client = make_client_step(model, optimizer, prox_mu)
     axis = mesh.axis_names[0]
+    compressed = compression not in (None, "none")
 
     def shard_body(xs, ys, masks, active, weights, global_params):
         """Runs on one device with its slice of the cohort: the shared
-        scan/vmap body over the local client slots, then the local weighted
+        scan/vmap body over the local client slots, the per-lane upload
+        round trip when compression is on (the aggregate must be formed
+        from what the server would reconstruct), then the local weighted
         partial sum through the fed_aggregate kernel path, completed by a
         psum across the clients axis."""
         m_loc = active.shape[1]
-        params_b = jax.tree.map(
+        global_b = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (m_loc,) + p.shape), global_params)
-        opt_b = jax.vmap(optimizer.init)(params_b)
+        opt_b = jax.vmap(optimizer.init)(global_b)
         params_b, last_loss = cohort_scan(
-            one_client, params_b, opt_b, xs, ys, masks, active,
+            one_client, global_b, opt_b, xs, ys, masks, active,
             global_params)
+        if compressed:
+            from repro.federated.compression import lane_roundtrip
+            params_b = lane_roundtrip(global_b, params_b)
         flat = _flatten_cohort(params_b)                   # (M_loc, N)
         partial = kernel_ops.fed_aggregate(weights, flat)  # (N,)
         return jax.lax.psum(partial, axis), last_loss
@@ -123,16 +131,19 @@ def sharded_fedavg_train(model: Model, global_params,
                          optimizer: Optimizer, rng: np.random.Generator,
                          prox_mu: float = 0.0,
                          client_ids: Optional[Sequence[int]] = None,
-                         mesh=None) -> ShardedRound:
+                         mesh=None,
+                         compression: Optional[str] = None) -> ShardedRound:
     """Train the whole cohort sharded over the ``clients`` mesh axis and
     return the FedAvg aggregate directly (weights n_k / n_total), without
     materializing per-client params on the host.  ``client_ids`` is
     accepted for signature symmetry with ``batched_local_train``; results
-    come back in input order regardless."""
+    come back in input order regardless.  ``compression`` applies the
+    upload round trip per lane on device, before the fused aggregation."""
     del client_ids
     mesh = mesh if mesh is not None else default_clients_mesh()
     n_dev = int(np.prod(mesh.devices.shape))
-    run = _make_sharded_cohort_fn(model, optimizer, prox_mu, mesh)
+    run = _make_sharded_cohort_fn(model, optimizer, prox_mu, mesh,
+                                  compression)
     streams, n_steps = materialize_streams(data, batch_size, passes, rng)
     assert max(n_steps) > 0, "cohort with zero local steps"
     sizes = [len(y) for _, y in data]

@@ -75,6 +75,11 @@ def test_parse_preferences_forms():
     assert parse_preferences("0") == [(1.0, 0.0, 0.0, 0.0)]
     assert parse_preferences("1,0,0,0;0,1,0,0") == [(1.0, 0.0, 0.0, 0.0),
                                                    (0.0, 1.0, 0.0, 0.0)]
+    # a bare 4-element list: a quad only when it sums to 1, else indices
+    # (paper_tables.py's default '0,1,4,14' is four indices)
+    assert parse_preferences("1,0,0,0") == [(1.0, 0.0, 0.0, 0.0)]
+    assert len(parse_preferences("0,1,4,14")) == 4
+    assert parse_preferences("0,1,4,14")[0] == (1.0, 0.0, 0.0, 0.0)
     with pytest.raises(ValueError):
         parse_preferences("99")
 
@@ -130,11 +135,70 @@ def test_vectorized_mixed_aggregators_and_fixed_tuner():
         assert_trial_parity(b, v)
 
 
-def test_vectorized_rejects_unpackable_trials():
-    with pytest.raises(ValueError, match="sequential engine"):
-        run_vectorized([tiny_spec(compression="int8")])
+def test_vectorized_rejects_unknown_pack_and_accepts_compression():
     with pytest.raises(ValueError, match="pack"):
         run_vectorized([tiny_spec()], pack="origami")
+    # upload-compressed trials vectorize (lane-wise quantization) — the
+    # old sequential-only rejection is gone
+    res = run_vectorized([tiny_spec(compression="int8", rounds=2)])
+    assert res[0].engine.startswith("vectorized")
+
+
+# ---------------------------------------------------------------------------
+# compression as a lane transform: compressed trials run through BOTH
+# vectorized engines bit-identically to independent FLServer.run() calls
+# (the PR-5 acceptance bar) — no sequential fallback remains
+# ---------------------------------------------------------------------------
+
+def test_vectorized_compressed_sync_matches_independent_runs():
+    specs = [tiny_spec(seed=s, compression="int8") for s in range(4)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert v.engine.startswith("vectorized/")
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_compressed_events_match_independent_runs():
+    """Compressed async AND buffered trials off the merged event queue:
+    each lane quantizes against its dispatch snapshot, exactly as
+    _client_update does per arrival."""
+    specs = [tiny_spec(seed=0, mode="async", compression="int8"),
+             tiny_spec(seed=1, mode="async", compression="int8"),
+             tiny_spec(seed=0, mode="buffered", rounds=2,
+                       compression="int8"),
+             tiny_spec(seed=1, mode="buffered", rounds=2,
+                       compression="int8")]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert v.engine.startswith("vectorized-events/")
+        assert_trial_parity(b, v)
+
+
+def test_vectorized_mixed_compression_lanes_one_pack():
+    """Compressed and uncompressed trials pack into ONE cohort: the lane
+    mask applies the round trip only to compressed lanes, and neither
+    side perturbs the other."""
+    specs = [tiny_spec(seed=0),
+             tiny_spec(seed=0, compression="int8"),
+             tiny_spec(seed=1, mode="async"),
+             tiny_spec(seed=1, mode="async", compression="int8")]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_run_sweep_compressed_stays_vectorized(capsys):
+    """run_sweep no longer routes compressed trials through the
+    sequential fallback (and no longer says so)."""
+    specs = [tiny_spec(seed=s, compression="int8", rounds=2)
+             for s in range(2)]
+    res = run_sweep(specs)
+    out = capsys.readouterr().out
+    assert "sequentially" not in out
+    assert all(r.engine.startswith("vectorized") for r in res)
 
 
 # ---------------------------------------------------------------------------
@@ -204,8 +268,11 @@ def test_vectorized_mixed_modes_one_sweep():
 @multidevice
 def test_sharded_pack_matches_batched_pack():
     """The clients-mesh packed cohort (per-trial segment sum + psum) agrees
-    with the single-device pack up to float reassociation."""
-    specs = [tiny_spec(seed=s) for s in range(3)]
+    with the single-device pack up to float reassociation — including
+    compressed lanes (quantized in the shard body) and the 'none'
+    spelling, which must NOT be treated as compression enabled."""
+    specs = [tiny_spec(seed=0), tiny_spec(seed=1, compression="none"),
+             tiny_spec(seed=2, compression="int8")]
     vb = run_vectorized(specs, pack="batched")
     vs = run_vectorized(specs, pack="sharded")
     for b, s in zip(vb, vs):
@@ -213,6 +280,62 @@ def test_sharded_pack_matches_batched_pack():
         assert b.history_e == s.history_e
         np.testing.assert_allclose(b.history_acc, s.history_acc, atol=1e-3)
         np.testing.assert_allclose(b.cost, s.cost, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the stacked evaluation subsystem (federated/evaluation.py)
+# ---------------------------------------------------------------------------
+
+def test_stacked_evaluator_bitmatches_single_evaluator():
+    """Lane i of a stacked evaluation equals Evaluator.evaluate on that
+    trial's params EXACTLY — the float sequence the parity contract needs."""
+    from repro.experiments.runner import build_server
+    from repro.federated.evaluation import Evaluator, StackedEvaluator
+    srv = build_server(tiny_spec())
+    params = [srv.model.init(jax.random.PRNGKey(s)) for s in range(5)]
+    single = Evaluator(srv.model, srv.dataset, 128)
+    stacked = StackedEvaluator(srv.model, srv.dataset, 128)
+    expect = [single.evaluate(p) for p in params]
+    got = stacked.evaluate(params)
+    assert got == expect
+    # and through the grouping entry point, in item order
+    from repro.federated.evaluation import evaluate_stacked
+    items = [(srv.model, srv.dataset, 128, p) for p in params]
+    assert evaluate_stacked(items) == expect
+
+
+def test_stacked_eval_parity_every_aggregator():
+    """Vectorized per-round accuracies bit-match standalone runs for every
+    aggregator the grid accepts — the stacked eval sits on the round path
+    of all of them."""
+    from repro.federated.aggregation import AGGREGATORS
+    specs = [tiny_spec(seed=0, rounds=2, aggregator=a)
+             for a in sorted(AGGREGATORS)]
+    base = [run_trial(s) for s in specs]
+    vec = run_vectorized(specs)
+    for b, v in zip(base, vec):
+        assert_trial_parity(b, v)
+
+
+def test_eval_fn_cache_eviction_never_changes_results():
+    """Regression for the old module-level FIFO dict: a capacity-1 LRU
+    forced to evict and recompile must reproduce the identical accuracy."""
+    from repro.experiments.runner import build_server
+    from repro.federated.evaluation import EvalFnCache, Evaluator
+    srv_a = build_server(tiny_spec())
+    srv_b = build_server(tiny_spec(dataset="cifar100"))
+    cache = EvalFnCache(capacity=1)
+    ev_a = Evaluator(srv_a.model, srv_a.dataset, 128, fn_cache=cache)
+    ev_b = Evaluator(srv_b.model, srv_b.dataset, 128, fn_cache=cache)
+    pa = srv_a.model.init(jax.random.PRNGKey(0))
+    pb = srv_b.model.init(jax.random.PRNGKey(0))
+    first_a = ev_a.evaluate(pa)
+    first_b = ev_b.evaluate(pb)          # evicts a's jitted fn
+    assert len(cache) == 1
+    assert ev_a.evaluate(pa) == first_a  # recompiled, identical result
+    assert ev_b.evaluate(pb) == first_b
+    with pytest.raises(ValueError):
+        EvalFnCache(capacity=0)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +416,42 @@ def test_paper_table_renders_het_profile_columns():
     table = paper_table(rows)
     assert "fedavg·homogeneous" in table
     assert "fedavg·stragglers" in table
+
+
+def test_sweep_compressions_axis_expands_and_keys_distinct():
+    sweep = SweepSpec(datasets=("emnist",), aggregators=("fedavg",),
+                      preferences=parse_preferences("14"), seeds=(0,),
+                      compressions=(None, "int8"), base=tiny_spec())
+    specs = sweep.expand()
+    # (fedtune + fixed) x 2 compression methods, all distinct keys
+    assert len(specs) == 4
+    assert {s.compression for s in specs} == {None, "int8"}
+    assert len({s.key() for s in specs}) == 4
+    # "none" normalizes to None so keys stay stable across spellings
+    alias = SweepSpec(datasets=("emnist",), aggregators=("fedavg",),
+                      preferences=parse_preferences("14"), seeds=(0,),
+                      compressions=("none", "int8"), base=tiny_spec())
+    assert {s.key() for s in alias.expand()} == {s.key() for s in specs}
+
+
+def test_paper_table_renders_compression_columns():
+    rows = []
+    for comp in (None, "int8"):
+        tuned = tiny_spec(compression=comp)
+        fixed = tiny_spec(compression=comp, tuner="fixed",
+                          preference=CANONICAL_PREFERENCE)
+        rows.append(_fake_record(tuned, [80.0, 80.0, 80.0, 80.0]))
+        rows.append(_fake_record(fixed, [100.0, 100.0, 100.0, 100.0]))
+    table = paper_table(rows)
+    assert "fedavg·int8" in table
+    assert "fedavg·none" in table
+    # legacy rows without the compression field tabulate as uncompressed
+    legacy = [_fake_record(tiny_spec(), [80.0] * 4,
+                           drop_spec_keys=("compression",)),
+              _fake_record(tiny_spec(tuner="fixed",
+                                     preference=CANONICAL_PREFERENCE),
+                           [100.0] * 4, drop_spec_keys=("compression",))]
+    assert "fedavg" in paper_table(legacy)
 
 
 def test_paper_table_tolerates_legacy_rows_missing_het():

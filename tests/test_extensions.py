@@ -4,12 +4,15 @@ adaptive-step FedTune."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.costs import CostModel
 from repro.core.fedtune import FedTune, FedTuneConfig
 from repro.core.preferences import Preference
 from repro.core.tuner import HyperParams
-from repro.federated.compression import compress_delta, upload_factor
+from repro.federated.compression import (compress_delta,
+                                         compress_delta_lanes, lane_mask,
+                                         upload_factor)
 from repro.federated.selection import get_selector
 
 
@@ -49,6 +52,100 @@ def test_int8_compression_roundtrip_close():
     err = float(jnp.abs(rec["w"] - c["w"]).max())
     scale = float(jnp.abs(c["w"] - g["w"]).max())
     assert err <= scale / 100  # 127-level quantization of the delta
+
+
+def _delta_scale(g, c):
+    """The per-leaf quantization scale compress_delta uses."""
+    return max(float(jnp.max(jnp.abs(c - g))) / 127.0, 1e-12)
+
+
+def _roundtrip_properties(g, c):
+    """The compress_delta contract on one (global, client) leaf pair:
+    identity under method='none', exactness for zero deltas, per-element
+    roundtrip error bounded by scale/2, and per-tree == lane-wise."""
+    # idempotent under method="none" (and None): the client params object
+    # passes through untouched
+    assert compress_delta(g, c, "none") is c
+    assert compress_delta(g, c, None) is c
+    # exact for zero deltas (the 1e-12 scale clamp guards the 0/0)
+    zero = compress_delta(g, g, "int8")
+    for lg, lz in zip(jax.tree.leaves(g), jax.tree.leaves(zero)):
+        np.testing.assert_array_equal(np.asarray(lg), np.asarray(lz))
+    # roundtrip error <= scale/2 per element (+ one ulp of the
+    # reconstruction for the float32 add g + deq)
+    rec = compress_delta(g, c, "int8")
+    for lg, lc, lr in zip(jax.tree.leaves(g), jax.tree.leaves(c),
+                          jax.tree.leaves(rec)):
+        scale = _delta_scale(lg, lc)
+        err = np.abs(np.asarray(lr, np.float64) - np.asarray(lc, np.float64))
+        tol = (scale * 0.5000001
+               + np.spacing(np.abs(np.asarray(lc, np.float32))))
+        assert np.all(err <= tol), (float(err.max()), scale)
+    # bit-identical between the per-tree and vmapped lane-wise paths
+    stack = jax.tree.map(lambda a, b: jnp.stack([a, b]), g, c)
+    lanes = compress_delta_lanes(
+        jax.tree.map(lambda a: jnp.stack([a, a]), g), stack)
+    for lr, lz, ls in zip(jax.tree.leaves(rec), jax.tree.leaves(zero),
+                          jax.tree.leaves(lanes)):
+        np.testing.assert_array_equal(np.asarray(ls[0]), np.asarray(lz))
+        np.testing.assert_array_equal(np.asarray(ls[1]), np.asarray(lr))
+
+
+def test_compress_delta_roundtrip_properties():
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    g = {"w": jax.random.normal(k1, (33, 17)), "b": jax.random.normal(k2, (17,))}
+    c = jax.tree.map(
+        lambda x, n: x + 0.02 * n, g,
+        {"w": jax.random.normal(k3, (33, 17)),
+         "b": jnp.zeros((17,))})        # one leaf with a zero delta inside
+    _roundtrip_properties(g, c)
+
+
+def test_compress_delta_lane_mask_passthrough():
+    """Masked-off lanes come back bit-identical to their inputs; masked-on
+    lanes match the per-tree round trip; lane_mask validates methods and
+    returns None when nothing compresses."""
+    key = jax.random.PRNGKey(5)
+    g = jax.random.normal(key, (4, 8, 3))
+    c = g + 0.01 * jax.random.normal(jax.random.PRNGKey(6), (4, 8, 3))
+    mask = lane_mask(["int8", None, "int8", "none"])
+    np.testing.assert_array_equal(mask, [True, False, True, False])
+    out = compress_delta_lanes({"w": g}, {"w": c}, mask)["w"]
+    for i in range(4):
+        ref = compress_delta({"w": g[i]}, {"w": c[i]}, "int8")["w"]
+        expect = ref if mask[i] else c[i]
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(expect))
+    assert lane_mask([None, "none"]) is None
+    with pytest.raises(ValueError, match="int8"):
+        lane_mask(["int4"])
+
+
+def test_compress_delta_property_fuzz():
+    """Hypothesis sweep of the roundtrip contract over adversarial float
+    patterns (huge/tiny scales, constant leaves, sign flips)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis.extra import numpy as hnp
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        base=hnp.arrays(np.float32, (5, 3),
+                        elements=dict(min_value=-1e3, max_value=1e3,
+                                      allow_nan=False, allow_infinity=False)),
+        delta=hnp.arrays(np.float32, (5, 3),
+                         elements=dict(min_value=-1.0, max_value=1.0,
+                                       allow_nan=False,
+                                       allow_infinity=False)),
+        scale=hypothesis.strategies.sampled_from(
+            [0.0, 1e-9, 1e-3, 1.0, 1e4]),
+    )
+    def check(base, delta, scale):
+        g = {"w": jnp.asarray(base)}
+        c = {"w": jnp.asarray(base + scale * delta)}
+        _roundtrip_properties(g, c)
+
+    check()
 
 
 def test_upload_factor_reduces_translocost():

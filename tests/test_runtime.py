@@ -30,7 +30,7 @@ def small_dataset(seed=1):
 
 
 def mk_server(*, rt=None, fleet=None, max_rounds=4, m=5, e=2.0,
-              selection="random"):
+              selection="random", compression=None):
     ds = small_dataset()
     model = build_model(MLPConfig(name="mlp_rt", in_dim=12, hidden=(16,),
                                   n_classes=4))
@@ -42,7 +42,7 @@ def mk_server(*, rt=None, fleet=None, max_rounds=4, m=5, e=2.0,
         CostModel(flops_per_example=2 * n_params, param_count=n_params),
         FLConfig(m=m, e=e, batch_size=4, target_accuracy=0.99,
                  max_rounds=max_rounds, eval_points=128,
-                 selection=selection),
+                 selection=selection, compression=compression),
         fleet=fleet, runtime_config=rt)
 
 
@@ -281,6 +281,25 @@ def test_batched_matches_sequential_local_training():
 def test_batched_sync_runtime_matches_sequential_sync():
     seq = mk_server(rt=RuntimeConfig(mode="sync", batched=False)).run()
     bat = mk_server(rt=RuntimeConfig(mode="sync", batched=True)).run()
+    np.testing.assert_allclose([h.accuracy for h in seq.history],
+                               [h.accuracy for h in bat.history], atol=1e-5)
+    np.testing.assert_allclose(np.array(seq.total_cost.as_tuple()),
+                               np.array(bat.total_cost.as_tuple()),
+                               rtol=1e-9)
+
+
+def test_batched_compressed_matches_sequential_and_stays_batched():
+    """Upload compression is a lane transform inside the batched cohort:
+    the batched backend no longer falls back to the sequential client
+    loop, and its rounds match the sequential path's compressed rounds."""
+    from repro.runtime.engine import EventDrivenRuntime
+    bat_srv = mk_server(rt=RuntimeConfig(mode="sync", client_exec="batched"),
+                        compression="int8")
+    eng = EventDrivenRuntime(bat_srv, fleet=bat_srv.fleet,
+                             config=bat_srv.runtime_config)
+    assert eng.client_exec == "batched"
+    seq = mk_server(rt=RuntimeConfig(mode="sync"), compression="int8").run()
+    bat = bat_srv.run()
     np.testing.assert_allclose([h.accuracy for h in seq.history],
                                [h.accuracy for h in bat.history], atol=1e-5)
     np.testing.assert_allclose(np.array(seq.total_cost.as_tuple()),

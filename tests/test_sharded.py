@@ -37,7 +37,8 @@ def small_dataset(seed=1):
         n_test_clients=8, size_log_mean=2.5, size_log_std=0.5, seed=seed))
 
 
-def mk_server(*, rt=None, max_rounds=4, m=5, e=2.0, aggregator="fedavg"):
+def mk_server(*, rt=None, max_rounds=4, m=5, e=2.0, aggregator="fedavg",
+              compression=None):
     ds = small_dataset()
     model = build_model(MLPConfig(name="mlp_shard", in_dim=12, hidden=(16,),
                                   n_classes=4))
@@ -48,7 +49,8 @@ def mk_server(*, rt=None, max_rounds=4, m=5, e=2.0, aggregator="fedavg"):
         get_optimizer("sgd", 0.05, momentum=0.9),
         CostModel(flops_per_example=2 * n_params, param_count=n_params),
         FLConfig(m=m, e=e, batch_size=4, target_accuracy=0.99,
-                 max_rounds=max_rounds, eval_points=128),
+                 max_rounds=max_rounds, eval_points=128,
+                 compression=compression),
         runtime_config=rt)
 
 
@@ -140,11 +142,37 @@ def test_sharded_sync_runtime_matches_batched_sync():
     tree_close(bat.params, shd.params, atol=1e-4)
 
 
+@multidevice
+def test_sharded_compressed_matches_batched():
+    """The per-lane upload round trip runs inside the shard_map body,
+    before the fused aggregation — compressed sharded rounds agree with
+    compressed batched rounds (up to the usual float reassociation)."""
+    seq = mk_server(rt=RuntimeConfig(mode="sync", client_exec="batched"),
+                    compression="int8").run()
+    shd_srv = mk_server(rt=RuntimeConfig(mode="sync", client_exec="sharded"),
+                        compression="int8")
+    eng = EventDrivenRuntime(shd_srv, config=shd_srv.runtime_config)
+    assert eng.client_exec == "sharded"
+    shd = shd_srv.run()
+    np.testing.assert_allclose([h.accuracy for h in seq.history],
+                               [h.accuracy for h in shd.history], atol=1e-3)
+    np.testing.assert_allclose(np.array(seq.total_cost.as_tuple()),
+                               np.array(shd.total_cost.as_tuple()),
+                               rtol=1e-6)
+
+
 def test_client_exec_resolution_and_fallbacks():
     srv = mk_server(rt=RuntimeConfig(mode="sync", client_exec="sharded"))
     eng = EventDrivenRuntime(srv, config=srv.runtime_config)
     expected = "batched" if jax.device_count() == 1 else "sharded"
     assert eng.client_exec == expected
+
+    # upload compression no longer forces a fallback: it runs as a lane
+    # transform inside the batched/sharded cohorts
+    srv = mk_server(rt=RuntimeConfig(mode="sync", client_exec="batched"),
+                    compression="int8")
+    eng = EventDrivenRuntime(srv, config=srv.runtime_config)
+    assert eng.client_exec == "batched"
 
     # legacy boolean still selects the batched path
     srv = mk_server(rt=RuntimeConfig(mode="sync", batched=True))
