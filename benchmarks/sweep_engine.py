@@ -35,7 +35,14 @@ writes it to a file for CI artifact upload):
          "vec_s": ..., "speedup": ..., "bitmatch": true,
          "train_s": ..., "eval_s": ..., "other_s": ...,
          "seq_phases": {...}, "vec_phases": {...},
+         "occupancy": ..., "padding_waste": ..., "phase_calls": {...},
          "sequential_trials": 0, ...}
+
+The timed vectorized run executes under the observability subsystem
+(repro.obs, parity-neutral): ``occupancy`` is the mean fraction of the T
+lanes still live per macro-step, ``padding_waste`` the fraction of packed
+cohort steps spent on pow2 padding, and ``phase_calls`` the number of
+train/eval dispatches behind the phase seconds (the amortization factor).
 
 Usage: PYTHONPATH=src:. python benchmarks/sweep_engine.py [--t 8]
        [--rounds 4] [--mode async] [--compression int8]
@@ -49,7 +56,7 @@ import json
 import time
 
 from benchmarks.common import emit
-from repro import perf
+from repro import obs, perf
 from repro.core.preferences import PAPER_PREFERENCES
 from repro.experiments import TrialSpec, run_trial, run_vectorized
 
@@ -75,7 +82,11 @@ def _run_sequential(specs):
 
 
 def _timed_phases(fn):
-    """Run ``fn`` with fresh perf counters; returns (result, phase dict)."""
+    """Run ``fn`` with fresh perf counters; returns (result, phase dict).
+    Per-phase call counts ride along (``perf.calls`` was tracked but never
+    exported before): for the vectorized engine they count packed cohort /
+    stacked eval dispatches, for sequential per-client / per-trial calls —
+    the amortization factor in one number."""
     perf.reset()
     t0 = time.perf_counter()
     res = fn()
@@ -85,7 +96,8 @@ def _timed_phases(fn):
     return res, total, {
         "total_s": round(total, 4), "train_s": round(train, 4),
         "eval_s": round(ev, 4),
-        "other_s": round(max(total - train - ev, 0.0), 4)}
+        "other_s": round(max(total - train - ev, 0.0), 4),
+        "train_calls": perf.calls("train"), "eval_calls": perf.calls("eval")}
 
 
 def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
@@ -101,8 +113,19 @@ def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
     seq, seq_s, seq_phases = _timed_phases(lambda: _run_sequential(specs))
 
     run_vectorized(specs, pack=pack)
+    # trace the timed vectorized run: occupancy and padding-waste land in
+    # BENCH.  Instrumentation is per-round host-side bookkeeping (gated,
+    # parity-neutral), so vec_s stays an honest engine timing.
+    obs.enable()
     vec, vec_s, vec_phases = _timed_phases(
         lambda: run_vectorized(specs, pack=pack))
+    snap = obs.registry.snapshot()
+    lanes = [r["value"] for r in obs.registry.series("lanes_live")]
+    obs.disable()
+    occupancy = (sum(lanes) / len(lanes) / t) if lanes else 0.0
+    steps_pad = snap["counters"].get("pack_steps_padded", 0.0)
+    padding_waste = (1.0 - snap["counters"].get("pack_steps_real", 0.0)
+                     / steps_pad) if steps_pad else 0.0
 
     bitmatch = True
     max_acc_diff = 0.0
@@ -139,6 +162,13 @@ def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
                "eval_s": vec_phases["eval_s"],
                "other_s": vec_phases["other_s"],
                "seq_phases": seq_phases, "vec_phases": vec_phases,
+               # observability of the timed vectorized run: mean live-lane
+               # occupancy (fraction of T still running per macro-step) and
+               # the pow2-padding waste of its packed cohort dispatches
+               "occupancy": round(occupancy, 4),
+               "padding_waste": round(padding_waste, 4),
+               "phase_calls": {"train": vec_phases["train_calls"],
+                               "eval": vec_phases["eval_calls"]},
                # compressed grids must vectorize: no trial may have taken
                # the one-at-a-time path
                "sequential_trials": sum(

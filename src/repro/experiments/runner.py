@@ -69,7 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import perf
+from repro import obs, perf
 from repro.configs.paper_models import MLPConfig
 from repro.core import CostModel, FedTune, FedTuneConfig, Preference
 from repro.core.tuner import FixedTuner, HyperParams
@@ -85,7 +85,7 @@ from repro.models import build_model
 from repro.optim.optimizers import get_optimizer
 from repro.runtime.batched import (_pow2, _stack_streams, bucket_by_steps,
                                    cohort_scan, make_client_step,
-                                   materialize_streams)
+                                   materialize_streams, note_pack_metrics)
 from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig
 from repro.runtime.events import MergedEventQueue, TrialQueueView
 from repro.runtime.profiles import sample_fleet
@@ -350,6 +350,7 @@ def _make_live(spec: TrialSpec) -> _LiveTrial:
     srv = build_server(spec)
     eng = EventDrivenRuntime(srv, fleet=srv.fleet,
                              config=srv.runtime_config or RuntimeConfig())
+    eng.trace_label = spec.key()
     params = srv.model.init(jax.random.PRNGKey(srv.config.seed))
     return _LiveTrial(spec=spec, srv=srv, eng=eng,
                       hp=HyperParams(m=spec.m0, e=spec.e0), params=params)
@@ -358,6 +359,9 @@ def _make_live(spec: TrialSpec) -> _LiveTrial:
 def _group_key(tr: _LiveTrial) -> tuple:
     return (id(tr.srv.model), id(tr.srv.optimizer), tr.srv.config.prox_mu,
             tr.srv.config.batch_size)
+
+
+_note_pack = note_pack_metrics      # pack-shape metrics, see batched.py
 
 
 def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
@@ -389,6 +393,9 @@ def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
     for t_pad, idx in sorted(bucket_by_steps(n_steps).items()):
         sel = [ents[i] for i in idx]
         m_pad = _pow2(len(sel))    # bound the compiled (T, M) shape set
+        if obs.enabled():
+            _note_pack(t_pad, m_pad, len(sel),
+                       sum(n_steps[i] for i in idx))
         streams = [tr.cohort.streams[j] for tr, j in sel]
         xs, ys, masks, active = _stack_streams(
             streams + [[]] * (m_pad - len(sel)), bs, t_pad)
@@ -442,6 +449,9 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
         sel = [ents[i] for i in idx]
         m_pad = _pow2(len(sel))
         m_pad = int(np.ceil(m_pad / n_dev) * n_dev)   # shard-divisible
+        if obs.enabled():
+            _note_pack(t_pad, m_pad, len(sel),
+                       sum(n_steps[i] for i in idx))
         pad = m_pad - len(sel)
         xs, ys, masks, active = _stack_streams(
             [tr.cohort.streams[j] for tr, j in sel] + [[]] * pad, bs, t_pad)
@@ -584,31 +594,47 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         if not live:
             break
         t0 = time.perf_counter()
+        if obs.enabled():
+            obs.registry.sample("lanes_live", len(live), step=n_rounds,
+                                engine="sync")
         # 1. plan every live trial's round (per-trial rng streams)
-        for tr in live:
-            tr.plan = tr.eng.plan_sync_round(tr.hp)
-            tr.eng.clock.advance_to(tr.eng.clock.now + tr.plan.round_time)
+        with obs.span("PLAN", phase="plan", n_trials=len(live)):
+            for tr in live:
+                v0 = tr.eng.clock.now
+                tr.plan = tr.eng.plan_sync_round(tr.hp)
+                tr.eng.clock.advance_to(tr.eng.clock.now
+                                        + tr.plan.round_time)
+                if obs.enabled():
+                    obs.record("round", phase="round", trial=tr.spec.key(),
+                               round_idx=tr.round_idx,
+                               virtual=(v0, tr.eng.clock.now),
+                               n_included=len(tr.plan.included),
+                               n_active=len(tr.plan.active))
         # 2. materialize batch streams (the rng contract) and pack
         entries: List[Tuple[_LiveTrial, int]] = []
-        for tr in live:
-            cids = tr.plan.train_cids
-            if not cids:
-                tr.cohort = None
-                continue
-            data = [tr.srv.dataset.client_data(c) for c in cids]
-            streams, n_steps = materialize_streams(
-                data, tr.srv.config.batch_size, tr.hp.e, tr.srv.rng)
-            sizes = [len(y) for _, y in data]
-            tr.cohort = _Cohort(cids=cids, streams=streams, n_steps=n_steps,
-                                sizes=sizes, trained=[None] * len(cids),
-                                flat_rows=[None] * len(cids),
-                                losses=[0.0] * len(cids))
-            entries.extend((tr, j) for j in range(len(cids)))
+        with obs.span("PACK", phase="pack", n_trials=len(live)):
+            for tr in live:
+                cids = tr.plan.train_cids
+                if not cids:
+                    tr.cohort = None
+                    continue
+                data = [tr.srv.dataset.client_data(c) for c in cids]
+                streams, n_steps = materialize_streams(
+                    data, tr.srv.config.batch_size, tr.hp.e, tr.srv.rng)
+                sizes = [len(y) for _, y in data]
+                tr.cohort = _Cohort(cids=cids, streams=streams,
+                                    n_steps=n_steps, sizes=sizes,
+                                    trained=[None] * len(cids),
+                                    flat_rows=[None] * len(cids),
+                                    losses=[0.0] * len(cids))
+                entries.extend((tr, j) for j in range(len(cids)))
         # 3. group by model and train each group's packed cohort
         groups: Dict[tuple, List[Tuple[_LiveTrial, int]]] = {}
         for ent in entries:
             groups.setdefault(_group_key(ent[0]), []).append(ent)
-        with perf.timed("train"):
+        with perf.timed("train"), obs.span("TRAIN", phase="train",
+                                           n_entries=len(entries),
+                                           n_groups=len(groups)):
             for ents in groups.values():
                 fused = (pack == "sharded"
                          and all(tr.srv.aggregator.name == "fedavg"
@@ -620,16 +646,20 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         # 4. per-trial aggregation + accounting, then ONE stacked eval of
         #    every due trial (grouped by model/dataset), then per-trial
         #    record + controller step
-        for tr in live:
-            _reduce_round(tr)
+        with obs.span("APPLY", phase="apply", n_trials=len(live)):
+            for tr in live:
+                _reduce_round(tr)
         due = [tr for tr in live
                if eval_due(tr.round_idx, tr.srv.config.eval_every,
                            tr.srv.config.max_rounds)]
-        accs = evaluate_stacked(
-            [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
-              tr.params) for tr in due], mesh=mesh)
+        with obs.span("EVAL", phase="eval", n_due=len(due)):
+            accs = evaluate_stacked(
+                [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
+                  tr.params) for tr in due], mesh=mesh)
         acc_of = {id(tr): a for tr, a in zip(due, accs)}
         wall = time.perf_counter() - t0
+        if obs.enabled():
+            obs.counter("t_sim", max(tr.eng.clock.now for tr in live))
         for tr in live:
             tr.wall += wall / len(live)
             _finish_round(tr, wall / len(live), acc_of.get(id(tr)))
@@ -682,6 +712,7 @@ def _make_event_live(spec: TrialSpec, merged: MergedEventQueue,
     srv = build_server(spec)
     eng = EventDrivenRuntime(srv, fleet=srv.fleet,
                              config=srv.runtime_config or RuntimeConfig())
+    eng.trace_label = spec.key()
     view = TrialQueueView(merged, trial_ord)
     tr = _EventTrial(spec=spec, srv=srv, eng=eng, view=view)
     params = srv.model.init(jax.random.PRNGKey(srv.config.seed))
@@ -728,6 +759,9 @@ def _run_event_group(lanes: List[_Lane]):
     for t_pad, idx in sorted(buckets.items()):
         sel = [lanes[i] for i in idx]
         m_pad = _pow2(len(sel))    # bound the compiled (T, M) shape set
+        if obs.enabled():
+            _note_pack(t_pad, m_pad, len(sel),
+                       sum(ln.n_steps for ln in sel))
         xs, ys, masks, active = _stack_streams(
             [ln.stream for ln in sel] + [[]] * (m_pad - len(sel)),
             bs, t_pad)
@@ -816,32 +850,37 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
         if not live:
             break
         t0 = time.perf_counter()
+        if obs.enabled():
+            obs.registry.sample("lanes_live", len(live), step=n_steps_total,
+                                engine="events")
         # 1. COLLECT one pending arrival per live trial
         lanes: List[_Lane] = []
         packed = set()
         stash = []
-        while merged and len(packed) < len(live):
-            ev = merged.pop()
-            tr = by_ord[ev.trial_ord]
-            if tr.done:
-                continue               # stale event of a finished trial
-            if id(tr) in packed:
-                stash.append(ev)       # defer: this trial already packed
-                continue
-            tr.eng.clock.advance_to(ev.time)
-            fl = tr.eng.plan_event(tr.st, ev)
-            if fl is None:             # dropout: refill and keep collecting
-                tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,
-                                              queue=tr.view)
-                continue
-            data = [tr.srv.dataset.client_data(fl.client_id)]
-            streams, n_steps = materialize_streams(
-                data, tr.srv.config.batch_size, fl.e, tr.srv.rng)
-            lanes.append(_Lane(tr=tr, fl=fl, stream=streams[0],
-                               n_steps=n_steps[0]))
-            packed.add(id(tr))
-        for ev in stash:
-            merged.requeue(ev)
+        with obs.span("COLLECT", phase="collect", n_live=len(live)) as _sp:
+            while merged and len(packed) < len(live):
+                ev = merged.pop()
+                tr = by_ord[ev.trial_ord]
+                if tr.done:
+                    continue           # stale event of a finished trial
+                if id(tr) in packed:
+                    stash.append(ev)   # defer: this trial already packed
+                    continue
+                tr.eng.clock.advance_to(ev.time)
+                fl = tr.eng.plan_event(tr.st, ev)
+                if fl is None:         # dropout: refill and keep collecting
+                    tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,
+                                                  queue=tr.view)
+                    continue
+                data = [tr.srv.dataset.client_data(fl.client_id)]
+                streams, n_steps = materialize_streams(
+                    data, tr.srv.config.batch_size, fl.e, tr.srv.rng)
+                lanes.append(_Lane(tr=tr, fl=fl, stream=streams[0],
+                                   n_steps=n_steps[0]))
+                packed.add(id(tr))
+            for ev in stash:
+                merged.requeue(ev)
+            _sp.set(n_lanes=len(lanes), n_deferred=len(stash))
         # a live trial with nothing queued ends exactly as the standalone
         # loop does on an empty queue (the dispatch deadlock guard makes
         # this unreachable in practice, but the semantics must match)
@@ -855,7 +894,9 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
                 ln.params, ln.loss = ln.fl.params, 0.0
                 continue
             groups.setdefault(_group_key(ln.tr), []).append(ln)
-        with perf.timed("train"):
+        with perf.timed("train"), obs.span("PACK", phase="train",
+                                           n_lanes=len(lanes),
+                                           n_groups=len(groups)):
             for group in groups.values():
                 _run_event_group(group)
         # 3. APPLY per trial, in collect (= merged pop) order: first fold
@@ -868,20 +909,23 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
         wall = time.perf_counter() - t0
         share = wall / max(len(lanes), 1)
         applied = []
-        for ln in lanes:
-            tr, fl = ln.tr, ln.fl
-            tr.wall += share
-            tr.srv.selector.update(int(fl.client_id), ln.loss,
-                                   fl.n_examples)
-            aggregated, staleness = tr.eng.apply_event(tr.st, fl, ln.params)
-            applied.append((ln, aggregated, staleness))
+        with obs.span("APPLY", phase="apply", n_lanes=len(lanes)):
+            for ln in lanes:
+                tr, fl = ln.tr, ln.fl
+                tr.wall += share
+                tr.srv.selector.update(int(fl.client_id), ln.loss,
+                                       fl.n_examples)
+                aggregated, staleness = tr.eng.apply_event(tr.st, fl,
+                                                           ln.params)
+                applied.append((ln, aggregated, staleness))
         due = [ln.tr for ln, aggregated, _s in applied
                if aggregated and eval_due(len(ln.tr.st.history),
                                           ln.tr.srv.config.eval_every,
                                           ln.tr.srv.config.max_rounds)]
-        accs = evaluate_stacked(
-            [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
-              tr.st.params) for tr in due])
+        with obs.span("EVAL", phase="eval", n_due=len(due)):
+            accs = evaluate_stacked(
+                [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
+                  tr.st.params) for tr in due])
         acc_of = {id(tr): a for tr, a in zip(due, accs)}
         for ln, aggregated, staleness in applied:
             tr = ln.tr
@@ -895,6 +939,8 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
                                           queue=tr.view)
             if len(tr.st.history) >= tr.srv.config.max_rounds:
                 end_trial(tr)
+        if obs.enabled() and live:
+            obs.counter("t_sim", max(tr.eng.clock.now for tr in live))
         n_steps_total += 1
         if verbose and n_steps_total % 20 == 0:
             done = sum(tr.done for tr in trials)

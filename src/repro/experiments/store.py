@@ -22,9 +22,12 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Dict, Iterable, List, Optional
 
 import numpy as np
+
+from repro import obs
 
 from repro.core.costs import SystemCost
 from repro.core.preferences import Preference
@@ -61,10 +64,15 @@ class ResultStore:
                 if r.get("status") == "done" and "key" in r}
 
     def append(self, record: dict):
+        t0 = time.perf_counter()
         with open(self.path, "a") as f:
             f.write(json.dumps(record) + "\n")
             f.flush()
             os.fsync(f.fileno())
+        if obs.enabled():
+            # fsynced-append latency: the store is on every trial's
+            # completion path, so a slow disk shows up here first
+            obs.registry.observe("store_write_s", time.perf_counter() - t0)
 
     def clear(self):
         if os.path.exists(self.path):

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import perf
+from repro import obs, perf
 
 EVAL_BATCH = 256               # test batch staging granularity (bounds memory)
 
@@ -80,7 +80,11 @@ class EvalFnCache:
         fn = self._fns.get(key)
         if fn is not None:
             self._fns.move_to_end(key)
+            if obs.enabled():
+                obs.registry.inc("eval_fn_cache_hits")
             return fn
+        if obs.enabled():
+            obs.registry.inc("eval_fn_cache_misses")
 
         def accuracy(params, x, y):
             logits = model.forward(params, x)
@@ -112,7 +116,11 @@ def staged_batches(dataset, eval_points: int,
     hit = _batch_cache.get(key)
     if hit is not None:
         _batch_cache.move_to_end(key)
+        if obs.enabled():
+            obs.registry.inc("eval_batch_cache_hits")
         return hit[1]
+    if obs.enabled():
+        obs.registry.inc("eval_batch_cache_misses")
     x, y = dataset.test_data(eval_points)
     batches = [
         (jnp.asarray(x[i:i + batch_size]), jnp.asarray(y[i:i + batch_size]),
@@ -154,7 +162,7 @@ class Evaluator:
         """Accuracy of ``params`` over the staged test batches."""
         fn = self.fn_cache.get(self.model)
         correct, total = 0.0, 0
-        with perf.timed("eval"):
+        with perf.timed("eval"), obs.span("eval", phase="eval", n_lanes=1):
             for bx, by, n in staged_batches(self.dataset, self.eval_points):
                 correct += float(fn(params, bx, by)) * n
                 total += n
@@ -204,7 +212,8 @@ class StackedEvaluator:
         fn = self.fn_cache.get(self.model, stacked=True)
         correct = [0.0] * t
         total = 0
-        with perf.timed("eval"):
+        with perf.timed("eval"), obs.span("eval_stacked", phase="eval",
+                                          n_lanes=t):
             for bx, by, n in staged_batches(self.dataset, self.eval_points):
                 accs = np.asarray(fn(stacked, bx, by))
                 for i in range(t):

@@ -131,6 +131,16 @@ def main():
                     help="named grid (smoke = the 24-trial CI grid; "
                          "smoke-async = the 8-trial async/buffered "
                          "event-runtime grid)")
+    ap.add_argument("--trace", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="record a dual-clock trace of the sweep: Chrome "
+                         "trace-event JSON (open in Perfetto) plus a "
+                         "metrics JSONL next to it.  Default paths derive "
+                         "from --out (<out>.trace.json / <out>"
+                         ".metrics.jsonl); tracing is bit-parity-neutral")
+    ap.add_argument("--trace-jax", action="store_true",
+                    help="with --trace: also open jax.profiler trace "
+                         "annotations per span so device profiles line up")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
@@ -177,6 +187,10 @@ def main():
         print(f"sweep: --limit {args.limit} -> running {len(pending)} "
               "trial(s) this invocation", flush=True)
 
+    if args.trace is not None:
+        from repro import obs
+        obs.enable(jax_annotations=args.trace_jax)
+
     t0 = time.perf_counter()
     results = run_sweep(pending, store=store, engine=args.engine,
                         pack=args.pack, verbose=args.verbose)
@@ -187,6 +201,19 @@ def main():
               flush=True)
     print(f"sweep: ran {len(results)} trial(s) in {wall:.1f}s "
           f"({args.engine} engine); store={args.out}", flush=True)
+
+    if args.trace is not None:
+        from repro import obs
+        from repro.obs.export import (trace_paths_for, write_chrome_trace,
+                                      write_metrics_jsonl)
+        obs.disable()
+        trace_path, metrics_path = trace_paths_for(
+            args.out, None if args.trace == "auto" else args.trace)
+        write_chrome_trace(trace_path)
+        n_rows = write_metrics_jsonl(metrics_path)
+        print(f"sweep: trace -> {trace_path} ({len(obs.tracer.spans)} "
+              f"spans); metrics -> {metrics_path} ({n_rows} rows) — open "
+              "the trace at https://ui.perfetto.dev", flush=True)
 
     if args.table:
         print()

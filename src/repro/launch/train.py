@@ -67,6 +67,14 @@ def main():
                          "sharded clients-as-mesh-axis (multi-device; on "
                          "CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--trace", nargs="?", const="runs/train.trace.json",
+                    default=None, metavar="PATH",
+                    help="record a dual-clock trace of the run: Chrome "
+                         "trace-event JSON (open in Perfetto) plus a "
+                         "metrics JSONL next to it; bit-parity-neutral")
+    ap.add_argument("--trace-jax", action="store_true",
+                    help="with --trace: also open jax.profiler trace "
+                         "annotations per span")
     args = ap.parse_args()
 
     if args.mode == "mesh":
@@ -114,7 +122,20 @@ def main():
                  log_every=max(args.rounds // 20, 1),
                  selection=args.selection),
         tuner=tuner, fleet=fleet, runtime_config=rtcfg)
+    if args.trace is not None:
+        from repro import obs
+        obs.enable(jax_annotations=args.trace_jax)
     res = server.run()
+    if args.trace is not None:
+        from repro import obs
+        from repro.obs.export import (trace_paths_for, write_chrome_trace,
+                                      write_metrics_jsonl)
+        obs.disable()
+        trace_path, metrics_path = trace_paths_for("", args.trace)
+        write_chrome_trace(trace_path)
+        write_metrics_jsonl(metrics_path)
+        print(f"trace -> {trace_path}; metrics -> {metrics_path} — open "
+              "the trace at https://ui.perfetto.dev", flush=True)
     c = res.total_cost
     print(f"\ndone: rounds={res.rounds} acc={res.final_accuracy:.3f} "
           f"M={res.final_m} E={res.final_e:g} t_sim={res.sim_time:.4g}")

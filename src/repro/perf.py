@@ -1,58 +1,57 @@
-"""Lightweight wall-clock phase counters.
+"""Wall-clock phase counters — back-compat shim over ``repro.obs``.
 
-The sweep engines interleave three kinds of work per round/macro-step:
-client training (the packed cohort dispatches), evaluation (the stacked
-accuracy dispatches), and host-side orchestration (planning, rng streams,
-aggregation bookkeeping).  ``benchmarks/sweep_engine.py`` splits its BENCH
-timings into ``train_s`` / ``eval_s`` / ``other_s`` through these counters
-so a perf win in one phase (e.g. eval amortization) is visible instead of
-being averaged away in the total.
+Historically this module held three module-global dicts; the counters now
+live in the observability metrics registry
+(``repro.obs.metrics.registry``) so phase timings, span traces and sweep
+metrics share one store and one ``reset()``.  The public surface here is
+unchanged — ``timed``/``add``/``seconds``/``calls``/``snapshot``/``reset``
+keep working — because ``benchmarks/sweep_engine.py`` and the federated
+layers call it on every round.
 
-Counters accumulate host wall-clock around the timed block.  JAX dispatch
-is asynchronous, so a phase's device time is attributed to the phase that
-eventually blocks on its results — both training and evaluation blocks end
-in host conversions (``np.asarray`` / ``float``), which keeps the split
-honest at benchmark granularity.  Not thread-safe; the sweep engines are
-single-threaded.
+Semantics are as before: counters accumulate host wall-clock around the
+timed block.  JAX dispatch is asynchronous, so a phase's device time is
+attributed to the phase that eventually blocks on its results — both
+training and evaluation blocks end in host conversions (``np.asarray`` /
+``float``), which keeps the train/eval/other split honest at benchmark
+granularity.  Not thread-safe; the sweep engines are single-threaded.
+
+Note ``reset()`` clears the *whole* registry (phases and observability
+metrics), matching the benchmark's expectation that a reset starts a
+clean measurement window.
 """
 
 from __future__ import annotations
 
-import time
-from contextlib import contextmanager
 from typing import Dict
 
-_seconds: Dict[str, float] = {}
-_calls: Dict[str, int] = {}
+from repro.obs.metrics import registry as _registry
 
 
 def add(name: str, seconds: float):
-    _seconds[name] = _seconds.get(name, 0.0) + seconds
-    _calls[name] = _calls.get(name, 0) + 1
+    _registry.phase_add(name, seconds)
 
 
-@contextmanager
 def timed(name: str):
-    """Accumulate the block's wall-clock under ``name``."""
-    t0 = time.perf_counter()
-    try:
-        yield
-    finally:
-        add(name, time.perf_counter() - t0)
+    """Accumulate the block's wall-clock under ``name`` (context manager)."""
+    return _registry.phase(name)
 
 
 def seconds(name: str) -> float:
-    return _seconds.get(name, 0.0)
+    return _registry.phase_seconds(name)
 
 
 def calls(name: str) -> int:
-    return _calls.get(name, 0)
+    return _registry.phase_call_count(name)
 
 
 def snapshot() -> Dict[str, float]:
-    return dict(_seconds)
+    return _registry.phase_snapshot()
+
+
+def calls_snapshot() -> Dict[str, int]:
+    """Per-phase call counts — exported alongside seconds in BENCH json."""
+    return _registry.phase_calls_snapshot()
 
 
 def reset():
-    _seconds.clear()
-    _calls.clear()
+    _registry.reset()

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data.loader import client_batches
 from repro.federated.aggregation import ClientUpdate
 from repro.models.registry import Model
@@ -161,6 +162,29 @@ def bucket_by_steps(n_steps: Sequence[int]):
     return buckets
 
 
+def note_pack_metrics(t_pad: int, m_pad: int, n_lanes: int,
+                      real_steps: int):
+    """Pack-shape metrics for one bucket dispatch: lanes/steps actually
+    used vs the padded compiled shape.  ``padding_waste`` is the fraction
+    of the (m_pad, t_pad) step grid spent on padding — the price of
+    bounding the compiled shape set, and the series the bucketing and
+    coalescing heuristics should be judged against.  Shared by every
+    cohort runner (this module's standalone path and the sweep runner's
+    batched/sharded/event packs); callers gate on ``obs.enabled()``."""
+    padded_steps = m_pad * t_pad
+    obs.registry.inc("pack_dispatches")
+    obs.registry.inc("pack_lanes_real", n_lanes)
+    obs.registry.inc("pack_lanes_padded", m_pad)
+    obs.registry.inc("pack_steps_real", real_steps)
+    obs.registry.inc("pack_steps_padded", padded_steps)
+    obs.registry.sample("pack_width", n_lanes, t_pad=t_pad, m_pad=m_pad)
+    obs.registry.sample(
+        "padding_waste",
+        1.0 - real_steps / padded_steps if padded_steps else 0.0,
+        t_pad=t_pad)
+    obs.registry.observe("pack_width_lanes", n_lanes)
+
+
 def batched_local_train(model: Model, global_params,
                         data: Sequence[Tuple[np.ndarray, np.ndarray]], *,
                         passes: float, batch_size: int, optimizer: Optimizer,
@@ -187,6 +211,9 @@ def batched_local_train(model: Model, global_params,
         xs, ys, masks, active = _stack_streams(
             [streams[i] for i in idx], batch_size, t_pad)
         m = len(idx)
+        if obs.enabled():
+            note_pack_metrics(t_pad, m, m,
+                              sum(n_steps[i] for i in idx))
         global_b = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (m,) + p.shape), global_params)
         opt_b = jax.vmap(optimizer.init)(global_b)

@@ -50,6 +50,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.tuner import HyperParams
 from repro.federated.aggregation import (FedBuffAggregator,
                                          apply_async_update)
@@ -190,6 +191,10 @@ class EventDrivenRuntime:
         self.sys_rng = np.random.default_rng(self.rt.system_seed)
         self.clock = VirtualClock()
         self.queue = EventQueue()
+        # observability attribution: spans from this runtime carry this
+        # label as their trial/track name.  The sweep runner overrides it
+        # with the trial's spec key; standalone runs trace as "run".
+        self.trace_label: str = "run"
         cm = server.cost_model
         self._c1 = cm.train_flops_per_example
         self._uf = upload_factor(server.config.compression)
@@ -261,6 +266,7 @@ class EventDrivenRuntime:
     # ------------------------------------------------------------------
     # sync: deadline rounds with straggler cutoff
     # ------------------------------------------------------------------
+    @obs.traced("plan_sync_round", phase="plan")
     def plan_sync_round(self, hp: HyperParams) -> SyncRoundPlan:
         """Decide one sync round's participation: selection (+ availability
         retries), per-client timing, dropout draws, and the deadline cut.
@@ -322,10 +328,16 @@ class EventDrivenRuntime:
         else:
             round_time = deadline if np.isfinite(deadline) else (
                 max(total) if total else 0.0)
+        if obs.enabled():
+            obs.registry.inc("sync_dispatched", len(active))
+            obs.registry.inc("sync_dropouts", len(active) - sum(survived))
+            obs.registry.inc("sync_stragglers_cut",
+                             sum(survived) - len(included))
         return SyncRoundPlan(active=active, sizes=sizes, comp=comp,
                              trans=trans, included=included,
                              round_time=round_time)
 
+    @obs.traced("account_sync_round", phase="account")
     def account_sync_round(self, plan: SyncRoundPlan,
                            hp: HyperParams):
         """Charge one planned sync round to the cost model: critical-path
@@ -349,6 +361,7 @@ class EventDrivenRuntime:
 
         for r in range(cfg.max_rounds):
             t0 = time.perf_counter()
+            v0 = self.clock.now
             plan = self.plan_sync_round(hp)
             self.clock.advance_to(self.clock.now + plan.round_time)
             included, active = plan.included, plan.active
@@ -371,7 +384,14 @@ class EventDrivenRuntime:
 
             if eval_due(r, cfg.eval_every, cfg.max_rounds):
                 accuracy = srv._evaluate(params)
-            wall = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            wall = t1 - t0
+            if obs.enabled():
+                obs.record("round", phase="round", trial=self.trace_label,
+                           round_idx=r, wall=(t0, t1),
+                           virtual=(v0, self.clock.now),
+                           n_included=len(included), n_active=len(active))
+                obs.counter("t_sim", self.clock.now)
             history.append(RoundRecord(r, hp.m, hp.e, accuracy, round_cost,
                                        wall, sim_time=self.clock.now,
                                        n_updates=len(included)))
@@ -457,6 +477,8 @@ class EventDrivenRuntime:
                                      n, comp, trans)
         st.dispatch_log.append((float(now), int(cid), st.version))
         kind = DROPOUT if self._drops(cid) else ARRIVAL
+        if obs.enabled():
+            obs.registry.inc("event_dispatched")
         queue.push(now + comp + trans, kind, client_id=cid)
 
     def fill_event_concurrency(self, st: EventLoopState, now: float,
@@ -488,6 +510,7 @@ class EventDrivenRuntime:
             if cohort:
                 self.dispatch_event(st, cohort[0], now, queue)
 
+    @obs.traced("plan_event", phase="plan")
     def plan_event(self, st: EventLoopState, ev) -> Optional[_InFlight]:
         """Process one popped event's host-side half: retire its in-flight
         record and charge the traffic/compute loads (download always
@@ -496,6 +519,14 @@ class EventDrivenRuntime:
         must now train, or None for a dropout (caller refills concurrency
         and moves on).  The caller advances the clock to ``ev.time`` first."""
         fl = st.inflight.pop(ev.client_id)
+        if obs.enabled():
+            obs.record("inflight", phase="inflight", trial=self.trace_label,
+                       virtual=(ev.time - fl.comp_time - fl.trans_time,
+                                ev.time),
+                       cid=fl.client_id,
+                       kind="dropout" if ev.kind == DROPOUT else "arrival")
+            if ev.kind == DROPOUT:
+                obs.registry.inc("event_dropouts")
         st.pend_comp_load += self._c1 * fl.e * fl.n_examples
         st.pend_trans_load += self._down
         if ev.kind == DROPOUT:
@@ -505,6 +536,7 @@ class EventDrivenRuntime:
         st.pend_trans.append(fl.trans_time)
         return fl
 
+    @obs.traced("apply_event", phase="apply")
     def apply_event(self, st: EventLoopState, fl: _InFlight,
                     client_params) -> Tuple[bool, int]:
         """Fold one trained arrival into the global model: FedAsync
@@ -516,6 +548,8 @@ class EventDrivenRuntime:
         rt = self.rt
         staleness = st.version - fl.version
         st.staleness_log.append(int(staleness))
+        if obs.enabled():
+            obs.registry.observe("staleness", staleness)
         if rt.mode == "async":
             st.params = apply_async_update(
                 st.params, client_params, mix=rt.async_mix,
@@ -530,6 +564,7 @@ class EventDrivenRuntime:
             return True, staleness
         return False, staleness
 
+    @obs.traced("account_event_round", phase="account")
     def account_event_round(self, st: EventLoopState):
         """Charge one aggregation window to the cost model: the virtual
         clock advance since the last aggregation, split by the contributing
@@ -546,6 +581,7 @@ class EventDrivenRuntime:
         st.last_agg_clock = self.clock.now
         return round_cost
 
+    @obs.traced("finish_event_round", phase="finish")
     def finish_event_round(self, st: EventLoopState, staleness: int,
                            wall: float, accuracy: Optional[float] = None):
         """Complete one aggregation: bump the model version, account the
@@ -561,6 +597,12 @@ class EventDrivenRuntime:
         srv, cfg, rt = self.srv, self.srv.config, self.rt
         st.version += 1
         r = len(st.history)
+        if obs.enabled():
+            obs.record("agg_window", phase="round", trial=self.trace_label,
+                       round_idx=r,
+                       virtual=(st.last_agg_clock, self.clock.now),
+                       staleness=int(staleness))
+            obs.counter("t_sim", self.clock.now)
         round_cost = self.account_event_round(st)
         if accuracy is not None:
             st.accuracy = accuracy

@@ -1,0 +1,403 @@
+"""Observability subsystem: zero-cost-when-disabled, bit-parity-neutral
+when enabled (sync + async sweeps), a schema-valid Perfetto trace with one
+track per trial lane on both clocks, the perf shim's back-compat surface,
+and the trace_report CLI round-trip."""
+
+import importlib.util
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs, perf
+from repro.experiments.grid import TrialSpec
+from repro.experiments.runner import run_vectorized
+from repro.obs.export import (VIRTUAL_PID, WALL_PID, chrome_trace,
+                              load_schema, read_metrics_jsonl,
+                              trace_paths_for, validate_chrome_trace,
+                              write_chrome_trace, write_metrics_jsonl)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_SPAN, Tracer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with tracing off and empty buffers, so
+    span/metric state cannot leak across tests (or into other files)."""
+    obs.disable()
+    obs.tracer.clear()
+    obs.registry.reset()
+    yield
+    obs.disable()
+    obs.tracer.clear()
+    obs.registry.reset()
+
+
+def tiny_spec(**kw):
+    base = dict(dataset="emnist", aggregator="fedavg", seed=0,
+                tuner="fedtune", m0=3, e0=1.0, rounds=3,
+                target_accuracy=0.99, batch_size=5, eval_points=128)
+    base.update(kw)
+    return TrialSpec(**base)
+
+
+def assert_bitexact(plain, traced):
+    for p, t in zip(plain, traced):
+        assert p.history_acc == t.history_acc
+        assert p.history_m == t.history_m
+        assert p.history_e == t.history_e
+        assert p.final_accuracy == t.final_accuracy
+        assert (p.final_m, p.final_e) == (t.final_m, t.final_e)
+        np.testing.assert_allclose(p.cost, t.cost, rtol=0, atol=0)
+        assert p.reached == t.reached and p.rounds == t.rounds
+        assert p.dispatch_log == t.dispatch_log
+        assert p.staleness_log == t.staleness_log
+
+
+# ---------------------------------------------------------------------------
+# registry + perf shim
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms_series():
+    reg = MetricsRegistry()
+    reg.inc("a")
+    reg.inc("a", 2.5)
+    reg.gauge("g", 7)
+    for v in range(10):
+        reg.observe("h", v)
+    reg.sample("s", 4, step=0, engine="sync")
+    assert reg.counter_value("a") == 3.5
+    assert reg.gauges()["g"] == 7.0
+    h = reg.histogram_summary("h")
+    assert h["count"] == 10 and h["min"] == 0 and h["max"] == 9
+    assert h["mean"] == pytest.approx(4.5)
+    assert reg.series("s") == [{"name": "s", "value": 4.0, "step": 0,
+                               "engine": "sync"}]
+    snap = reg.snapshot()
+    assert snap["counters"]["a"] == 3.5 and snap["n_series"] == 1
+    reg.reset()
+    assert reg.counter_value("a") == 0.0 and reg.series() == []
+
+
+def test_perf_shim_back_compat():
+    """The pre-obs perf surface must keep working unchanged — the
+    benchmark suite and the federated layers call it every round."""
+    perf.reset()
+    with perf.timed("train"):
+        time.sleep(0.002)
+    perf.add("train", 1.0)
+    perf.add("eval", 0.25)
+    assert perf.seconds("train") > 1.0
+    assert perf.calls("train") == 2
+    assert perf.calls("missing") == 0 and perf.seconds("missing") == 0.0
+    snap = perf.snapshot()
+    assert set(snap) == {"train", "eval"} and snap["eval"] == 0.25
+    assert perf.calls_snapshot() == {"train": 2, "eval": 1}
+    perf.reset()
+    assert perf.snapshot() == {}
+
+
+def test_perf_and_obs_share_one_registry():
+    with perf.timed("train"):
+        pass
+    assert obs.registry.phase_call_count("train") == 1
+    perf.reset()     # resets the WHOLE registry, metrics included
+    obs.registry.inc("x")
+    perf.reset()
+    assert obs.registry.counter_value("x") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# zero-cost-when-disabled
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_hands_out_the_shared_null_span():
+    assert not obs.enabled()
+    s = obs.span("anything", phase="train", trial="t", n=3)
+    assert s is NULL_SPAN
+    with s as inner:
+        inner.set(more=1)      # attribute sink, no storage
+    obs.record("x", virtual=(0, 1))
+    obs.counter("c", 1)
+    assert obs.tracer.spans == [] and obs.tracer.counters == []
+
+
+def test_disabled_fast_path_is_cheap():
+    """A sweep makes a handful of span calls per round; 100k disabled
+    calls finishing in well under a second means the per-round cost is
+    unmeasurable (generous bound to stay robust on loaded CI workers)."""
+    t0 = time.perf_counter()
+    for _ in range(100_000):
+        with obs.span("s"):
+            pass
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_enabled_spans_capture_dual_clocks():
+    class FakeClock:
+        now = 2.0
+    obs.enable()
+    clk = FakeClock()
+    with obs.span("round", phase="round", trial="t0", round_idx=3,
+                  clock=clk, n=5):
+        clk.now = 6.0
+    obs.disable()
+    (sp,) = obs.tracer.spans
+    assert sp.name == "round" and sp.trial == "t0" and sp.round_idx == 3
+    assert sp.virtual_t0 == 2.0 and sp.virtual_t1 == 6.0
+    assert sp.virtual_dur == 4.0 and sp.wall_dur >= 0.0
+    assert sp.attrs == {"n": 5}
+
+
+def test_enable_resets_previous_buffers():
+    obs.enable()
+    obs.record("a", virtual=(0, 1))
+    obs.enable()               # default reset=True: fresh capture window
+    assert obs.tracer.spans == []
+    obs.enable(reset=False)
+    obs.record("b", virtual=(0, 1))
+    assert len(obs.tracer.spans) == 1
+
+
+# ---------------------------------------------------------------------------
+# bit-parity: traced == untraced, pinned for sync and async sweeps
+# ---------------------------------------------------------------------------
+
+def test_traced_sync_sweep_is_bit_exact():
+    specs = [tiny_spec(seed=s, rounds=2) for s in range(4)]
+    plain = run_vectorized(specs)
+    obs.enable()
+    traced = run_vectorized(specs)
+    obs.disable()
+    assert_bitexact(plain, traced)
+    assert len(obs.tracer.spans) > 0     # tracing actually happened
+    assert obs.registry.counter_value("pack_dispatches") > 0
+
+
+def test_traced_async_sweep_is_bit_exact_and_fills_staleness():
+    specs = [tiny_spec(seed=s, mode="async", m0=2, rounds=3)
+             for s in range(4)]
+    plain = run_vectorized(specs)
+    obs.enable()
+    traced = run_vectorized(specs)
+    obs.disable()
+    assert_bitexact(plain, traced)
+    stale = obs.registry.histogram_summary("staleness")
+    assert stale["count"] == sum(len(t.staleness_log) for t in traced)
+    assert obs.registry.counter_value("event_dispatched") > 0
+    assert obs.registry.series("lanes_live")
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export + checked-in schema
+# ---------------------------------------------------------------------------
+
+def _traced_sweep_trace(tmp_path):
+    specs = [tiny_spec(seed=s, rounds=2) for s in range(2)]
+    obs.enable()
+    run_vectorized(specs)
+    obs.disable()
+    path = str(tmp_path / "sweep.trace.json")
+    trace = write_chrome_trace(path)
+    return specs, path, trace
+
+
+def test_exported_trace_validates_and_has_per_lane_tracks(tmp_path):
+    specs, path, trace = _traced_sweep_trace(tmp_path)
+    assert validate_chrome_trace(trace) == []
+    with open(path) as f:
+        assert validate_chrome_trace(json.load(f)) == []
+    # one named track per trial lane, on BOTH clock processes
+    names = {(ev["pid"], ev["args"]["name"])
+             for ev in trace["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    for spec in specs:
+        for pid in (WALL_PID, VIRTUAL_PID):
+            assert any(p == pid and spec.key() in n for p, n in names), \
+                (pid, spec.key())
+    # the virtual-clock process carries per-round spans for each lane
+    virt = [ev for ev in trace["traceEvents"]
+            if ev["ph"] == "X" and ev["pid"] == VIRTUAL_PID]
+    assert {ev["name"] for ev in virt} >= {"round"}
+    # and the counter track samples simulated time on the wall process
+    assert any(ev["ph"] == "C" and ev["name"] == "t_sim"
+               for ev in trace["traceEvents"])
+
+
+def test_schema_validator_catches_breakage():
+    schema = load_schema()
+    ok = {"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 0, "name": "a", "ts": 0.0,
+         "dur": 1.0, "args": {}},
+        {"ph": "X", "pid": 1, "tid": 0, "name": "b", "ts": 2.0,
+         "dur": 1.0, "args": {}},
+    ]}
+    assert validate_chrome_trace(ok, schema) == []
+    assert validate_chrome_trace({}, schema)                  # no traceEvents
+    missing_pid = {"traceEvents": [
+        {"ph": "X", "tid": 0, "name": "a", "ts": 0.0, "dur": 1.0,
+         "args": {}}]}
+    assert any("missing" in e for e in
+               validate_chrome_trace(missing_pid, schema))
+    unknown_ph = {"traceEvents": [
+        {"ph": "Z", "pid": 1, "tid": 0, "name": "a", "args": {}}]}
+    assert any("ph" in e for e in validate_chrome_trace(unknown_ph, schema))
+    backwards = {"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 0, "name": "a", "ts": 5.0,
+         "dur": 1.0, "args": {}},
+        {"ph": "X", "pid": 1, "tid": 0, "name": "b", "ts": 1.0,
+         "dur": 1.0, "args": {}}]}
+    assert any("track" in e for e in
+               validate_chrome_trace(backwards, schema))
+    # monotonicity is PER track: interleaved tracks may each restart
+    two_tracks = {"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 0, "name": "a", "ts": 5.0,
+         "dur": 1.0, "args": {}},
+        {"ph": "X", "pid": 1, "tid": 1, "name": "b", "ts": 1.0,
+         "dur": 1.0, "args": {}}]}
+    assert validate_chrome_trace(two_tracks, schema) == []
+    negative = {"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 0, "name": "a", "ts": 0.0,
+         "dur": -1.0, "args": {}}]}
+    assert any("negative" in e for e in
+               validate_chrome_trace(negative, schema))
+
+
+def test_every_track_ts_is_monotonic_in_export(tmp_path):
+    _specs, _path, trace = _traced_sweep_trace(tmp_path)
+    last = {}
+    for ev in trace["traceEvents"]:
+        if ev["ph"] == "M":
+            continue
+        track = (ev["pid"], ev["tid"])
+        assert ev["ts"] >= last.get(track, -1.0)
+        last[track] = ev["ts"]
+
+
+# ---------------------------------------------------------------------------
+# metrics JSONL + path derivation
+# ---------------------------------------------------------------------------
+
+def test_metrics_jsonl_round_trip(tmp_path):
+    obs.enable()
+    obs.registry.sample("lanes_live", 4, step=0, engine="sync")
+    obs.registry.inc("pack_steps_real", 30)
+    obs.registry.inc("pack_steps_padded", 40)
+    obs.registry.observe("staleness", 2)
+    with perf.timed("train"):
+        pass
+    obs.disable()
+    path = str(tmp_path / "m.jsonl")
+    n = write_metrics_jsonl(path)
+    rows = read_metrics_jsonl(path)
+    assert len(rows) == n
+    by_kind = {}
+    for r in rows:
+        by_kind.setdefault(r["kind"], []).append(r)
+    assert {"kind": "sample", "name": "lanes_live", "value": 4.0,
+            "step": 0, "engine": "sync"} in by_kind["sample"]
+    counters = {r["name"]: r["value"] for r in by_kind["counter"]}
+    assert counters["pack_steps_real"] == 30.0
+    (h,) = by_kind["histogram"]
+    assert h["name"] == "staleness" and h["count"] == 1
+    (p,) = by_kind["phase"]
+    assert p["name"] == "train" and p["calls"] == 1
+
+
+def test_trace_paths_derive_from_the_store():
+    assert trace_paths_for("runs/sweep.jsonl") == (
+        "runs/sweep.trace.json", "runs/sweep.metrics.jsonl")
+    assert trace_paths_for("runs/sweep.jsonl", "x/t.trace.json") == (
+        "x/t.trace.json", "x/t.metrics.jsonl")
+    assert trace_paths_for("out", "t.json") == ("t.json", "t.metrics.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# trace_report CLI round-trip
+# ---------------------------------------------------------------------------
+
+def _load_trace_report():
+    path = os.path.join(REPO, "tools", "trace_report.py")
+    spec = importlib.util.spec_from_file_location("trace_report", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_trace_report_round_trips_a_traced_sweep(tmp_path, capsys):
+    specs = [tiny_spec(seed=s, rounds=2) for s in range(2)]
+    obs.enable()
+    run_vectorized(specs)
+    obs.disable()
+    trace_path, metrics_path = trace_paths_for(str(tmp_path / "s.jsonl"))
+    write_chrome_trace(trace_path)
+    write_metrics_jsonl(metrics_path)
+
+    tr = _load_trace_report()
+    rep = tr.report(trace_path, metrics_path)
+    assert rep["valid"] and not rep["errors"]
+    assert len(rep["lanes"]) == len(specs)
+    for lane in rep["lanes"]:
+        assert 0.0 < lane["occupancy"] <= 1.0
+        assert lane["t_sim_s"] > 0
+    assert rep["phases"]["train"]["calls"] > 0
+    met = rep["metrics"]
+    assert met["mean_lanes_live"] == pytest.approx(2.0)
+    assert 0.0 <= met["padding_waste"] < 1.0
+    assert met["phase_calls"]["train"] > 0     # perf.calls surfaced
+
+    assert tr.main([trace_path, "--metrics", metrics_path]) == 0
+    out = capsys.readouterr().out
+    assert "wall-clock phases" in out and "virtual-clock lanes" in out
+    assert tr.main([trace_path, "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["valid"]
+
+
+def test_trace_report_rejects_an_invalid_trace(tmp_path, capsys):
+    bad = str(tmp_path / "bad.trace.json")
+    with open(bad, "w") as f:
+        json.dump({"traceEvents": [
+            {"ph": "X", "tid": 0, "name": "a", "ts": 0.0, "dur": 1.0,
+             "args": {}}]}, f)
+    tr = _load_trace_report()
+    assert tr.main([bad]) == 2
+    assert "SCHEMA VIOLATION" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# engine-level span taxonomy
+# ---------------------------------------------------------------------------
+
+def test_sync_sweep_emits_the_macro_and_round_span_taxonomy():
+    # one seed, two preferences: the trials share a dataset (and test
+    # set), so their per-aggregation evals stack into one dispatch
+    specs = [tiny_spec(rounds=2, preference=p)
+             for p in ((1.0, 0.0, 0.0, 0.0), (0.25, 0.25, 0.25, 0.25))]
+    obs.enable()
+    run_vectorized(specs)
+    obs.disable()
+    names = {sp.name for sp in obs.tracer.spans}
+    assert {"PLAN", "PACK", "TRAIN", "APPLY", "EVAL",
+            "plan_sync_round", "round", "eval_stacked"} <= names
+    rounds = [sp for sp in obs.tracer.spans if sp.name == "round"]
+    assert all(sp.virtual_dur is not None and sp.virtual_dur > 0
+               for sp in rounds)
+    assert {sp.trial for sp in rounds} == {s.key() for s in specs}
+
+
+def test_event_sweep_emits_collect_pack_apply_and_inflight_spans():
+    specs = [tiny_spec(seed=s, mode="async", m0=2, rounds=2)
+             for s in range(2)]
+    obs.enable()
+    run_vectorized(specs)
+    obs.disable()
+    names = {sp.name for sp in obs.tracer.spans}
+    assert {"COLLECT", "PACK", "APPLY", "EVAL", "plan_event", "apply_event",
+            "finish_event_round", "inflight", "agg_window"} <= names
+    infl = [sp for sp in obs.tracer.spans if sp.name == "inflight"]
+    # in-flight windows are virtual-only: comp+trans long, zero wall width
+    assert all(sp.virtual_dur > 0 and sp.wall_dur == 0.0 for sp in infl)
