@@ -1,0 +1,28 @@
+"""repro.analysis — parity-and-determinism static analysis.
+
+The parity tests pin the bit-exactness contract *empirically*: they
+catch a violation only after it's written and only on the inputs they
+run.  This package enforces the same house rules *statically* — an AST
+pass with a jit-scope model (decorators + a lightweight intra-repo call
+graph decide what runs under ``jax.jit``/``vmap``/``shard_map``/
+``scan``), seven repo-specific rules (REPRO001–REPRO007), justified
+``# noqa`` suppressions, deterministic text/JSON reports and a baseline
+ratchet for CI.
+
+Entry points: ``python -m repro.analysis``, the ``repro-lint`` console
+script, or ``tools/lint.py``.  Rule catalog: docs/ANALYSIS.md.
+
+Deliberately dependency-free (stdlib ``ast`` only — no jax import), so
+the lint job runs anywhere Python does.
+"""
+
+from .baseline import DEFAULT_BASELINE, load_baseline, new_findings
+from .core import (AnalysisResult, FileContext, Finding, Rule, Suppression,
+                   all_rules, analyze_paths, register)
+from .report import to_json, to_text
+
+__all__ = [
+    "AnalysisResult", "DEFAULT_BASELINE", "FileContext", "Finding", "Rule",
+    "Suppression", "all_rules", "analyze_paths", "load_baseline",
+    "new_findings", "register", "to_json", "to_text",
+]

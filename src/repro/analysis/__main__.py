@@ -1,0 +1,5 @@
+"""``python -m repro.analysis`` — see cli.py for flags and exit codes."""
+
+from .cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,16 @@
+"""Rule modules — importing this package registers every rule.
+
+Each module owns one rule id; add a module here (and to the import list)
+to ship a new rule.  See docs/ANALYSIS.md for the catalog and the
+how-to-add-a-rule walkthrough.
+"""
+
+from . import (  # noqa: F401 (imported for registration side effect)
+    repro001_eager_param_math,
+    repro002_unsorted_iteration,
+    repro003_tracer_unsafe,
+    repro004_wall_clock,
+    repro005_obs_coverage,
+    repro006_jit_cache,
+    repro007_broad_except,
+)

@@ -1,0 +1,157 @@
+"""REPRO001 — eager ``jnp`` arithmetic on params/deltas outside jit.
+
+The PR 5 incident class: ``_roundtrip_leaf`` ran ``g * scale`` eagerly
+on one engine and under ``jax.jit`` on the other; XLA fuses a
+multiply-add into one FMA under jit but eager dispatch executes two
+rounded ops, so the two paths produced different bits and broke the
+sweep-vs-independent parity pin.  Any arithmetic on model parameters or
+update deltas that runs eagerly is one refactor away from that bug, so
+in the hot packages (``federated/``, ``runtime/``, ``experiments/``)
+every eager param-flavored BinOp — and every arithmetic lambda handed to
+``jax.tree.map`` alongside param-flavored arguments — must either move
+under jit or carry a justification for why bit-parity tolerates it.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import FileContext, Rule, register
+from ..scopes import FuncNode, dotted_parts, final_name
+
+SCOPED_DIRS = {"federated", "runtime", "experiments"}
+
+# snake-case segments that mark a value as model-params/updates flavored
+PARAMY = {"params", "param", "delta", "deltas", "theta", "updates",
+          "momentum"}
+# ...unless a sibling segment says it's a count/size/name, not an array
+NOT_ARRAY = {"n", "num", "count", "size", "len", "bytes", "idx", "ord",
+             "name", "names", "key", "keys", "shape", "spec", "specs",
+             "cfg", "config", "t", "time", "dtype"}
+
+ARITH_OPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.MatMult, ast.Pow)
+
+# operands that make a BinOp host-container or host-scalar math, not
+# array math: list/tuple displays (concat/repeat of pytree lists) and
+# the values they build from comprehensions
+DISPLAY = (ast.List, ast.Tuple, ast.Set, ast.Dict, ast.ListComp,
+           ast.SetComp, ast.DictComp, ast.GeneratorExp)
+HOST_CASTS = {"float", "int", "len"}
+
+
+def _segments(name: str):
+    return set(name.lower().split("_")) - {""}
+
+
+def _paramy_name(node: ast.AST):
+    """The dotted name if any component looks param-like, else None.
+    Subtrees under ``float()``/``int()``/``len()`` are host scalars by
+    construction and don't count."""
+    skip = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and final_name(sub.func) in HOST_CASTS:
+            for inner in ast.walk(sub):
+                skip.add(id(inner))
+            skip.discard(id(sub))  # keep walking siblings
+    for sub in ast.walk(node):
+        if id(sub) in skip:
+            continue
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            parts = dotted_parts(sub)
+            segs = set()
+            for p in parts:
+                segs |= _segments(p)
+            if segs & PARAMY and not segs & NOT_ARRAY:
+                return ".".join(parts) if parts else None
+    return None
+
+
+def _host_container_math(node: ast.BinOp) -> bool:
+    """`[x] * n` / `list + list` / `(m,) + p.shape` — not array math."""
+    for side in (node.left, node.right):
+        if isinstance(side, DISPLAY):
+            return True
+        if isinstance(side, ast.Attribute) and side.attr == "shape":
+            return True
+    return False
+
+
+def _is_tree_map(func: ast.AST) -> bool:
+    name = final_name(func)
+    if name == "tree_map":
+        return True
+    return name == "map" and "tree" in dotted_parts(func)
+
+
+@register
+class EagerParamMath(Rule):
+    id = "REPRO001"
+    name = "eager-param-math"
+
+    def check_file(self, ctx: FileContext):
+        parts = set(ctx.rel.split("/"))
+        if not parts & SCOPED_DIRS:
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ARITH_OPS):
+                self._check_binop(ctx, node)
+            elif isinstance(node, ast.AugAssign) \
+                    and isinstance(node.op, ARITH_OPS):
+                self._check_augassign(ctx, node)
+            elif isinstance(node, ast.Call) and _is_tree_map(node.func):
+                self._check_tree_map(ctx, node)
+
+    def _eager(self, ctx: FileContext, node: ast.AST) -> bool:
+        if ctx.in_traced_scope(node):
+            return False
+        # arithmetic inside a lambda is judged at the tree.map call site
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, ast.Lambda):
+                return False
+            if isinstance(anc, FuncNode):
+                break
+        return True
+
+    def _check_binop(self, ctx: FileContext, node: ast.BinOp):
+        if not self._eager(ctx, node) or _host_container_math(node):
+            return
+        hint = _paramy_name(node.left) or _paramy_name(node.right)
+        if hint:
+            ctx.add(node, self.id,
+                    f"eager arithmetic on param-like value '{hint}' outside "
+                    "a jitted scope — eager-vs-jit FMA contraction breaks "
+                    "bit-parity (jit the op or justify-suppress)")
+
+    def _check_augassign(self, ctx: FileContext, node: ast.AugAssign):
+        if not self._eager(ctx, node):
+            return
+        hint = _paramy_name(node.target) or _paramy_name(node.value)
+        if hint:
+            ctx.add(node, self.id,
+                    f"eager augmented arithmetic on param-like value "
+                    f"'{hint}' outside a jitted scope — eager-vs-jit FMA "
+                    "contraction breaks bit-parity")
+
+    def _check_tree_map(self, ctx: FileContext, node: ast.Call):
+        if ctx.in_traced_scope(node):
+            return
+        lam = next((a for a in node.args if isinstance(a, ast.Lambda)), None)
+        if lam is None:
+            return
+        has_arith = any(
+            isinstance(sub, ast.BinOp) and isinstance(sub.op, ARITH_OPS)
+            and not _host_container_math(sub)
+            for sub in ast.walk(lam.body))
+        if not has_arith:
+            return
+        hint = None
+        for arg in node.args:
+            if arg is not lam:
+                hint = _paramy_name(arg)
+                if hint:
+                    break
+        if hint:
+            ctx.add(node, self.id,
+                    f"eager tree.map arithmetic over param-like value "
+                    f"'{hint}' outside a jitted scope — eager-vs-jit FMA "
+                    "contraction breaks bit-parity")

@@ -1,0 +1,128 @@
+"""REPRO003 — tracer-unsafe operations inside jitted scopes.
+
+Inside a traced function the arguments are tracers: Python ``if``/
+``while`` on them raises ``TracerBoolConversionError`` at best and
+silently bakes in one branch at worst; ``float()``/``int()``/``.item()``
+force a host sync that kills async dispatch (and fails outright under
+jit); ``np.*`` on a tracer materializes it.  The rule flags those
+patterns when (and only when) they touch a *parameter* of the innermost
+traced function — closure variables like ``prox_mu`` are Python-level
+constants at trace time and stay exempt, as do shape/dtype attribute
+reads and ``is None`` dispatch.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import FileContext, Rule, register
+from ..scopes import FuncNode, dotted_parts, final_name
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+HOST_CASTS = {"float", "int", "bool"}
+# parameters that carry static Python config, not arrays: model/layer
+# configs, meshes and optimizers are hashable trace-time constants (jit
+# marks them static or closes over them), so branching on them is fine
+STATIC_PARAMS = {"cfg", "config", "spec", "specs", "mesh", "model",
+                 "optimizer", "hp", "opts", "rules", "dtype", "cls"}
+
+
+def _param_names(func) -> set:
+    a = func.args
+    names = {p.arg for p in a.args + a.posonlyargs + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    names.discard("self")
+    return names - STATIC_PARAMS
+
+
+def _mentions_param(expr: ast.AST, params: set):
+    """Name of a mentioned traced parameter, skipping static attribute
+    chains like ``x.shape[0]`` and ``isinstance``/``is None`` guards."""
+    # bare truthiness of a subscript (`if params_st["stacked"]:`) tests
+    # pytree *structure* — which container slots exist — not leaf values
+    if isinstance(expr, ast.Subscript):
+        return None
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return None  # `x is None` dispatch is host-side and fine
+        if isinstance(node, ast.Call) \
+                and final_name(node.func) in {"isinstance", "len"}:
+            return None
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            continue
+        if isinstance(node, ast.Name) and node.id in params:
+            parent_attr = None
+            # x.shape is static even though `x` is a tracer: look one up
+            # via a cheap re-walk of the expression for `<name>.<static>`
+            for sub in ast.walk(expr):
+                if isinstance(sub, ast.Attribute) \
+                        and sub.attr in STATIC_ATTRS \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id == node.id:
+                    parent_attr = sub
+            if parent_attr is None:
+                return node.id
+    return None
+
+
+@register
+class TracerUnsafe(Rule):
+    id = "REPRO003"
+    name = "tracer-unsafe-op-in-jit"
+
+    def check_file(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            fn = ctx.enclosing_function(node)
+            if fn is None or not ctx.scopes.is_traced(fn):
+                continue
+            params = _param_names(fn)
+            if isinstance(node, (ast.If, ast.While)):
+                hit = _mentions_param(node.test, params)
+                if hit:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    ctx.add(node, self.id,
+                            f"Python `{kind}` on traced value '{hit}' "
+                            "inside a jitted scope — use jnp.where/"
+                            "lax.cond or hoist the branch out of jit")
+            elif isinstance(node, ast.IfExp):
+                hit = _mentions_param(node.test, params)
+                if hit:
+                    ctx.add(node, self.id,
+                            f"Python conditional expression on traced "
+                            f"value '{hit}' inside a jitted scope — use "
+                            "jnp.where or lax.cond")
+            elif isinstance(node, ast.Call):
+                self._check_call(ctx, node, params)
+
+    def _check_call(self, ctx: FileContext, node: ast.Call, params: set):
+        name = final_name(node.func)
+        if name in HOST_CASTS and node.args:
+            hit = _mentions_param(node.args[0], params)
+            if hit:
+                ctx.add(node, self.id,
+                        f"host cast `{name}()` of traced value '{hit}' "
+                        "inside a jitted scope — forces a sync and fails "
+                        "under jit")
+            return
+        if name == "item" and isinstance(node.func, ast.Attribute):
+            hit = _mentions_param(node.func.value, params)
+            if hit:
+                ctx.add(node, self.id,
+                        f"`.item()` on traced value '{hit}' inside a "
+                        "jitted scope — forces a sync and fails under jit")
+            return
+        parts = dotted_parts(node.func)
+        if parts and parts[0] in {"np", "numpy"} and parts[1:2] != ["random"]:
+            for arg in node.args:
+                hit = _mentions_param(arg, params)
+                if hit:
+                    ctx.add(node, self.id,
+                            f"numpy call `{'.'.join(parts)}` on traced "
+                            f"value '{hit}' inside a jitted scope — "
+                            "materializes the tracer; use jnp")
+                    return

@@ -1,0 +1,174 @@
+"""REPRO006 — jit-cache hazards: per-iteration construction and
+unhashable static arguments.
+
+``jax.jit`` caches compilations on the *callable object*: build a fresh
+jitted callable inside a per-round or per-event loop and every
+iteration retraces and recompiles, silently turning a microsecond
+dispatch into a multi-second stall.  The repo's sanctioned pattern is a
+factory guarded by an explicit cache (``_step_cache``,
+``_batched_step_cache``, ``EvalFnCache``) — the rule recognizes those
+by a cache-flavored name in the enclosing function/class (or an
+``lru_cache`` decorator) and stays quiet.  Separately, a call to a
+jitted callable that passes a list/dict/set literal at a
+``static_argnums``/``static_argnames`` position raises
+``ValueError: unhashable`` at runtime; the rule resolves same-file
+``name = jax.jit(f, static_...)`` bindings and checks call sites.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core import FileContext, Rule, register
+from ..scopes import FuncNode, dotted_parts, final_name
+
+UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+              ast.SetComp)
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = final_name(node.func)
+    if name == "jit":
+        return True
+    if name == "partial" and node.args:
+        return final_name(node.args[0]) == "jit"
+    return False
+
+
+def _jit_decorated(func) -> bool:
+    for dec in func.decorator_list:
+        if final_name(dec) == "jit":
+            return True
+        if isinstance(dec, ast.Call) and (
+                final_name(dec.func) == "jit" or (
+                    final_name(dec.func) == "partial" and dec.args
+                    and final_name(dec.args[0]) == "jit")):
+            return True
+    return False
+
+
+def _cache_marker(ctx: FileContext, node: ast.AST) -> bool:
+    """True when the construction site is visibly cache-guarded: a
+    'cache'-flavored name in the enclosing function, a Cache-named
+    enclosing class, or an lru_cache/cache decorator."""
+    fn = ctx.enclosing_function(node)
+    if fn is not None:
+        for dec in fn.decorator_list:
+            if final_name(dec) in {"lru_cache", "cache"} or (
+                    isinstance(dec, ast.Call)
+                    and final_name(dec.func) in {"lru_cache", "cache"}):
+                return True
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                if any("cache" in p.lower() for p in dotted_parts(sub)):
+                    return True
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, ast.ClassDef) and "cache" in anc.name.lower():
+            return True
+    return False
+
+
+def _static_spec(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg not in {"static_argnums", "static_argnames"}:
+            continue
+        values: List[ast.AST] = []
+        if isinstance(kw.value, (ast.Tuple, ast.List)):
+            values = list(kw.value.elts)
+        elif isinstance(kw.value, ast.Constant):
+            values = [kw.value]
+        for v in values:
+            if isinstance(v, ast.Constant):
+                if kw.arg == "static_argnums" and isinstance(v.value, int):
+                    nums.add(v.value)
+                elif kw.arg == "static_argnames" \
+                        and isinstance(v.value, str):
+                    names.add(v.value)
+    return nums, names
+
+
+@register
+class JitCacheHazards(Rule):
+    id = "REPRO006"
+    name = "jit-cache-hazard"
+
+    def check_file(self, ctx: FileContext):
+        # name -> (static_argnums, static_argnames) for same-file
+        # `f = jax.jit(g, static_...)` bindings with static args
+        static_bound: Dict[str, Tuple[Set[int], Set[str]]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and _is_jit_call(node):
+                self._check_construction(ctx, node)
+                self._record_binding(ctx, node, static_bound)
+            elif isinstance(node, FuncNode) and _jit_decorated(node):
+                self._check_decorated(ctx, node)
+        if static_bound:
+            self._check_static_call_sites(ctx, static_bound)
+
+    def _check_construction(self, ctx: FileContext, node: ast.Call):
+        # a decorator IS the def site — _check_decorated owns that case
+        parent = ctx.parent(node)
+        if isinstance(parent, FuncNode + (ast.ClassDef,)) \
+                and node in parent.decorator_list:
+            return
+        if ctx.enclosing_loop(node) is not None:
+            ctx.add(node, self.id,
+                    "jitted callable constructed inside a loop — every "
+                    "iteration retraces and recompiles; hoist it out or "
+                    "memoize the wrapper")
+        elif ctx.enclosing_function(node) is not None \
+                and not _cache_marker(ctx, node):
+            ctx.add(node, self.id,
+                    "jitted callable constructed per call with no visible "
+                    "cache — memoize it (see _step_cache/_batched_step_"
+                    "cache/EvalFnCache for the house pattern)")
+
+    def _check_decorated(self, ctx: FileContext, func):
+        if ctx.enclosing_loop(func) is not None:
+            ctx.add(func, self.id,
+                    f"@jit function `{func.name}` defined inside a loop — "
+                    "every iteration creates a fresh callable and "
+                    "retraces; hoist the definition")
+        elif ctx.enclosing_function(func) is not None \
+                and not _cache_marker(ctx, func):
+            ctx.add(func, self.id,
+                    f"@jit function `{func.name}` defined per call of its "
+                    "enclosing function with no visible cache — memoize "
+                    "the factory")
+
+    def _record_binding(self, ctx: FileContext, call: ast.Call,
+                        static_bound: Dict):
+        nums, names = _static_spec(call)
+        if not nums and not names:
+            return
+        parent = ctx.parent(call)
+        if isinstance(parent, ast.Assign):
+            for tgt in parent.targets:
+                if isinstance(tgt, ast.Name):
+                    static_bound[tgt.id] = (nums, names)
+
+    def _check_static_call_sites(self, ctx: FileContext,
+                                 static_bound: Dict):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = node.func.id if isinstance(node.func, ast.Name) else None
+            if name not in static_bound:
+                continue
+            nums, names = static_bound[name]
+            for i, arg in enumerate(node.args):
+                if i in nums and isinstance(arg, UNHASHABLE):
+                    ctx.add(node, self.id,
+                            f"unhashable literal at static_argnums "
+                            f"position {i} of jitted `{name}` — static "
+                            "args must be hashable (use a tuple or a "
+                            "frozen config)")
+            for kw in node.keywords:
+                if kw.arg in names and isinstance(kw.value, UNHASHABLE):
+                    ctx.add(node, self.id,
+                            f"unhashable literal for static_argnames "
+                            f"'{kw.arg}' of jitted `{name}` — static "
+                            "args must be hashable")

@@ -224,10 +224,10 @@ class TrialResult:
 def run_trial(spec: TrialSpec) -> TrialResult:
     """One trial, the single-process way: a full ``FLServer.run()``."""
     srv = build_server(spec)
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # noqa: REPRO004 -- TrialResult.wall is informational; parity compares params/history only
     res = srv.run()
     return TrialResult.from_flresult(spec, res,
-                                     time.perf_counter() - t0, "sequential")
+                                     time.perf_counter() - t0, "sequential")  # noqa: REPRO004 -- TrialResult.wall is informational
 
 
 # ---------------------------------------------------------------------------
@@ -479,7 +479,7 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
         if tr.cohort.n_steps[j] == 0:
             s = slot[id(tr)]
             zw = tr.cohort.sizes[j] / totals[s]
-            agg = agg.at[s].add(zw * _flatten(tr.params)[0])
+            agg = agg.at[s].add(zw * _flatten(tr.params)[0])  # noqa: REPRO001 -- mirrors the sequential engines' eager zero-step contribution op-for-op; jitting would change FMA contraction vs the pinned parity
     for tr in trials:
         tr.cohort.agg_params = _unflatten(agg[slot[id(tr)]], meta)
 
@@ -593,7 +593,7 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         live = [tr for tr in trials if not tr.done]
         if not live:
             break
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # noqa: REPRO004 -- per-macro-step wall share for TrialResult.wall; round accounting uses virtual clocks
         if obs.enabled():
             obs.registry.sample("lanes_live", len(live), step=n_rounds,
                                 engine="sync")
@@ -657,7 +657,7 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
                 [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
                   tr.params) for tr in due], mesh=mesh)
         acc_of = {id(tr): a for tr, a in zip(due, accs)}
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0  # noqa: REPRO004 -- wall shares are informational; parity compares params/history only
         if obs.enabled():
             obs.counter("t_sim", max(tr.eng.clock.now for tr in live))
         for tr in live:
@@ -849,7 +849,7 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
         live = [tr for tr in trials if not tr.done]
         if not live:
             break
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # noqa: REPRO004 -- per-macro-step wall share for TrialResult.wall; event order uses the merged virtual queue
         if obs.enabled():
             obs.registry.sample("lanes_live", len(live), step=n_steps_total,
                                 engine="events")
@@ -906,7 +906,7 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
         #    consumes no rng and each trial's clock is private, so hoisting
         #    the evals between apply and finish preserves the standalone
         #    loop's per-trial operation order exactly.
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0  # noqa: REPRO004 -- wall shares are informational; parity compares params/history only
         share = wall / max(len(lanes), 1)
         applied = []
         with obs.span("APPLY", phase="apply", n_lanes=len(lanes)):

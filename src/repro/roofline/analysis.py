@@ -122,6 +122,9 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh: str,
                      chip: Chip = TPU_V5E,
                      hlo_text: Optional[str] = None) -> RooflineReport:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        # older jaxlibs wrap the per-program cost dict in a singleton list
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()
@@ -133,7 +136,9 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh: str,
     try:
         peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes
                      + mem.output_size_in_bytes - mem.alias_size_in_bytes)
-    except Exception:
+    except (AttributeError, TypeError):
+        # older jaxlibs expose a partial MemoryAnalysis surface; peak
+        # memory is informational, so keep the report with peak=0
         pass
     rep = RooflineReport(
         arch=arch, shape=shape, mesh=mesh, n_devices=n_devices,

@@ -360,7 +360,7 @@ class EventDrivenRuntime:
         reached = False
 
         for r in range(cfg.max_rounds):
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # noqa: REPRO004 -- measures the RoundRecord.wall info field only; results use self.clock virtual time
             v0 = self.clock.now
             plan = self.plan_sync_round(hp)
             self.clock.advance_to(self.clock.now + plan.round_time)
@@ -384,7 +384,7 @@ class EventDrivenRuntime:
 
             if eval_due(r, cfg.eval_every, cfg.max_rounds):
                 accuracy = srv._evaluate(params)
-            t1 = time.perf_counter()
+            t1 = time.perf_counter()  # noqa: REPRO004 -- RoundRecord.wall is informational; parity ignores it
             wall = t1 - t0
             if obs.enabled():
                 obs.record("round", phase="round", trial=self.trace_label,
@@ -557,7 +557,7 @@ class EventDrivenRuntime:
                 kind=rt.staleness_kind)
             return True, staleness
         # buffered
-        delta = jax.tree.map(lambda a, b: a - b, client_params, fl.params)
+        delta = jax.tree.map(lambda a, b: a - b, client_params, fl.params)  # noqa: REPRO001 -- independent and vectorized engines both run this exact eager op (runner replays apply_event); jitting it would change FMA contraction vs the pinned parity
         st.buffer.add(delta, staleness)
         if st.buffer.full:
             st.params = st.buffer.flush(st.params)
@@ -623,6 +623,7 @@ class EventDrivenRuntime:
                                    srv.cost_model.total, st.hp)
         st.hp = st.hp.clamped(srv.dataset.n_clients, 100.0)
 
+    @obs.traced("account_event_tail", phase="account")
     def account_event_tail(self, st: EventLoopState):
         """Arrivals after the last aggregation (including a partially
         filled FedBuff buffer) did real downloads and compute the clock
@@ -644,7 +645,7 @@ class EventDrivenRuntime:
     def _run_event_loop(self, params) -> FLResult:
         srv, cfg = self.srv, self.srv.config
         st = self.init_event_state(params)
-        last_wall = time.perf_counter()
+        last_wall = time.perf_counter()  # noqa: REPRO004 -- per-round wall info field; event ordering uses the virtual clock
 
         while self.queue and len(st.history) < cfg.max_rounds \
                 and not st.reached:
@@ -657,7 +658,7 @@ class EventDrivenRuntime:
             upd, _n = srv._client_update(fl.params, fl.client_id, fl.e)
             aggregated, staleness = self.apply_event(st, fl, upd.params)
             if aggregated:
-                now_wall = time.perf_counter()
+                now_wall = time.perf_counter()  # noqa: REPRO004 -- per-round wall info field; event ordering uses the virtual clock
                 self.finish_event_round(st, staleness, now_wall - last_wall)
                 last_wall = now_wall
                 if st.reached:

@@ -1,0 +1,8 @@
+"""Suppression fixture: a justified noqa suppresses its finding."""
+
+
+def probe(fn):
+    try:
+        return fn()
+    except Exception:  # noqa: REPRO007 -- third-party probe may raise anything; failure just means "feature absent"
+        return None

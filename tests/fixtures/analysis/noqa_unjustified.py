@@ -1,0 +1,9 @@
+"""Suppression fixture: a noqa WITHOUT a justification does not
+suppress — the finding is kept and annotated."""
+
+
+def probe(fn):
+    try:
+        return fn()
+    except Exception:  # noqa: REPRO007
+        return None

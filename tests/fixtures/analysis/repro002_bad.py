@@ -1,0 +1,17 @@
+"""BAD fixture: hash-ordered iteration feeding order-sensitive sinks.
+
+Dict views and sets iterate in hash/insertion order; pushing events or
+drawing from an rng inside such a loop makes results depend on that
+order.  REPRO002 must fire on both loops.
+"""
+
+
+def schedule(events_by_trial, queue):
+    for _trial, evs in events_by_trial.items():   # REPRO002: queue push
+        for ev in evs:
+            queue.push(ev)
+
+
+def jitter(cids, rng):
+    for cid in set(cids):                         # REPRO002: rng draw
+        yield cid, rng.uniform()

@@ -1,0 +1,20 @@
+"""GOOD fixture: the same loops, order pinned or order-insensitive."""
+
+
+def schedule(events_by_trial, queue):
+    for _trial, evs in sorted(events_by_trial.items()):
+        for ev in evs:
+            queue.push(ev)
+
+
+def jitter(cids, rng):
+    for cid in sorted(set(cids)):
+        yield cid, rng.uniform()
+
+
+def totals(sizes_by_cid):
+    # unsorted iteration is fine when the body is order-insensitive
+    total = 0
+    for n in sizes_by_cid.values():
+        total += n
+    return total

@@ -1,0 +1,18 @@
+"""BAD fixture: tracer-unsafe host ops inside a jitted function.
+
+``x`` and ``lr`` are tracers inside ``step``: Python branching, host
+casts, ``.item()`` and ``np.*`` on them all fail (or silently bake in a
+branch) under jit.  REPRO003 must fire on each marked line.
+"""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x, lr):
+    if x > 0:                 # REPRO003: Python branch on a tracer
+        x = x - lr
+    y = float(x)              # REPRO003: host cast of a tracer
+    z = np.asarray(x)         # REPRO003: numpy on a tracer
+    return x.item() + y + z   # REPRO003: .item() on a tracer

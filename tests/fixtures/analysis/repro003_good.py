@@ -1,0 +1,29 @@
+"""GOOD fixture: every exempt pattern REPRO003 must NOT flag.
+
+``is None`` dispatch, static ``.shape`` reads, closure constants
+(``prox_mu``-style), config-typed parameters, and ``jnp.where`` are all
+trace-safe.
+"""
+
+import jax
+import jax.numpy as jnp
+
+MU = 0.1
+
+
+@jax.jit
+def step(x, lr, flag=None):
+    if flag is None:          # `is None` dispatch is host-side and fine
+        lr = lr * 0.5
+    if x.shape[0] > 1:        # static shape read, not a tracer value
+        x = x[:1]
+    if MU > 0.0:              # closure constant, compile-time Python
+        x = x - MU * x
+    return jnp.where(x > 0, x - lr, x)
+
+
+@jax.jit
+def apply(params, cfg, x):
+    if cfg.deep:              # config params are static by convention
+        return params["w"] @ x
+    return x

@@ -1,0 +1,28 @@
+"""BAD fixture: jit-cache hazards.
+
+A jitted callable built inside a loop retraces every iteration; an
+uncached factory retraces every call; a list/dict literal at a static
+position raises ``unhashable`` at runtime.  REPRO006 must fire on all
+three.
+"""
+
+import jax
+
+
+def train(rounds, fn, x):
+    for _r in range(rounds):
+        step = jax.jit(fn)      # REPRO006: constructed inside the loop
+        x = step(x)
+    return x
+
+
+def make_step(fn):
+    return jax.jit(fn)          # REPRO006: per-call, no visible cache
+
+
+encode = jax.jit(lambda x, opts: x, static_argnames=("opts",))
+
+
+def run(x):
+    # REPRO006: dict literal at a static_argnames position
+    return encode(x, opts={"lr": 0.1})

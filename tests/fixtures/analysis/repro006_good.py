@@ -1,0 +1,29 @@
+"""GOOD fixture: the house jit patterns REPRO006 must NOT flag.
+
+Module-level construction compiles once; factories guarded by an
+explicit ``*_cache`` memoize; static args stay hashable.
+"""
+
+import functools
+
+import jax
+
+_step_cache = {}
+
+
+def make_step(fn):
+    if fn not in _step_cache:
+        _step_cache[fn] = jax.jit(fn)   # cached factory: compiles once
+    return _step_cache[fn]
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def scale(x, n):
+    return x * n
+
+
+encode = jax.jit(lambda x, n: x * n, static_argnums=(1,))
+
+
+def run(x):
+    return encode(x, 4)                 # hashable static arg: fine

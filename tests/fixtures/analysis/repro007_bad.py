@@ -1,0 +1,16 @@
+"""BAD fixture: broad handlers that swallow bugs.  REPRO007 fires on
+both the ``except Exception`` and the bare ``except``."""
+
+
+def load(path):
+    try:
+        return open(path).read()
+    except Exception:        # REPRO007: swallows everything
+        return None
+
+
+def parse(text):
+    try:
+        return int(text)
+    except:                  # REPRO007: bare except
+        return 0

@@ -1,0 +1,16 @@
+"""GOOD fixture: named exception types, or broad-but-re-raising."""
+
+
+def load(path):
+    try:
+        return open(path).read()
+    except (OSError, UnicodeDecodeError):
+        return None
+
+
+def run(fn):
+    try:
+        return fn()
+    except Exception as e:
+        # broad is fine when the handler re-raises with context
+        raise RuntimeError("wrapped for context") from e

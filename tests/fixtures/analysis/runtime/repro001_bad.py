@@ -1,0 +1,23 @@
+"""BAD fixture: the PR 5 eager-FMA incident pattern, re-introduced.
+
+``compression._roundtrip_leaf`` once ran ``g * scale`` eagerly on one
+engine and under jit on the other — XLA's FMA contraction made the two
+paths differ in the last bit and broke the sweep-vs-independent parity
+pin.  Everything arithmetic-on-params here is eager, so REPRO001 must
+fire.  (Fixture files are parsed, never imported.)
+"""
+
+import jax
+import jax.numpy as jnp
+
+SCALE = 127.0
+
+
+def roundtrip_delta(delta):
+    q = jnp.round(delta * SCALE)        # REPRO001: eager mult on a delta
+    return q / SCALE
+
+
+def apply_update(global_params, delta):
+    # REPRO001: eager tree.map arithmetic over params
+    return jax.tree.map(lambda p, d: p + d, global_params, delta)

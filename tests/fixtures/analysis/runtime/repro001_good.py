@@ -1,0 +1,37 @@
+"""GOOD fixture: the same math, but every param op runs under a trace.
+
+Exercises all three traced-scope resolutions: a ``@jax.jit`` decorator,
+a function wrapped by ``jax.vmap(...)``, and a helper whose only call
+site is jitted (the call-graph rule).  Also pins the count/size name
+exclusions: ``n_params`` arithmetic is host bookkeeping, not array math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+SCALE = 127.0
+
+
+def _scaled(delta):
+    # no decorator — traced because its only call site is jitted
+    return delta * SCALE
+
+
+@jax.jit
+def tree_roundtrip(delta):
+    return jnp.round(_scaled(delta)) / SCALE
+
+
+def _leaf_op(delta):
+    # traced because it is handed to jax.vmap below
+    return delta * SCALE
+
+
+@jax.jit
+def lane_roundtrip(deltas):
+    return jax.vmap(_leaf_op)(deltas)
+
+
+def report(n_params):
+    # count-flavored names are host ints, not parameter arrays
+    return n_params * 4 + 1

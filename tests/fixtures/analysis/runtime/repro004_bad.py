@@ -1,0 +1,19 @@
+"""BAD fixture: wall clock and host randomness in virtual-clock code.
+
+This file sits under a ``runtime/`` path, so every marked call smuggles
+host nondeterminism into what must be a pure function of seeds and the
+virtual clock.  REPRO004 must fire on each.
+"""
+
+import random
+import time
+
+import numpy as np
+
+
+def virtual_round(queue):
+    start = time.time()                 # REPRO004: wall clock
+    jitter = random.random()            # REPRO004: global random module
+    rng = np.random.default_rng()       # REPRO004: unseeded generator
+    draw = np.random.uniform()          # REPRO004: global numpy state
+    return start + jitter + draw + rng.uniform()

@@ -1,0 +1,9 @@
+"""GOOD fixture: stochasticity from seeds, time from the virtual clock."""
+
+import numpy as np
+
+
+def virtual_round(queue, seed):
+    rng = np.random.default_rng(seed)   # seeded: deterministic
+    now = queue.now                     # the event queue's virtual time
+    return now + rng.uniform()

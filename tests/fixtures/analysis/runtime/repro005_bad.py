@@ -1,0 +1,17 @@
+"""BAD fixture: engine stages without spans, metric outside the catalog.
+
+``plan_round``/``apply_update`` match the engine's stage-method shape
+but carry no ``@obs.traced``/``obs.span``; the metric name is absent
+from ``trace_schema.json``.  REPRO005 must fire three times.
+"""
+
+from repro import obs
+
+
+class MiniEngine:
+    def plan_round(self, st):            # REPRO005: stage without a span
+        return st
+
+    def apply_update(self, st):          # REPRO005: stage without a span
+        obs.registry.inc("bogus_metric_name")   # REPRO005: not in catalog
+        return st

@@ -1,0 +1,14 @@
+"""GOOD fixture: instrumented stages using cataloged names only."""
+
+from repro import obs
+
+
+class MiniEngine:
+    @obs.traced("plan_event", phase="plan")
+    def plan_event(self, st):
+        obs.registry.inc("event_dispatched")
+        return st
+
+    def apply_event(self, st):
+        with obs.span("apply_event", phase="apply"):
+            return st

@@ -1,0 +1,187 @@
+"""repro.analysis: rule fixtures, noqa semantics, determinism, and the
+self-check ratchet over the real tree.
+
+The fixture table pins each rule's hits AND misses (the good fixtures
+encode the exemptions — closure constants, sorted() wrappers, cached jit
+factories — that keep the analyzer quiet on the real tree).  The
+self-check test makes tier-1 itself the ratchet: any new unsuppressed
+finding in src/repro fails the suite, not just CI's lint job.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths, load_baseline, new_findings
+from repro.analysis.baseline import DEFAULT_BASELINE
+from repro.analysis.core import parse_noqa
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+SRC_REPRO = REPO / "src" / "repro"
+TOOLS_BASELINE = REPO / "tools" / "analysis_baseline.json"
+
+
+def rule_hits(path: Path, rule: str):
+    res = analyze_paths([path])
+    assert not res.errors, res.errors
+    return [f for f in res.findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# table-driven fixture corpus: (fixture, rule, expected finding count)
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("runtime/repro001_bad.py", "REPRO001", 2),
+    ("runtime/repro001_good.py", "REPRO001", 0),
+    ("repro002_bad.py", "REPRO002", 2),
+    ("repro002_good.py", "REPRO002", 0),
+    ("repro003_bad.py", "REPRO003", 4),
+    ("repro003_good.py", "REPRO003", 0),
+    ("runtime/repro004_bad.py", "REPRO004", 4),
+    ("runtime/repro004_good.py", "REPRO004", 0),
+    ("obs/repro004_allowlisted.py", "REPRO004", 0),
+    ("runtime/repro005_bad.py", "REPRO005", 3),
+    ("runtime/repro005_good.py", "REPRO005", 0),
+    ("repro006_bad.py", "REPRO006", 3),
+    ("repro006_good.py", "REPRO006", 0),
+    ("repro007_bad.py", "REPRO007", 2),
+    ("repro007_good.py", "REPRO007", 0),
+]
+
+
+@pytest.mark.parametrize("fixture,rule,expected", CASES,
+                         ids=[c[0] for c in CASES])
+def test_rule_fixture(fixture, rule, expected):
+    hits = rule_hits(FIXTURES / fixture, rule)
+    assert len(hits) == expected, \
+        f"{fixture}: expected {expected} {rule} finding(s), got " \
+        f"{[(f.line, f.message) for f in hits]}"
+
+
+def test_bad_fixtures_flag_only_their_own_rule():
+    """Each bad fixture trips its rule and nothing else — cross-rule
+    noise in the corpus would mean a rule is overreaching."""
+    for fixture, rule, expected in CASES:
+        if not expected:
+            continue
+        res = analyze_paths([FIXTURES / fixture])
+        other = [f for f in res.findings if f.rule != rule]
+        assert not other, f"{fixture}: unexpected {other}"
+
+
+def test_fma_incident_pattern_in_a_scratch_file(tmp_path):
+    """Acceptance pin: re-introducing the PR 5 eager-FMA pattern in a
+    fresh scratch file under a runtime/ path is flagged as REPRO001."""
+    scratch = tmp_path / "runtime" / "scratch.py"
+    scratch.parent.mkdir()
+    scratch.write_text(
+        "import jax.numpy as jnp\n"
+        "SCALE = 127.0\n"
+        "def roundtrip_leaf(delta):\n"
+        "    q = jnp.round(delta * SCALE)\n"
+        "    return q / SCALE\n",
+        encoding="utf-8")
+    res = analyze_paths([tmp_path])
+    assert any(f.rule == "REPRO001" for f in res.findings), res.findings
+
+
+# ---------------------------------------------------------------------------
+# noqa semantics
+# ---------------------------------------------------------------------------
+
+def test_justified_noqa_suppresses():
+    res = analyze_paths([FIXTURES / "noqa_justified.py"])
+    assert not res.findings
+    assert len(res.suppressed) == 1
+    sup = res.suppressed[0]
+    assert sup.finding.rule == "REPRO007"
+    assert "feature absent" in sup.justification
+
+
+def test_unjustified_noqa_does_not_suppress():
+    res = analyze_paths([FIXTURES / "noqa_unjustified.py"])
+    assert not res.suppressed
+    assert len(res.findings) == 1
+    assert res.findings[0].rule == "REPRO007"
+    assert "not suppressed" in res.findings[0].message
+
+
+def test_noqa_inside_string_literal_is_ignored():
+    src = 'MSG = "# noqa: REPRO007 -- not a comment"\n'
+    assert parse_noqa(src) == {}
+
+
+def test_noqa_requires_matching_rule_code():
+    src = "x = 1  # noqa: REPRO001 -- only suppresses REPRO001\n"
+    assert parse_noqa(src) == {1: {"REPRO001": "only suppresses REPRO001"}}
+
+
+# ---------------------------------------------------------------------------
+# determinism: two CLI runs over src/ are byte-identical
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src"),
+               PYTHONHASHSEED="random")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=REPO, env=env, capture_output=True, text=True)
+
+
+def test_json_output_is_byte_identical_across_runs():
+    # two separate processes with random hash seeds: any reliance on
+    # set/dict hash order in the analyzer would show up as a diff
+    runs = [_run_cli("src/repro", "--format", "json",
+                     "--baseline", str(TOOLS_BASELINE)) for _ in range(2)]
+    for r in runs:
+        assert r.returncode == 0, r.stdout + r.stderr
+    assert runs[0].stdout == runs[1].stdout
+    doc = json.loads(runs[0].stdout)
+    assert doc["findings"] == [] and doc["new_findings"] == []
+    assert doc["errors"] == []
+
+
+def test_cli_exit_codes(tmp_path):
+    # new findings -> 1
+    bad = _run_cli(str(FIXTURES / "repro007_bad.py"))
+    assert bad.returncode == 1
+    # clean tree -> 0 (also: the packaged default baseline is used)
+    good = _run_cli(str(FIXTURES / "repro007_good.py"))
+    assert good.returncode == 0
+    # missing path -> 2
+    assert _run_cli(str(tmp_path / "nope")).returncode == 2
+    # unparsable source -> 2
+    broken = tmp_path / "broken.py"
+    broken.write_text("def (:\n", encoding="utf-8")
+    assert _run_cli(str(broken)).returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# self-check: the real tree is clean against the checked-in baseline
+# ---------------------------------------------------------------------------
+
+def test_src_repro_has_zero_unsuppressed_findings():
+    res = analyze_paths([SRC_REPRO])
+    assert not res.errors, res.errors
+    baseline = load_baseline(TOOLS_BASELINE)
+    fresh = new_findings(res, baseline)
+    assert not fresh, "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in fresh)
+    # the tree carries real suppressions and each one is justified by
+    # construction (unjustified noqa would surface as a finding above)
+    assert res.suppressed, "expected justified suppressions in src/repro"
+
+
+def test_checked_in_baselines_are_identical_and_empty():
+    tools_doc = json.loads(TOOLS_BASELINE.read_text(encoding="utf-8"))
+    packaged_doc = json.loads(DEFAULT_BASELINE.read_text(encoding="utf-8"))
+    assert tools_doc == packaged_doc
+    assert tools_doc["findings"] == [], \
+        "the baseline only ratchets down — fix or justify-suppress instead"

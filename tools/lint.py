@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Repo lint entry point — thin wrapper over ``repro.analysis``.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` but runnable
+from the repo root without setting PYTHONPATH, mirroring the other
+``tools/`` scripts.  Exit codes: 0 clean, 1 new findings, 2 error.
+
+Usage: python tools/lint.py [paths...] [--format json] [--baseline P]
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.cli import main  # noqa: E402 (path bootstrap first)
+
+if __name__ == "__main__":
+    raise SystemExit(main())
