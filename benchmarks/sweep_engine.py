@@ -58,7 +58,7 @@ import time
 from benchmarks.common import emit
 from repro import obs, perf
 from repro.core.preferences import PAPER_PREFERENCES
-from repro.experiments import TrialSpec, run_trial, run_vectorized
+from repro.experiments import TrialSpec, run_trial, run_vectorized, serve
 
 
 def _specs(t: int, rounds: int, mode: str, compression: str = None):
@@ -74,6 +74,21 @@ def _specs(t: int, rounds: int, mode: str, compression: str = None):
                       tuner="fedtune", m0=10, e0=e0, rounds=rounds,
                       target_accuracy=0.99, batch_size=5, eval_points=256,
                       mode=mode, compression=compression)
+            for s in range(t)]
+
+
+def _staggered_specs(t: int, rounds: int, mode: str):
+    """A staggered-target grid: round budgets cycle 1..rounds, so trials
+    finish at different virtual times — the drain shape where a fixed
+    pack idles lanes and continuous batching refills them."""
+    e0 = 1.0 if mode == "sync" else 2.0
+    return [TrialSpec(dataset="emnist", aggregator="fedavg", seed=0,
+                      preference=PAPER_PREFERENCES[
+                          s % len(PAPER_PREFERENCES)].as_tuple(),
+                      tuner="fedtune", m0=10, e0=e0,
+                      rounds=1 + s % rounds,
+                      target_accuracy=0.99, batch_size=5, eval_points=256,
+                      mode=mode)
             for s in range(t)]
 
 
@@ -181,6 +196,93 @@ def main(settings=None, *, t: int = 8, rounds: int = 4, mode: str = "sync",
     return payload
 
 
+def serve_main(*, t: int = 12, max_lanes: int = 4, rounds: int = 3,
+               mode: str = "sync", pack: str = "batched",
+               json_path: str = None):
+    """Fixed-pack vs continuous-batching on a staggered-target grid.
+
+    Three timed runs over the SAME t trials (round budgets cycling
+    1..rounds so they finish at different times): sequential baseline,
+    the fixed-set vectorized engine (its ``lanes_live`` occupancy decays
+    as trials finish), and the continuous-batching scheduler with
+    ``max_lanes`` lanes (its ``pool_occupancy`` stays near 1.0 until the
+    queue runs dry).  Bitmatch compares every served trial against its
+    sequential twin — admission order and lane reuse must never change a
+    trial's floats."""
+    import jax
+    specs = _staggered_specs(t, rounds, mode)
+    assert len({s.key() for s in specs}) == t, "staggered grid keys collide"
+
+    _run_sequential(specs)
+    seq, seq_s, seq_phases = _timed_phases(lambda: _run_sequential(specs))
+
+    # fixed pack: all t trials admitted at once, lanes idle as they finish
+    run_vectorized(specs, pack=pack)
+    obs.enable()
+    _fixed, fixed_s, fixed_phases = _timed_phases(
+        lambda: run_vectorized(specs, pack=pack))
+    lanes = [r["value"] for r in obs.registry.series("lanes_live")]
+    obs.disable()
+    occupancy_fixed = (sum(lanes) / len(lanes) / t) if lanes else 0.0
+
+    # continuous batching: max_lanes lanes, freed slots refill mid-flight
+    serve(list(specs), max_lanes=max_lanes, pack=pack)
+    obs.enable()
+    srv, serve_s, serve_phases = _timed_phases(
+        lambda: serve(list(specs), max_lanes=max_lanes, pack=pack))
+    occ = [r["value"] for r in obs.registry.series("pool_occupancy")]
+    snap = obs.registry.snapshot()
+    obs.disable()
+    occupancy_serve = sum(occ) / len(occ) if occ else 0.0
+
+    by_key = {r.spec.key(): r for r in srv}
+    bitmatch = True
+    max_acc_diff = 0.0
+    for b in seq:
+        v = by_key.get(b.spec.key())
+        if v is None:
+            bitmatch = False
+            continue
+        if (b.history_m, b.history_e) != (v.history_m, v.history_e):
+            bitmatch = False
+        for a, c in zip(b.history_acc, v.history_acc):
+            d = abs(a - c)
+            max_acc_diff = max(max_acc_diff, d)
+            if d > 0:
+                bitmatch = False
+        if tuple(b.cost) != tuple(v.cost):
+            bitmatch = False
+        if (b.dispatch_log, b.staleness_log) != (v.dispatch_log,
+                                                 v.staleness_log):
+            bitmatch = False
+
+    emit(f"sweep_engine/{mode}_fixed_pack_t{t}", fixed_s * 1e6,
+         f"occupancy={occupancy_fixed:.2f}")
+    emit(f"sweep_engine/{mode}_serve_t{t}_l{max_lanes}", serve_s * 1e6,
+         f"occupancy={occupancy_serve:.2f}")
+    payload = {"bench": "sweep_engine", "serve": True, "mode": mode,
+               "t": t, "max_lanes": max_lanes, "rounds": rounds,
+               "pack": pack, "devices": jax.device_count(),
+               "seq_s": round(seq_s, 4), "fixed_s": round(fixed_s, 4),
+               "serve_s": round(serve_s, 4),
+               "speedup_vs_seq": round(seq_s / serve_s, 3) if serve_s else 0,
+               "bitmatch": bitmatch, "max_acc_diff": max_acc_diff,
+               # sustained lane occupancy: fixed pack over its t lanes vs
+               # the scheduler's pool — the continuous-batching claim
+               "occupancy_fixed": round(occupancy_fixed, 4),
+               "occupancy_serve": round(occupancy_serve, 4),
+               "trials_admitted": snap["counters"].get("trials_admitted", 0),
+               "trials_retired": snap["counters"].get("trials_retired", 0),
+               "seq_phases": seq_phases, "fixed_phases": fixed_phases,
+               "serve_phases": serve_phases}
+    print("BENCH " + json.dumps(payload), flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f)
+            f.write("\n")
+    return payload
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--t", type=int, default=8)
@@ -195,9 +297,18 @@ if __name__ == "__main__":
                     choices=(None, "none", "int8"),
                     help="upload compression for every trial (int8 trials "
                          "vectorize lane-wise)")
+    ap.add_argument("--serve", action="store_true",
+                    help="benchmark continuous batching: fixed-pack vs the "
+                         "lane-pool scheduler on a staggered-target grid")
+    ap.add_argument("--max-lanes", type=int, default=4,
+                    help="scheduler lane-pool capacity for --serve")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    main(t=args.t, rounds=args.rounds, mode=args.mode, pack=args.pack,
-         compression=None if args.compression in (None, "none")
-         else args.compression,
-         json_path=args.json)
+    if args.serve:
+        serve_main(t=args.t, max_lanes=args.max_lanes, rounds=args.rounds,
+                   mode=args.mode, pack=args.pack, json_path=args.json)
+    else:
+        main(t=args.t, rounds=args.rounds, mode=args.mode, pack=args.pack,
+             compression=None if args.compression in (None, "none")
+             else args.compression,
+             json_path=args.json)

@@ -9,6 +9,11 @@
              to standalone runs.
 ``store``  — append-only JSONL results, resume keys, paper-style tables
              (per-mode/per-profile columns, legacy-row tolerant).
+``scheduler`` — continuous-batching trial serving: a ``LanePool`` page
+             table over the stacked trial axis, a persistent
+             ``TrialQueue`` (grid- or watched-JSONL-fed), and a
+             ``TrialScheduler`` that retires lanes the moment a trial
+             reaches target and admits queued trials mid-flight.
 """
 
 from repro.experiments.grid import (CANONICAL_PREFERENCE,  # noqa: F401
@@ -17,6 +22,8 @@ from repro.experiments.grid import (CANONICAL_PREFERENCE,  # noqa: F401
 from repro.experiments.runner import (TrialResult, build_server,  # noqa: F401
                                       run_sweep, run_trial, run_vectorized,
                                       run_vectorized_events)
+from repro.experiments.scheduler import (LanePool, ServeStats,  # noqa: F401
+                                         TrialQueue, TrialScheduler, serve)
 from repro.experiments.store import (ResultStore,  # noqa: F401
                                      aggregate_over_seeds, improvement_pct,
                                      pair_with_baselines, paper_table)

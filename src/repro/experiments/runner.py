@@ -567,13 +567,10 @@ def _to_result(tr: _LiveTrial, engine: str) -> TrialResult:
     return TrialResult.from_flresult(tr.spec, res, tr.wall, engine)
 
 
-def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
-                         pack: str = "batched",
-                         on_result: Optional[Callable] = None,
-                         verbose: bool = False) -> List[TrialResult]:
-    """Run every sync-mode trial concurrently, one packed cohort per
-    virtual round (plan -> pack -> reduce -> step, as described in the
-    module docstring)."""
+def _resolve_sync_pack(pack: str):
+    """Resolve the requested pack against the host topology: the sharded
+    pack needs a real multi-device mesh, single-device hosts fall back to
+    batched.  Returns ``(pack, mesh)``."""
     mesh = None
     if pack == "sharded":
         if jax.device_count() == 1:
@@ -584,7 +581,105 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         else:
             from repro.runtime.sharded import default_clients_mesh
             mesh = default_clients_mesh()
+    return pack, mesh
 
+
+def _sync_round_step(live: List[_LiveTrial], *, pack: str = "batched",
+                     mesh=None, step_idx: int = 0) -> int:
+    """Advance the given live sync trials by ONE packed virtual round
+    (plan -> pack -> train -> apply -> eval -> finish, as described in the
+    module docstring).  The live set is whatever the caller says it is —
+    the fixed-set sweep passes every unfinished trial, the continuous-
+    batching scheduler (experiments/scheduler.py) passes the pool's
+    currently-admitted lanes — and every pack/eval shape is keyed off that
+    live set, never off an initial trial count.  Trials that end this
+    round come back with ``done`` set; retiring them (result emission,
+    lane release) is the caller's job.  Returns the number of packed
+    client entries."""
+    t0 = time.perf_counter()  # noqa: REPRO004 -- per-macro-step wall share for TrialResult.wall; round accounting uses virtual clocks
+    if obs.enabled():
+        obs.registry.sample("lanes_live", len(live), step=step_idx,
+                            engine="sync")
+    # 1. plan every live trial's round (per-trial rng streams)
+    with obs.span("PLAN", phase="plan", n_trials=len(live)):
+        for tr in live:
+            v0 = tr.eng.clock.now
+            tr.plan = tr.eng.plan_sync_round(tr.hp)
+            tr.eng.clock.advance_to(tr.eng.clock.now
+                                    + tr.plan.round_time)
+            if obs.enabled():
+                obs.record("round", phase="round", trial=tr.spec.key(),
+                           round_idx=tr.round_idx,
+                           virtual=(v0, tr.eng.clock.now),
+                           n_included=len(tr.plan.included),
+                           n_active=len(tr.plan.active))
+    # 2. materialize batch streams (the rng contract) and pack
+    entries: List[Tuple[_LiveTrial, int]] = []
+    with obs.span("PACK", phase="pack", n_trials=len(live)):
+        for tr in live:
+            cids = tr.plan.train_cids
+            if not cids:
+                tr.cohort = None
+                continue
+            data = [tr.srv.dataset.client_data(c) for c in cids]
+            streams, n_steps = materialize_streams(
+                data, tr.srv.config.batch_size, tr.hp.e, tr.srv.rng)
+            sizes = [len(y) for _, y in data]
+            tr.cohort = _Cohort(cids=cids, streams=streams,
+                                n_steps=n_steps, sizes=sizes,
+                                trained=[None] * len(cids),
+                                flat_rows=[None] * len(cids),
+                                losses=[0.0] * len(cids))
+            entries.extend((tr, j) for j in range(len(cids)))
+    # 3. group by model and train each group's packed cohort
+    groups: Dict[tuple, List[Tuple[_LiveTrial, int]]] = {}
+    for ent in entries:
+        groups.setdefault(_group_key(ent[0]), []).append(ent)
+    with perf.timed("train"), obs.span("TRAIN", phase="train",
+                                       n_entries=len(entries),
+                                       n_groups=len(groups)):
+        for ents in groups.values():
+            fused = (pack == "sharded"
+                     and all(tr.srv.aggregator.name == "fedavg"
+                             for tr, _ in ents))
+            if fused:
+                _run_group_sharded(ents, mesh)
+            else:
+                _run_group_batched(ents)
+    # 4. per-trial aggregation + accounting, then ONE stacked eval of
+    #    every due trial (grouped by model/dataset), then per-trial
+    #    record + controller step
+    with obs.span("APPLY", phase="apply", n_trials=len(live)):
+        for tr in live:
+            _reduce_round(tr)
+    due = [tr for tr in live
+           if eval_due(tr.round_idx, tr.srv.config.eval_every,
+                       tr.srv.config.max_rounds)]
+    with obs.span("EVAL", phase="eval", n_due=len(due)):
+        # pad_pow2: stacked eval shapes keyed off the live due count's
+        # pow2, so lane churn (drain or continuous admission) does not
+        # recompile per distinct count — parity-safe, lanes are independent
+        accs = evaluate_stacked(
+            [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
+              tr.params) for tr in due], mesh=mesh, pad_pow2=True)
+    acc_of = {id(tr): a for tr, a in zip(due, accs)}
+    wall = time.perf_counter() - t0  # noqa: REPRO004 -- wall shares are informational; parity compares params/history only
+    if obs.enabled():
+        obs.counter("t_sim", max(tr.eng.clock.now for tr in live))
+    for tr in live:
+        tr.wall += wall / len(live)
+        _finish_round(tr, wall / len(live), acc_of.get(id(tr)))
+    return len(entries)
+
+
+def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
+                         pack: str = "batched",
+                         on_result: Optional[Callable] = None,
+                         verbose: bool = False) -> List[TrialResult]:
+    """Run every sync-mode trial concurrently, one packed cohort per
+    virtual round (``_sync_round_step``) over the set of unfinished
+    trials until all are done."""
+    pack, mesh = _resolve_sync_pack(pack)
     trials = [_make_live(s) for s in specs]
     results: List[TrialResult] = [None] * len(trials)
     engine = f"vectorized/{pack}"
@@ -593,76 +688,9 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         live = [tr for tr in trials if not tr.done]
         if not live:
             break
-        t0 = time.perf_counter()  # noqa: REPRO004 -- per-macro-step wall share for TrialResult.wall; round accounting uses virtual clocks
-        if obs.enabled():
-            obs.registry.sample("lanes_live", len(live), step=n_rounds,
-                                engine="sync")
-        # 1. plan every live trial's round (per-trial rng streams)
-        with obs.span("PLAN", phase="plan", n_trials=len(live)):
-            for tr in live:
-                v0 = tr.eng.clock.now
-                tr.plan = tr.eng.plan_sync_round(tr.hp)
-                tr.eng.clock.advance_to(tr.eng.clock.now
-                                        + tr.plan.round_time)
-                if obs.enabled():
-                    obs.record("round", phase="round", trial=tr.spec.key(),
-                               round_idx=tr.round_idx,
-                               virtual=(v0, tr.eng.clock.now),
-                               n_included=len(tr.plan.included),
-                               n_active=len(tr.plan.active))
-        # 2. materialize batch streams (the rng contract) and pack
-        entries: List[Tuple[_LiveTrial, int]] = []
-        with obs.span("PACK", phase="pack", n_trials=len(live)):
-            for tr in live:
-                cids = tr.plan.train_cids
-                if not cids:
-                    tr.cohort = None
-                    continue
-                data = [tr.srv.dataset.client_data(c) for c in cids]
-                streams, n_steps = materialize_streams(
-                    data, tr.srv.config.batch_size, tr.hp.e, tr.srv.rng)
-                sizes = [len(y) for _, y in data]
-                tr.cohort = _Cohort(cids=cids, streams=streams,
-                                    n_steps=n_steps, sizes=sizes,
-                                    trained=[None] * len(cids),
-                                    flat_rows=[None] * len(cids),
-                                    losses=[0.0] * len(cids))
-                entries.extend((tr, j) for j in range(len(cids)))
-        # 3. group by model and train each group's packed cohort
-        groups: Dict[tuple, List[Tuple[_LiveTrial, int]]] = {}
-        for ent in entries:
-            groups.setdefault(_group_key(ent[0]), []).append(ent)
-        with perf.timed("train"), obs.span("TRAIN", phase="train",
-                                           n_entries=len(entries),
-                                           n_groups=len(groups)):
-            for ents in groups.values():
-                fused = (pack == "sharded"
-                         and all(tr.srv.aggregator.name == "fedavg"
-                                 for tr, _ in ents))
-                if fused:
-                    _run_group_sharded(ents, mesh)
-                else:
-                    _run_group_batched(ents)
-        # 4. per-trial aggregation + accounting, then ONE stacked eval of
-        #    every due trial (grouped by model/dataset), then per-trial
-        #    record + controller step
-        with obs.span("APPLY", phase="apply", n_trials=len(live)):
-            for tr in live:
-                _reduce_round(tr)
-        due = [tr for tr in live
-               if eval_due(tr.round_idx, tr.srv.config.eval_every,
-                           tr.srv.config.max_rounds)]
-        with obs.span("EVAL", phase="eval", n_due=len(due)):
-            accs = evaluate_stacked(
-                [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
-                  tr.params) for tr in due], mesh=mesh)
-        acc_of = {id(tr): a for tr, a in zip(due, accs)}
-        wall = time.perf_counter() - t0  # noqa: REPRO004 -- wall shares are informational; parity compares params/history only
-        if obs.enabled():
-            obs.counter("t_sim", max(tr.eng.clock.now for tr in live))
+        n_entries = _sync_round_step(live, pack=pack, mesh=mesh,
+                                     step_idx=n_rounds)
         for tr in live:
-            tr.wall += wall / len(live)
-            _finish_round(tr, wall / len(live), acc_of.get(id(tr)))
             if tr.done:
                 res = _to_result(tr, engine)
                 results[trials.index(tr)] = res
@@ -672,7 +700,7 @@ def _run_vectorized_sync(specs: Sequence[TrialSpec], *,
         if verbose and n_rounds % 10 == 0:
             done = sum(tr.done for tr in trials)
             print(f"  sweep round {n_rounds}: {done}/{len(trials)} trials "
-                  f"done, {len(entries)} clients packed", flush=True)
+                  f"done, {n_entries} clients packed", flush=True)
     return results
 
 
@@ -742,20 +770,23 @@ def _coalesce_buckets(buckets: Dict[int, List[int]],
     return out
 
 
-def _run_event_group(lanes: List[_Lane]):
+def _run_event_group(lanes: List[_Lane], min_lanes: int = 4):
     """Train one model-group's packed arrivals: one vmap lane per trial,
     each lane starting local training from ITS trial's dispatch-snapshot
     params (``global_in_axis=0`` also anchors the FedProx term there, as
     ``local_train`` does).  Buckets by pow2 step count (small buckets
-    coalesced upward — see ``_coalesce_buckets``) and pads the lane axis
-    to a pow2 so compiled (T, M) shapes repeat across macro-steps — and
-    are SHARED with the sync sweep path (same ``_multi_cohort_fn``)."""
+    coalesced upward — see ``_coalesce_buckets``; the caller keys
+    ``min_lanes`` off the LIVE lane count, not the sweep's initial T, so
+    a draining or continuously-batched pool coalesces against what is
+    actually resident) and pads the lane axis to a pow2 so compiled
+    (T, M) shapes repeat across macro-steps — and are SHARED with the
+    sync sweep path (same ``_multi_cohort_fn``)."""
     tr0 = lanes[0].tr
     model, opt = tr0.srv.model, tr0.srv.optimizer
     bs = tr0.srv.config.batch_size
     run = _multi_cohort_fn(model, opt, tr0.srv.config.prox_mu)
     buckets = _coalesce_buckets(
-        bucket_by_steps([ln.n_steps for ln in lanes]))
+        bucket_by_steps([ln.n_steps for ln in lanes]), min_lanes=min_lanes)
     for t_pad, idx in sorted(buckets.items()):
         sel = [lanes[i] for i in idx]
         m_pad = _pow2(len(sel))    # bound the compiled (T, M) shape set
@@ -785,73 +816,80 @@ def _run_event_group(lanes: List[_Lane]):
             ln.loss = float(ll[k])
 
 
-def run_vectorized_events(specs: Sequence[TrialSpec], *,
-                          pack: str = "batched",
-                          on_result: Optional[Callable] = None,
-                          verbose: bool = False) -> List[TrialResult]:
-    """Run T async/buffered trials concurrently off ONE merged event queue.
+class _EventEngine:
+    """Merged-queue engine state shared by the fixed-set wrapper
+    (``run_vectorized_events``) and the continuous-batching scheduler
+    (experiments/scheduler.py): ONE merged virtual-clock event queue
+    spanning every live trial, with trial ordinals handed out at
+    admission.  Admission order IS the merged queue's cross-trial tie
+    order — the fixed-set wrapper admits in sorted-key order (so its tie
+    order stays independent of caller spec order), the scheduler admits
+    in queue order (so a drain is deterministic given the submission
+    sequence).  Either way a trial's own event sequence — and therefore
+    its floats — depends only on its private rngs and clock, never on
+    which other trials share the queue."""
 
-    Each macro-step: (1) COLLECT — pop the merged queue in deterministic
-    (time, trial_key, seq) order, advancing every live trial to its next
-    pending arrival; dropouts are handled inline (loads charged, concurrency
-    refilled), and events of trials that already contributed an arrival are
-    deferred untouched (an arrival must be trained and applied before its
-    trial's later events may be processed — FedAsync/FedBuff state is
-    sequential per trial).  Each collected arrival's batch stream is
-    materialized at the exact point the standalone loop would consume the
-    trial's server rng.  (2) PACK — all collected arrivals train as one
-    flat cohort (one vmap lane per trial, each from its own dispatch
-    snapshot).  (3) APPLY — per trial on the host: selector update, FedAsync
-    mixing / FedBuff buffering, accounting, evaluation, FedTune step, and
-    concurrency refill, via the engine's own event-loop methods.
+    def __init__(self):
+        self.merged = MergedEventQueue()
+        self.by_ord: Dict[int, _EventTrial] = {}
+        self.n_steps = 0
 
-    Parity: bit-identical to each trial's standalone ``FLServer.run()``
-    (accuracies, costs, dispatch/staleness logs, (M, E) trajectories)."""
-    for s in specs:
-        if s.mode not in ("async", "buffered"):
+    def admit(self, spec: TrialSpec) -> _EventTrial:
+        """Bring one async/buffered trial live on the merged queue (its
+        initial concurrency dispatches push events immediately)."""
+        if spec.mode not in ("async", "buffered"):
             raise ValueError(
-                f"trial {s.key()!r} is not an event-driven trial "
-                "(run_vectorized_events covers the async/buffered modes; "
+                f"trial {spec.key()!r} is not an event-driven trial "
+                "(the merged-queue engine covers the async/buffered modes; "
                 "sync trials pack per round via run_vectorized)")
-    if pack == "sharded":
-        # event packs are one-arrival-per-trial wide and FedAsync/FedBuff
-        # mixing is per-trial host state — there is no cross-client
-        # aggregation to fuse on device, so the mesh layout buys nothing
-        print("experiments: sharded packing does not apply to event-driven "
-              "(async/buffered) trials — per-trial mixing is host-side; "
-              "using the batched pack", flush=True)
-        pack = "batched"
+        trial_ord = len(self.by_ord)
+        tr = _make_event_live(spec, self.merged, trial_ord)
+        self.by_ord[trial_ord] = tr
+        return tr
 
-    merged = MergedEventQueue()
-    # trial ordinals from sorted keys: the merged queue's cross-trial tie
-    # order is then independent of the caller's spec order
-    order = sorted(range(len(specs)), key=lambda i: specs[i].key())
-    trials: List[_EventTrial] = [None] * len(specs)
-    by_ord: Dict[int, _EventTrial] = {}
-    for trial_ord, i in enumerate(order):
-        tr = _make_event_live(specs[i], merged, trial_ord)
-        trials[i] = tr
-        by_ord[trial_ord] = tr
-    results: List[TrialResult] = [None] * len(specs)
-    engine = f"vectorized-events/{pack}"
-
-    def end_trial(tr: _EventTrial):
+    def end_trial(self, tr: _EventTrial) -> None:
+        """Retire one trial: account its tail window, mark it done, and
+        drop its pending events so the merged queue never carries a
+        retired trial's traffic into later macro-steps."""
         tr.eng.account_event_tail(tr.st)
         tr.done = True
-        res = TrialResult.from_flresult(tr.spec, tr.eng.event_result(tr.st),
-                                        tr.wall, engine)
-        results[trials.index(tr)] = res
-        if on_result is not None:
-            on_result(res)
+        self.merged.drop_trial(tr.view.trial_ord)
 
-    n_steps_total = 0
-    while True:
-        live = [tr for tr in trials if not tr.done]
-        if not live:
-            break
+    def macro_step(self, live: List[_EventTrial],
+             on_done: Callable[[_EventTrial], None]) -> int:
+        """One COLLECT/PACK/APPLY macro-step over the given live trials.
+
+        (1) COLLECT — pop the merged queue in deterministic (time,
+        admission ordinal, seq) order, advancing every live trial to its
+        next pending arrival; dropouts are handled inline (loads charged,
+        concurrency refilled), and events of trials that already
+        contributed an arrival are deferred untouched (an arrival must be
+        trained and applied before its trial's later events may be
+        processed — FedAsync/FedBuff state is sequential per trial).
+        Each collected arrival's batch stream is materialized at the
+        exact point the standalone loop would consume the trial's server
+        rng.  (2) PACK — all collected arrivals train as one flat cohort
+        (one vmap lane per trial, each from its own dispatch snapshot),
+        with bucket coalescing keyed off the live-lane count.  (3) APPLY
+        — per trial on the host: selector update, FedAsync mixing /
+        FedBuff buffering, accounting, evaluation, FedTune step, and
+        concurrency refill, via the engine's own event-loop methods.
+
+        ``on_done(tr)`` fires for every trial that ends during the step
+        (after its tail accounting + event drop); the caller emits the
+        result and releases the lane.  Returns the number of packed
+        arrivals."""
+        step_idx = self.n_steps
+        self.n_steps += 1
+        merged, by_ord = self.merged, self.by_ord
+
+        def end(tr: _EventTrial):
+            self.end_trial(tr)
+            on_done(tr)
+
         t0 = time.perf_counter()  # noqa: REPRO004 -- per-macro-step wall share for TrialResult.wall; event order uses the merged virtual queue
         if obs.enabled():
-            obs.registry.sample("lanes_live", len(live), step=n_steps_total,
+            obs.registry.sample("lanes_live", len(live), step=step_idx,
                                 engine="events")
         # 1. COLLECT one pending arrival per live trial
         lanes: List[_Lane] = []
@@ -885,8 +923,8 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
         # loop does on an empty queue (the dispatch deadlock guard makes
         # this unreachable in practice, but the semantics must match)
         for tr in live:
-            if id(tr) not in packed and not tr.view:
-                end_trial(tr)
+            if not tr.done and id(tr) not in packed and not tr.view:
+                end(tr)
         # 2. PACK: train all collected arrivals as one cohort per model group
         groups: Dict[tuple, List[_Lane]] = {}
         for ln in lanes:
@@ -898,7 +936,7 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
                                            n_lanes=len(lanes),
                                            n_groups=len(groups)):
             for group in groups.values():
-                _run_event_group(group)
+                _run_event_group(group, min_lanes=min(4, len(live)))
         # 3. APPLY per trial, in collect (= merged pop) order: first fold
         #    every lane into its trial's global model, then evaluate every
         #    aggregating-and-due trial in ONE stacked dispatch (grouped by
@@ -925,7 +963,7 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
         with obs.span("EVAL", phase="eval", n_due=len(due)):
             accs = evaluate_stacked(
                 [(tr.srv.model, tr.srv.dataset, tr.srv.config.eval_points,
-                  tr.st.params) for tr in due])
+                  tr.st.params) for tr in due], pad_pow2=True)
         acc_of = {id(tr): a for tr, a in zip(due, accs)}
         for ln, aggregated, staleness in applied:
             tr = ln.tr
@@ -933,19 +971,67 @@ def run_vectorized_events(specs: Sequence[TrialSpec], *,
                 tr.eng.finish_event_round(tr.st, staleness, share,
                                           accuracy=acc_of.get(id(tr)))
                 if tr.st.reached:
-                    end_trial(tr)
+                    end(tr)
                     continue
             tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,
                                           queue=tr.view)
             if len(tr.st.history) >= tr.srv.config.max_rounds:
-                end_trial(tr)
+                end(tr)
         if obs.enabled() and live:
             obs.counter("t_sim", max(tr.eng.clock.now for tr in live))
-        n_steps_total += 1
-        if verbose and n_steps_total % 20 == 0:
+        return len(lanes)
+
+
+def run_vectorized_events(specs: Sequence[TrialSpec], *,
+                          pack: str = "batched",
+                          on_result: Optional[Callable] = None,
+                          verbose: bool = False) -> List[TrialResult]:
+    """Run T async/buffered trials concurrently off ONE merged event queue
+    (``_EventEngine`` macro-steps over the set of unfinished trials).
+
+    Parity: bit-identical to each trial's standalone ``FLServer.run()``
+    (accuracies, costs, dispatch/staleness logs, (M, E) trajectories)."""
+    for s in specs:
+        if s.mode not in ("async", "buffered"):
+            raise ValueError(
+                f"trial {s.key()!r} is not an event-driven trial "
+                "(run_vectorized_events covers the async/buffered modes; "
+                "sync trials pack per round via run_vectorized)")
+    if pack == "sharded":
+        # event packs are one-arrival-per-trial wide and FedAsync/FedBuff
+        # mixing is per-trial host state — there is no cross-client
+        # aggregation to fuse on device, so the mesh layout buys nothing
+        print("experiments: sharded packing does not apply to event-driven "
+              "(async/buffered) trials — per-trial mixing is host-side; "
+              "using the batched pack", flush=True)
+        pack = "batched"
+
+    ev = _EventEngine()
+    # trial ordinals from sorted keys: the merged queue's cross-trial tie
+    # order is then independent of the caller's spec order
+    order = sorted(range(len(specs)), key=lambda i: specs[i].key())
+    trials: List[_EventTrial] = [None] * len(specs)
+    for i in order:
+        trials[i] = ev.admit(specs[i])
+    results: List[TrialResult] = [None] * len(specs)
+    engine = f"vectorized-events/{pack}"
+
+    def on_done(tr: _EventTrial):
+        res = TrialResult.from_flresult(tr.spec, tr.eng.event_result(tr.st),
+                                        tr.wall, engine)
+        results[trials.index(tr)] = res
+        if on_result is not None:
+            on_result(res)
+
+    while True:
+        live = [tr for tr in trials if not tr.done]
+        if not live:
+            break
+        n_lanes = ev.macro_step(live, on_done)
+        if verbose and ev.n_steps % 20 == 0:
             done = sum(tr.done for tr in trials)
-            print(f"  event sweep step {n_steps_total}: {done}/{len(trials)}"
-                  f" trials done, {len(lanes)} arrivals packed", flush=True)
+            print(f"  event sweep step {ev.n_steps}: {done}/{len(trials)}"
+                  f" trials done, {n_lanes} arrivals packed", flush=True)
     return results
 
 

@@ -40,6 +40,10 @@ class ResultStore:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
+        # completed-key cache: None until first asked, then maintained by
+        # append/clear so admission checks are O(1) instead of a full
+        # JSONL re-parse per call (the scheduler asks once per admission)
+        self._completed: Optional[set] = None
 
     # ------------------------------------------------------------------
     def load(self) -> List[dict]:
@@ -60,8 +64,19 @@ class ResultStore:
         return out
 
     def completed_keys(self) -> set:
-        return {r["key"] for r in self.load()
-                if r.get("status") == "done" and "key" in r}
+        """Keys of every ``status == "done"`` record.  The file is parsed
+        at most once: the set is cached and kept current by ``append``
+        (add) and ``clear`` (invalidate).  Treat the returned set as
+        read-only — it IS the cache."""
+        if self._completed is None:
+            self._completed = {r["key"] for r in self.load()
+                               if r.get("status") == "done" and "key" in r}
+        return self._completed
+
+    def is_completed(self, key: str) -> bool:
+        """O(1) membership against the cached completed-key set — the
+        scheduler's per-admission resume check."""
+        return key in self.completed_keys()
 
     def append(self, record: dict):
         t0 = time.perf_counter()
@@ -69,6 +84,9 @@ class ResultStore:
             f.write(json.dumps(record) + "\n")
             f.flush()
             os.fsync(f.fileno())
+        if (self._completed is not None
+                and record.get("status") == "done" and "key" in record):
+            self._completed.add(record["key"])
         if obs.enabled():
             # fsynced-append latency: the store is on every trial's
             # completion path, so a slow disk shows up here first
@@ -77,6 +95,7 @@ class ResultStore:
     def clear(self):
         if os.path.exists(self.path):
             os.remove(self.path)
+        self._completed = None
 
 
 # ---------------------------------------------------------------------------

@@ -186,10 +186,17 @@ class StackedEvaluator:
         self.fn_cache = fn_cache if fn_cache is not None else _SHARED_FN_CACHE
 
     def evaluate(self, params_list: Sequence[Any],
-                 mesh=None) -> List[float]:
+                 mesh=None, pad_to: Optional[int] = None) -> List[float]:
         """Per-trial accuracies for a list of params pytrees.  With
         ``mesh``, the trial axis is laid over the mesh's first axis
-        (lanes padded to a multiple of the device count)."""
+        (lanes padded to a multiple of the device count).  ``pad_to``
+        pads the lane axis up to a caller-chosen width first (extra lanes
+        repeat lane 0 and are discarded) — the sweep engines key it off
+        the live-lane mask (pow2 of the due count) so the compiled
+        stacked shape stays stable as trials retire and fresh ones are
+        admitted mid-flight, instead of recompiling for every distinct
+        live count.  Padding is bit-parity-safe: vmap lanes are
+        independent, so lane i never sees the padding."""
         t = len(params_list)
         if t == 0:
             return []
@@ -199,9 +206,11 @@ class StackedEvaluator:
             return [Evaluator(self.model, self.dataset, self.eval_points,
                               self.fn_cache).evaluate(params_list[0])]
         stacked_list = list(params_list)
+        if pad_to is not None and pad_to > t:
+            stacked_list = stacked_list + [stacked_list[0]] * (pad_to - t)
         if mesh is not None:
             n_dev = int(np.prod(mesh.devices.shape))
-            pad = (-t) % n_dev
+            pad = (-len(stacked_list)) % n_dev
             stacked_list = stacked_list + [stacked_list[0]] * pad
         stacked = _tree_stack(stacked_list)
         if mesh is not None:
@@ -222,12 +231,21 @@ class StackedEvaluator:
         return [c / total for c in correct]
 
 
+def _pow2_lanes(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 def evaluate_stacked(items: Sequence[Tuple[Any, Any, int, Any]],
-                     mesh=None) -> List[float]:
+                     mesh=None, pad_pow2: bool = False) -> List[float]:
     """Batch-evaluate many trials: ``items`` holds one ``(model, dataset,
     eval_points, params)`` per trial; trials sharing a (model, dataset,
     eval_points) group execute as ONE stacked dispatch per test batch.
-    Returns accuracies in item order."""
+    Returns accuracies in item order.
+
+    ``pad_pow2`` pads each group's lane axis to a pow2 of its LIVE size
+    (parity-safe — see ``StackedEvaluator.evaluate``), bounding the set
+    of compiled stacked shapes as a draining or continuously-batched
+    pool's due count churns."""
     groups: Dict[tuple, List[int]] = {}
     for i, (model, dataset, eval_points, _params) in enumerate(items):
         groups.setdefault((id(model), id(dataset), eval_points),
@@ -235,8 +253,9 @@ def evaluate_stacked(items: Sequence[Tuple[Any, Any, int, Any]],
     out: List[float] = [0.0] * len(items)
     for idx in groups.values():
         model, dataset, eval_points, _ = items[idx[0]]
+        pad_to = _pow2_lanes(len(idx)) if pad_pow2 else None
         accs = StackedEvaluator(model, dataset, eval_points).evaluate(
-            [items[i][3] for i in idx], mesh=mesh)
+            [items[i][3] for i in idx], mesh=mesh, pad_to=pad_to)
         for i, acc in zip(idx, accs):
             out[i] = acc
     return out

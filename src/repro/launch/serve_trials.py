@@ -1,0 +1,172 @@
+"""Trial-serving daemon: drain an open-ended queue of tuning trials at
+sustained lane occupancy (continuous batching over the sweep engines).
+
+Where ``repro.launch.sweep`` packs a FIXED grid and lets lanes idle as
+trials finish, this launcher runs the continuous-batching scheduler
+(repro.experiments.scheduler): a ``LanePool`` of ``--max-lanes`` lanes, a
+``TrialQueue`` seeded from a grid/preset and/or fed live from a watched
+JSONL submissions file, retiring each lane the moment its trial reaches
+target and admitting the next queued trial into the freed slot
+mid-flight.  Every result is bit-identical to an independent
+``FLServer.run()`` and streams to the JSONL result store as it retires,
+so a killed daemon resumes past completed keys.
+
+Usage:
+  # write the 12-trial smoke queue into a submissions file (the submit side)
+  PYTHONPATH=src python -m repro.launch.serve_trials \
+      --preset serve-smoke --submit serve_subs.jsonl
+
+  # drain it with 4 lanes; kill mid-drain with --limit, re-invoke to resume
+  PYTHONPATH=src python -m repro.launch.serve_trials \
+      --watch serve_subs.jsonl --max-lanes 4 --limit 6 --out runs/serve.jsonl
+  PYTHONPATH=src python -m repro.launch.serve_trials \
+      --watch serve_subs.jsonl --max-lanes 4 --out runs/serve.jsonl --trace
+
+  # daemon mode: keep polling the submissions file after the queue drains
+  # (any writer may append spec lines at any time); Ctrl-C to stop
+  PYTHONPATH=src python -m repro.launch.serve_trials \
+      --watch serve_subs.jsonl --daemon --max-lanes 8 --out runs/serve.jsonl
+
+A submissions line is a ``TrialSpec.to_dict()`` JSON object (or any record
+with a ``"spec"`` field — result-store rows can be piped back in);
+malformed lines are skipped with a warning, half-written tails are retried
+on the next poll.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def serve_smoke_specs():
+    """The CI serve-smoke queue: 12 tiny trials whose round budgets are
+    staggered (1..3) across sync, async, and buffered modes, so lanes
+    retire at different times — exactly the drain shape continuous
+    batching exists for (a fixed pack would idle up to 2/3 of its lanes
+    by the last round)."""
+    from repro.experiments import TrialSpec
+    specs = []
+    for i in range(6):
+        specs.append(TrialSpec(
+            dataset="emnist", aggregator="fedavg", seed=i, tuner="fedtune",
+            m0=3, e0=1.0, rounds=1 + i % 3, target_accuracy=0.99,
+            batch_size=5, eval_points=128, mode="sync"))
+    for i in range(6):
+        specs.append(TrialSpec(
+            dataset="emnist", aggregator="fedavg", seed=i, tuner="fedtune",
+            m0=3, e0=1.0, rounds=1 + i % 3, target_accuracy=0.99,
+            batch_size=5, eval_points=128,
+            mode="async" if i % 2 == 0 else "buffered"))
+    return specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default=None, choices=("serve-smoke",),
+                    help="named queue (serve-smoke = 12 staggered-budget "
+                         "trials across sync/async/buffered)")
+    ap.add_argument("--watch", default=None, metavar="PATH",
+                    help="JSONL submissions file to poll for new trials "
+                         "(one spec object per line, append-only)")
+    ap.add_argument("--submit", default=None, metavar="PATH",
+                    help="write the preset/grid specs as submission lines "
+                         "to PATH and exit (the producer side of --watch)")
+    ap.add_argument("--max-lanes", type=int, default=4,
+                    help="lane pool capacity (concurrently live trials)")
+    ap.add_argument("--pack", default="batched",
+                    choices=("batched", "sharded"),
+                    help="sync cohort packing (event trials pack batched)")
+    ap.add_argument("--out", default="runs/serve.jsonl",
+                    help="JSONL result store (resume key source)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="truncate the store instead of skipping "
+                         "completed trial keys")
+    ap.add_argument("--limit", type=int, default=0,
+                    help="stop draining once N trials have retired this "
+                         "invocation (0 = drain fully; the crossing step "
+                         "may retire a few extra) — simulates a killed "
+                         "daemon")
+    ap.add_argument("--daemon", action="store_true",
+                    help="after draining, keep polling --watch for new "
+                         "submissions instead of exiting")
+    ap.add_argument("--poll-seconds", type=float, default=1.0,
+                    help="daemon-mode sleep between idle polls")
+    ap.add_argument("--trace", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="record a dual-clock trace (Chrome trace-event "
+                         "JSON + metrics JSONL, paths derived from --out) "
+                         "— shows the admit/retire drain and the "
+                         "pool_occupancy gauge; bit-parity-neutral")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    from repro.experiments import ResultStore
+    from repro.experiments.scheduler import TrialQueue, TrialScheduler
+
+    specs = serve_smoke_specs() if args.preset == "serve-smoke" else []
+    if not specs and not args.watch:
+        ap.error("nothing to serve: give --preset and/or --watch "
+                 "(or --submit to produce a submissions file)")
+
+    if args.submit:
+        with open(args.submit, "a") as f:
+            for s in specs:
+                f.write(json.dumps({"spec": s.to_dict()}) + "\n")
+        print(f"serve: submitted {len(specs)} spec(s) -> {args.submit}",
+              flush=True)
+        return
+
+    store = ResultStore(args.out)
+    if args.no_resume:
+        store.clear()
+    queue = TrialQueue(specs=specs, watch_path=args.watch,
+                       completed=store.completed_keys())
+    queue.poll()
+    n_done = queue.n_skipped
+    print(f"serve: {queue.n_submitted} trial(s) queued; resume: skipping "
+          f"{n_done} completed/duplicate", flush=True)
+
+    if args.trace is not None:
+        from repro import obs
+        obs.enable()
+
+    sched = TrialScheduler(queue, max_lanes=args.max_lanes, store=store,
+                           pack=args.pack, verbose=args.verbose)
+    t0 = time.perf_counter()
+    try:
+        while True:
+            sched.drain(max_results=args.limit or None)
+            if not args.daemon or (args.limit
+                                   and sched.stats.retired >= args.limit):
+                break
+            time.sleep(args.poll_seconds)
+    except KeyboardInterrupt:
+        print("serve: interrupted; store is resumable", flush=True)
+    wall = time.perf_counter() - t0
+
+    for res in sched.results:
+        print(f"  done {res.spec.key()}  acc={res.final_accuracy:.3f} "
+              f"rounds={res.rounds} engine={res.engine}", flush=True)
+    st = sched.stats
+    print(f"serve: retired {st.retired} trial(s) in {wall:.1f}s over "
+          f"{st.steps} step(s); mean occupancy={st.mean_occupancy:.2f} "
+          f"({args.max_lanes} lanes); store={args.out}", flush=True)
+
+    if args.trace is not None:
+        from repro import obs
+        from repro.obs.export import (trace_paths_for, write_chrome_trace,
+                                      write_metrics_jsonl)
+        obs.disable()
+        trace_path, metrics_path = trace_paths_for(
+            args.out, None if args.trace == "auto" else args.trace)
+        write_chrome_trace(trace_path)
+        n_rows = write_metrics_jsonl(metrics_path)
+        print(f"serve: trace -> {trace_path} ({len(obs.tracer.spans)} "
+              f"spans); metrics -> {metrics_path} ({n_rows} rows) — open "
+              "the trace at https://ui.perfetto.dev", flush=True)
+
+
+if __name__ == "__main__":
+    main()

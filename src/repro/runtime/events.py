@@ -136,6 +136,23 @@ class MergedEventQueue:
         self._count[ev.trial_ord] += 1
         heapq.heappush(self._heap, ev)
 
+    def drop_trial(self, trial_ord: int) -> int:
+        """Remove every pending event of a retired trial and return how
+        many were dropped.  The continuous-batching scheduler retires a
+        lane the moment its trial reaches target; without this the heap
+        would carry the retired trial's traffic forever (each stale event
+        popped and skipped one macro-step at a time).  The per-trial seq
+        counter is deliberately kept: ordinals are never reused, and a
+        monotone seq is what makes the (time, trial_ord, seq) order
+        total."""
+        n = self._count.get(trial_ord, 0)
+        if n:
+            self._heap = [ev for ev in self._heap
+                          if ev.trial_ord != trial_ord]
+            heapq.heapify(self._heap)
+            self._count[trial_ord] = 0
+        return n
+
     def count_for(self, trial_ord: int) -> int:
         return self._count.get(trial_ord, 0)
 

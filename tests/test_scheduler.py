@@ -1,0 +1,301 @@
+"""Continuous-batching trial scheduler (repro.experiments.scheduler).
+
+Pins the subsystem's two contracts:
+
+  * allocation determinism — ``LanePool`` hands out the lowest free lane,
+    never double-assigns, and admission order is the queue order no matter
+    how retirements interleave (property-tested with hypothesis);
+  * bit-parity — every trial drained through ``serve()`` (sync, async,
+    buffered, and mixed, with ``max_lanes`` < T forcing mid-flight
+    admission and retirement) is BIT-identical to an independent
+    ``FLServer.run()``: accuracies, costs, FedTune trajectories, dispatch
+    and staleness logs.
+
+Plus the satellites that enable it: ``MergedEventQueue.drop_trial``,
+the result store's O(1) completed-key cache, pow2-padded stacked eval
+bitmatch, the watched submissions file, and kill-mid-drain resume.
+"""
+
+import json
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+try:   # only the property tests need hypothesis; unit tests always run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.experiments import ResultStore, TrialSpec, run_trial, serve
+from repro.experiments.scheduler import LanePool, TrialQueue, TrialScheduler
+from repro.runtime.events import ARRIVAL, MergedEventQueue
+
+
+def tiny_spec(**kw):
+    base = dict(dataset="emnist", aggregator="fedavg", seed=0,
+                tuner="fedtune", m0=3, e0=1.0, rounds=3,
+                target_accuracy=0.99, batch_size=5, eval_points=128)
+    base.update(kw)
+    return TrialSpec(**base)
+
+
+def assert_trial_parity(base, vec):
+    """Round records must be identical: accuracies, FedTune (M, E)
+    trajectories, cost totals — and for event-driven (async/buffered)
+    trials, the full dispatch schedule and staleness sequence."""
+    assert base.history_acc == vec.history_acc
+    assert base.history_m == vec.history_m
+    assert base.history_e == vec.history_e
+    assert base.final_accuracy == vec.final_accuracy
+    assert (base.final_m, base.final_e) == (vec.final_m, vec.final_e)
+    np.testing.assert_allclose(base.cost, vec.cost, rtol=0, atol=0)
+    assert base.reached == vec.reached
+    assert base.rounds == vec.rounds
+    assert base.dispatch_log == vec.dispatch_log
+    assert base.staleness_log == vec.staleness_log
+
+
+# ---------------------------------------------------------------------------
+# LanePool: the page table
+# ---------------------------------------------------------------------------
+
+def test_lane_pool_alloc_release_reuse():
+    pool = LanePool(3)
+    assert pool.alloc("a") == 0
+    assert pool.alloc("b") == 1
+    assert pool.alloc("c") == 2
+    assert (pool.n_live, pool.n_free) == (3, 0)
+    assert pool.occupancy() == 1.0
+    assert pool.live_mask() == [True, True, True]
+    with pytest.raises(ValueError):
+        pool.alloc("d")                      # full
+    with pytest.raises(ValueError):
+        pool.alloc("a")                      # double admission
+    assert pool.release("b") == 1
+    assert pool.live_mask() == [True, False, True]
+    assert pool.live_keys() == ["a", "c"]
+    assert pool.alloc("d") == 1              # lowest free lane, reused
+    assert pool.lane_of("d") == 1
+    assert pool.key_of(1) == "d"
+    with pytest.raises(KeyError):
+        pool.release("b")                    # released twice
+    with pytest.raises(ValueError):
+        LanePool(0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(cap=st.integers(1, 6),
+           n_trials=st.integers(1, 20),
+           retire_choices=st.lists(st.integers(0, 10**6), max_size=64))
+    def test_lane_pool_invariants_under_interleaving(cap, n_trials,
+                                                     retire_choices):
+        """No double-assignment, alloc always hands out the LOWEST free
+        lane, and the admission sequence equals the queue order no matter
+        which live trial retires when."""
+        pending = deque(f"k{i}" for i in range(n_trials))
+        pool = LanePool(cap)
+        choices = iter(retire_choices)
+        admitted = []
+        while pending or pool.n_live:
+            while pending and pool.n_free:
+                key = pending.popleft()
+                free_before = [lane for lane in range(cap)
+                               if pool.key_of(lane) is None]
+                lane = pool.alloc(key)
+                assert lane == min(free_before)      # lowest-free policy
+                admitted.append(key)
+            # page table is a bijection: every live key holds exactly the
+            # lane that maps back to it
+            live = pool.live_keys()
+            assert len(live) == len(set(live)) == pool.n_live
+            for key in live:
+                assert pool.key_of(pool.lane_of(key)) == key
+            assert pool.n_live + pool.n_free == cap
+            # retire an arbitrary live trial (hypothesis picks which)
+            victim = live[next(choices, 0) % len(live)]
+            lane = pool.release(victim)
+            assert pool.key_of(lane) is None
+        assert admitted == [f"k{i}" for i in range(n_trials)]
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_lane_pool_invariants_under_interleaving():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# TrialQueue: dedup, resume set, watched submissions file
+# ---------------------------------------------------------------------------
+
+def test_trial_queue_dedup_and_completed():
+    done_key = tiny_spec(seed=2).key()
+    q = TrialQueue(specs=[tiny_spec(seed=0), tiny_spec(seed=1),
+                          tiny_spec(seed=0)],          # dup in the seed grid
+                   completed=[done_key])
+    assert (q.n_submitted, q.n_skipped) == (2, 1)
+    assert not q.submit(tiny_spec(seed=2))             # already completed
+    assert q.n_skipped == 2
+    assert len(q) == 2
+    first = q.pop()
+    assert first.key() == tiny_spec(seed=0).key()      # FIFO
+    q.mark_done(first.key())
+    assert not q.submit(tiny_spec(seed=0))             # done after the fact
+
+
+def test_trial_queue_watch_file(tmp_path):
+    path = tmp_path / "subs.jsonl"
+    q = TrialQueue(watch_path=str(path))
+    assert q.poll() == 0                               # absent file: no-op
+    with open(path, "w") as f:
+        f.write(json.dumps({"spec": tiny_spec(seed=0).to_dict()}) + "\n")
+        f.write("{not json\n")                          # malformed: skipped
+        f.write(json.dumps(tiny_spec(seed=1).to_dict()))  # torn tail
+    assert q.poll() == 1                # good line in; tail left for later
+    assert len(q) == 1
+    assert q.poll() == 0                # tail still incomplete
+    with open(path, "a") as f:
+        f.write("\n")                    # writer finishes the line
+        f.write(json.dumps({"spec": tiny_spec(seed=0).to_dict()}) + "\n")
+    assert q.poll() == 1                # tail retried; duplicate skipped
+    keys = [q.pop().key() for _ in range(2)]
+    assert keys == [tiny_spec(seed=0).key(), tiny_spec(seed=1).key()]
+
+
+# ---------------------------------------------------------------------------
+# MergedEventQueue.drop_trial: a retired trial's events must vanish
+# ---------------------------------------------------------------------------
+
+def test_merged_queue_drop_trial():
+    q = MergedEventQueue()
+    q.push(0, 1.0, ARRIVAL, client_id=1)
+    q.push(1, 0.5, ARRIVAL, client_id=2)
+    q.push(0, 2.0, ARRIVAL, client_id=3)
+    q.push(1, 3.0, ARRIVAL, client_id=4)
+    assert q.drop_trial(0) == 2
+    assert q.count_for(0) == 0
+    assert q.drop_trial(0) == 0          # idempotent
+    assert q.drop_trial(7) == 0          # never-admitted ordinal
+    popped = [(ev.trial_ord, ev.client_id) for ev in (q.pop(), q.pop())]
+    assert popped == [(1, 2), (1, 4)]    # survivor's order untouched
+    # the dropped trial's seq counter keeps counting: ordinals are never
+    # reused, so later pushes stay totally ordered
+    assert q.push(0, 9.0, ARRIVAL).seq == 2
+
+
+# ---------------------------------------------------------------------------
+# ResultStore: completed-key cache (no per-admission JSONL re-parse)
+# ---------------------------------------------------------------------------
+
+def test_store_completed_keys_parses_once(tmp_path, monkeypatch):
+    store = ResultStore(str(tmp_path / "r.jsonl"))
+    store.append({"key": "a", "status": "done"})
+    calls = {"n": 0}
+    orig = ResultStore.load
+
+    def counting_load(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(ResultStore, "load", counting_load)
+    assert store.completed_keys() == {"a"}
+    assert store.is_completed("a") and not store.is_completed("b")
+    assert calls["n"] == 1               # built once...
+    store.append({"key": "b", "status": "done"})
+    store.append({"key": "c", "status": "running"})   # not done: not a key
+    assert store.completed_keys() == {"a", "b"}
+    assert calls["n"] == 1               # ...kept current by append
+    store.clear()
+    assert store.completed_keys() == set()
+    assert calls["n"] == 2               # clear invalidates
+
+
+# ---------------------------------------------------------------------------
+# pow2-padded stacked eval: shape stability must not move a float
+# ---------------------------------------------------------------------------
+
+def test_evaluate_stacked_pad_pow2_bitmatch():
+    from repro.experiments.runner import build_server
+    from repro.federated.evaluation import _pow2_lanes, evaluate_stacked
+    assert [_pow2_lanes(n) for n in (0, 1, 2, 3, 5, 8)] == [1, 1, 2, 4, 8, 8]
+    srv = build_server(tiny_spec())
+    params = [srv.model.init(jax.random.PRNGKey(s)) for s in range(5)]
+    items = [(srv.model, srv.dataset, 128, p) for p in params]
+    assert evaluate_stacked(items, pad_pow2=True) == evaluate_stacked(items)
+
+
+# ---------------------------------------------------------------------------
+# serve(): bit-parity under mid-flight admission and retirement
+# ---------------------------------------------------------------------------
+
+def test_serve_sync_parity_midflight():
+    """max_lanes=2 over 6 sync trials with staggered round budgets: every
+    retirement admits a new trial into a half-live pool."""
+    specs = [tiny_spec(seed=s, rounds=1 + s % 3) for s in range(6)]
+    base = [run_trial(s) for s in specs]
+    got = serve(specs, max_lanes=2)
+    assert len(got) == 6
+    by_key = {r.spec.key(): r for r in got}
+    for b in base:
+        assert_trial_parity(b, by_key[b.spec.key()])
+    assert all(r.engine.startswith("serve-sync/") for r in got)
+
+
+def test_serve_event_parity_midflight():
+    """Async + buffered trials through the merged-queue engine with lane
+    churn: a retired trial's pending events are dropped and its ordinal
+    never reused, so survivors' dispatch/staleness logs stay bit-exact."""
+    specs = [tiny_spec(seed=s, rounds=1 + s % 3,
+                       mode="async" if s % 2 == 0 else "buffered")
+             for s in range(6)]
+    base = [run_trial(s) for s in specs]
+    got = serve(specs, max_lanes=2)
+    by_key = {r.spec.key(): r for r in got}
+    for b in base:
+        assert_trial_parity(b, by_key[b.spec.key()])
+    assert all(r.engine == "serve-events/batched" for r in got)
+
+
+def test_serve_mixed_modes_parity():
+    """One pool shared by sync AND event trials — the serving daemon's
+    actual shape."""
+    specs = ([tiny_spec(seed=s, rounds=1 + s) for s in range(3)]
+             + [tiny_spec(seed=3, rounds=2, mode="async"),
+                tiny_spec(seed=4, rounds=1, mode="buffered")])
+    base = [run_trial(s) for s in specs]
+    got = serve(specs, max_lanes=3)
+    by_key = {r.spec.key(): r for r in got}
+    for b in base:
+        assert_trial_parity(b, by_key[b.spec.key()])
+
+
+def test_scheduler_admission_order_and_stats():
+    specs = [tiny_spec(seed=s, rounds=1 + s % 2) for s in range(5)]
+    q = TrialQueue(specs=specs)
+    sched = TrialScheduler(q, max_lanes=2)
+    sched.drain()
+    st_ = sched.stats
+    assert (st_.admitted, st_.retired) == (5, 5)
+    assert [k for k, _ in st_.admission_log] == [s.key() for s in specs]
+    assert st_.steps > 0
+    assert 0.0 < st_.mean_occupancy <= 1.0
+    assert sched.pool.n_live == 0 and not q
+
+
+def test_serve_kill_and_resume(tmp_path):
+    """Kill mid-drain (max_results), resume over the same store: nothing
+    reruns, the union covers the grid, store keys stay unique."""
+    store = ResultStore(str(tmp_path / "serve.jsonl"))
+    specs = [tiny_spec(seed=s, rounds=1 + s % 2) for s in range(5)]
+    first = serve(specs, max_lanes=2, store=store, max_results=2)
+    # soft limit: the step that crosses it may retire one per live lane
+    assert 2 <= len(first) < 5
+    done = {r.spec.key() for r in first}
+    second = serve(specs, max_lanes=2, store=store)
+    assert {r.spec.key() for r in second} == {s.key() for s in specs} - done
+    keys = [r["key"] for r in store.load()]
+    assert len(keys) == 5 and len(set(keys)) == 5
+    # and a third invocation is a no-op: everything is already done
+    assert serve(specs, max_lanes=2, store=store) == []

@@ -55,6 +55,9 @@ def report(trace_path: str,
         lambda: {"calls": 0, "wall_ms": 0.0})
     lanes: Dict[int, Dict[str, float]] = defaultdict(
         lambda: {"t0": float("inf"), "t1": 0.0, "busy": 0.0})
+    # scheduler admit/retire instants: wall events sharing the trial's tid
+    # (the continuous-batching scheduler emits one of each per trial)
+    sched: Dict[int, Dict[str, Any]] = defaultdict(dict)
     for ev in events:
         # tolerate malformed events here: they still land in ``errors``
         # via the validator, and main() exits 2 on any violation
@@ -64,6 +67,11 @@ def report(trace_path: str,
             p = phases[ev.get("cat", "span")]
             p["calls"] += 1
             p["wall_ms"] += ev["dur"] / 1e3
+            if ev.get("name") in ("admit", "retire") and "tid" in ev:
+                args = ev.get("args") or {}
+                sched[ev["tid"]][f"{ev['name']}_ms"] = ev["ts"] / 1e3
+                if "lane" in args:
+                    sched[ev["tid"]]["pool_lane"] = args["lane"]
         elif (ev.get("pid") == VIRTUAL_PID and "tid" in ev
               and "ts" in ev and "dur" in ev):
             lane = lanes[ev["tid"]]
@@ -73,15 +81,19 @@ def report(trace_path: str,
                 lane["busy"] += ev["dur"]
 
     lane_rows: List[Dict[str, Any]] = []
-    for tid in sorted(lanes):
+    for tid in sorted(set(lanes) | set(sched)):
         lane = lanes[tid]
         span_us = lane["t1"] - lane["t0"]
-        lane_rows.append({
-            "track": track_names.get((VIRTUAL_PID, tid), f"tid {tid}"),
+        row = {
+            "track": track_names.get((VIRTUAL_PID, tid),
+                                     track_names.get((WALL_PID, tid),
+                                                     f"tid {tid}")),
             "t_sim_s": lane["t1"] / VIRTUAL_US_PER_S,
             "busy_s": lane["busy"] / VIRTUAL_US_PER_S,
             "occupancy": lane["busy"] / span_us if span_us > 0 else 0.0,
-        })
+        }
+        row.update(sched.get(tid, {}))
+        lane_rows.append(row)
 
     out: Dict[str, Any] = {
         "trace": trace_path,
@@ -116,6 +128,12 @@ def report(trace_path: str,
                                 if samples["pack_width"] else 0.0),
             "padding_waste": (1.0 - counters.get("pack_steps_real", 0.0)
                               / steps_pad if steps_pad else 0.0),
+            "mean_pool_occupancy": (sum(samples["pool_occupancy"])
+                                    / len(samples["pool_occupancy"])
+                                    if samples["pool_occupancy"] else None),
+            "mean_queue_depth": (sum(samples["queue_depth"])
+                                 / len(samples["queue_depth"])
+                                 if samples["queue_depth"] else None),
         }
     return out
 
@@ -128,17 +146,36 @@ def _print_tables(rep: Dict[str, Any]):
     for name, p in rep["phases"].items():
         print(f"  {name:<10} {int(p['calls']):>7} {p['wall_ms']:>10.2f}")
     if rep["lanes"]:
+        served = any("admit_ms" in lane for lane in rep["lanes"])
         print("\nvirtual-clock lanes")
-        print(f"  {'t_sim s':>9} {'busy s':>9} {'occup':>6}  track")
-        for lane in rep["lanes"]:
-            print(f"  {lane['t_sim_s']:>9.3g} {lane['busy_s']:>9.3g} "
-                  f"{lane['occupancy']:>6.1%}  {lane['track']}")
+        if served:
+            # scheduler drain view: pool lane + wall admit/retire instants
+            print(f"  {'t_sim s':>9} {'busy s':>9} {'occup':>6} "
+                  f"{'pool':>4} {'admit ms':>9} {'retire ms':>9}  track")
+            for lane in rep["lanes"]:
+                pool = lane.get("pool_lane")
+                adm, ret = lane.get("admit_ms"), lane.get("retire_ms")
+                print(f"  {lane['t_sim_s']:>9.3g} {lane['busy_s']:>9.3g} "
+                      f"{lane['occupancy']:>6.1%} "
+                      f"{pool if pool is not None else '-':>4} "
+                      f"{adm if adm is not None else float('nan'):>9.1f} "
+                      f"{ret if ret is not None else float('nan'):>9.1f}  "
+                      f"{lane['track']}")
+        else:
+            print(f"  {'t_sim s':>9} {'busy s':>9} {'occup':>6}  track")
+            for lane in rep["lanes"]:
+                print(f"  {lane['t_sim_s']:>9.3g} {lane['busy_s']:>9.3g} "
+                      f"{lane['occupancy']:>6.1%}  {lane['track']}")
     met = rep.get("metrics")
     if met:
         print("\nmetrics")
         print(f"  mean lanes live : {met['mean_lanes_live']:.2f}")
         print(f"  mean pack width : {met['mean_pack_width']:.2f}")
         print(f"  padding waste   : {met['padding_waste']:.1%}")
+        if met.get("mean_pool_occupancy") is not None:
+            print(f"  pool occupancy  : {met['mean_pool_occupancy']:.1%}")
+        if met.get("mean_queue_depth") is not None:
+            print(f"  mean queue depth: {met['mean_queue_depth']:.2f}")
         for name, calls in sorted(met["phase_calls"].items()):
             print(f"  phase calls     : {name} x{calls}")
         for name in ("staleness", "store_write_s"):
@@ -148,6 +185,7 @@ def _print_tables(rep: Dict[str, Any]):
                       f"p90={h['p90']:.4g} max={h['max']:.4g}")
         for name in ("sync_dispatched", "sync_dropouts", "sync_stragglers_cut",
                      "event_dispatched", "event_dropouts",
+                     "trials_admitted", "trials_retired",
                      "eval_fn_cache_hits", "eval_fn_cache_misses"):
             if name in met["counters"]:
                 print(f"  {name:<20}: {met['counters'][name]:g}")
