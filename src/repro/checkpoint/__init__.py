@@ -1,3 +1,6 @@
-from repro.checkpoint.checkpointer import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpointer import (load_checkpoint, load_snapshot,
+                                           restore_tree, save_checkpoint,
+                                           save_snapshot)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "save_snapshot",
+           "load_snapshot", "restore_tree"]

@@ -2,16 +2,41 @@
 
 Flattens the pytree with path-derived keys; restores into the same
 treedef.  Works for params, optimizer state, and FL server state.
+
+Two layers:
+
+``save_checkpoint``/``load_checkpoint`` — the original single-pair API
+(kept for existing callers; NOT crash-safe and not dtype-exact for
+extension dtypes).
+
+``save_snapshot``/``load_snapshot``/``restore_tree`` — the hardened
+serving-snapshot API (PR 9).  Crash-safety comes from a two-slot scheme:
+each save writes a ``.npz``/``.json`` pair into the OLDER of two slots
+(``<base>.a.*`` / ``<base>.b.*``) via temp files + atomic renames, never
+touching the newer slot — so a writer killed at ANY instant leaves at
+most one torn slot, and the loader (which validates json parse, npz
+readability, and a shared random nonce stored in both halves) falls back
+to the other slot, losing at most one snapshot generation.  This mirrors
+the JSONL store's torn-tail policy.  Dtype exactness comes from
+recording every leaf's dtype name in the json half: npz round-trips
+extension dtypes like bfloat16 as raw void bytes, so the loader re-views
+them (``ml_dtypes`` lookup) and ``restore_tree`` coerces each leaf back
+to its template's type (python/numpy scalars included).
 """
 
 from __future__ import annotations
 
 import json
+import os
 import pathlib
-from typing import Any
+import zipfile
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+_NONCE_KEY = "__nonce__"
+_SLOTS = (".a", ".b")
 
 
 def _key(path) -> str:
@@ -51,3 +76,132 @@ def load_checkpoint(path: str, like: Any):
     if path.with_suffix(".json").exists():
         meta = json.loads(path.with_suffix(".json").read_text())
     return restored, meta
+
+
+# ---------------------------------------------------------------------------
+# hardened serving snapshots (two-slot, torn-write tolerant, dtype-exact)
+# ---------------------------------------------------------------------------
+
+def _dtype_from_name(name: str) -> np.dtype:
+    """Resolve a recorded dtype name, including the ml_dtypes extension
+    types (bfloat16 etc.) that numpy alone does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _slot_paths(base, slot: str) -> Tuple[pathlib.Path, pathlib.Path]:
+    s = str(base) + slot
+    return pathlib.Path(s + ".npz"), pathlib.Path(s + ".json")
+
+
+def _read_slot(base, slot: str) -> Optional[Tuple[dict, dict]]:
+    """Validate one slot end to end; None on ANY defect (missing half,
+    unparseable json, truncated npz, nonce mismatch between halves)."""
+    npz_p, json_p = _slot_paths(base, slot)
+    if not (npz_p.exists() and json_p.exists()):
+        return None
+    try:
+        meta = json.loads(json_p.read_text())
+        nonce = meta["nonce"]
+        with np.load(npz_p) as data:
+            if _NONCE_KEY not in data.files:
+                return None
+            if bytes(data[_NONCE_KEY]).hex() != nonce:
+                return None
+            arrays = {k: data[k] for k in data.files if k != _NONCE_KEY}
+    except (OSError, ValueError, KeyError, EOFError, zipfile.BadZipFile):
+        # the defects a torn write can leave behind: unreadable file,
+        # unparseable json (ValueError covers JSONDecodeError), missing
+        # meta key, truncated or corrupt npz archive
+        return None
+    dtypes = meta.get("dtypes", {})
+    for k, arr in arrays.items():
+        name = dtypes.get(k)
+        if name and arr.dtype.name != name:
+            dt = _dtype_from_name(name)
+            arrays[k] = (arr.view(dt) if arr.dtype.itemsize == dt.itemsize
+                         else arr.astype(dt))
+    return arrays, meta
+
+
+def _fsync_write(path: pathlib.Path, writer) -> None:
+    with open(path, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def save_snapshot(path: str, tree: Any, *, step: int = 0,
+                  metadata: dict | None = None) -> str:
+    """Write one snapshot generation crash-safely and return the npz path.
+
+    The target slot is the stale one (invalid, absent, or lower step) —
+    the newest valid slot is never touched, so a kill mid-write costs at
+    most this generation.  Within the slot: temp files, fsync, then two
+    atomic renames (npz first; a kill between them leaves a nonce
+    mismatch the loader rejects)."""
+    base = pathlib.Path(path)
+    base.parent.mkdir(parents=True, exist_ok=True)
+    leaves: Dict[str, np.ndarray] = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, x: leaves.setdefault(_key(p), np.asarray(x)), tree)
+    assert _NONCE_KEY not in leaves, f"reserved leaf key {_NONCE_KEY}"
+    nonce = os.urandom(8).hex()
+    meta = {"step": int(step), "nonce": nonce,
+            "dtypes": {k: v.dtype.name for k, v in leaves.items()},
+            **(metadata or {})}
+
+    # pick the slot to overwrite: invalid/absent beats valid, lower step
+    # beats higher
+    def slot_step(slot: str) -> float:
+        got = _read_slot(base, slot)
+        return float(got[1].get("step", 0)) if got is not None else -np.inf
+    target = min(_SLOTS, key=slot_step)
+
+    npz_p, json_p = _slot_paths(base, target)
+    tmp_npz = pathlib.Path(str(base) + target + ".tmp.npz")
+    tmp_json = pathlib.Path(str(base) + target + ".tmp.json")
+    _fsync_write(tmp_npz, lambda f: np.savez(
+        f, **{_NONCE_KEY: np.frombuffer(bytes.fromhex(nonce), np.uint8)},
+        **leaves))
+    _fsync_write(tmp_json, lambda f: f.write(json.dumps(meta).encode()))
+    os.replace(tmp_npz, npz_p)
+    os.replace(tmp_json, json_p)
+    return str(npz_p)
+
+
+def load_snapshot(path: str) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Newest valid generation: (dtype-restored arrays by leaf key, meta).
+    Raises FileNotFoundError when no slot validates."""
+    base = pathlib.Path(path)
+    best = None
+    for slot in _SLOTS:
+        got = _read_slot(base, slot)
+        if got is not None and (best is None
+                                or got[1].get("step", 0)
+                                > best[1].get("step", 0)):
+            best = got
+    if best is None:
+        raise FileNotFoundError(f"no valid snapshot slot at {base}.{{a,b}}")
+    return best
+
+
+def restore_tree(arrays: Dict[str, np.ndarray], like: Any,
+                 prefix: str = "") -> Any:
+    """Rebuild a pytree shaped like ``like`` from ``load_snapshot``
+    arrays, coercing each leaf back to its template's type: jax arrays
+    stay jax (dtype preserved — no float64 downcast), numpy stays numpy,
+    python/numpy scalars come back as scalars of the template's type."""
+    def pick(p, t):
+        arr = arrays[prefix + _key(p)]
+        if isinstance(t, jax.Array):
+            return jax.numpy.asarray(arr)
+        if isinstance(t, np.ndarray):
+            return arr
+        if np.isscalar(t):
+            return type(t)(arr.item())
+        return arr
+    return jax.tree_util.tree_map_with_path(pick, like)

@@ -60,6 +60,12 @@ class TrialSpec:
                     vectorize like any others (the quantize->dequantize
                     round trip is a per-lane transform in the cohort
                     packers).
+      failure_rate— per-dispatch hard-failure hazard in [0, 1); nonzero
+                    arms the coordinator's retry/reassignment policy
+                    (runtime/engine.py). 0 keeps keys and results
+                    bit-identical to pre-failure runs.
+      churn       — fleet membership schedule "period:rate[:min_active]"
+                    (runtime/profiles.ChurnSchedule) or None.
 
     Execution-only fields (absent from ``key()`` because every backend is
     result-parity-equal, pinned in tests): ``client_exec``.
@@ -82,6 +88,8 @@ class TrialSpec:
     reduced: bool = True
     eval_points: int = 512
     lr: float = 0.03
+    failure_rate: float = 0.0           # per-dispatch hard-failure hazard
+    churn: Optional[str] = None         # "period:rate[:min_active]" schedule
 
     # ------------------------------------------------------------------
     def validate(self) -> "TrialSpec":
@@ -113,6 +121,12 @@ class TrialSpec:
         if self.rounds < 1 or self.m0 < 1 or self.e0 <= 0:
             raise ValueError(f"bad (rounds={self.rounds}, m0={self.m0}, "
                              f"e0={self.e0}); all must be positive")
+        if not 0.0 <= self.failure_rate < 1.0:
+            raise ValueError(f"bad failure_rate {self.failure_rate}; "
+                             "must be in [0, 1)")
+        if self.churn is not None:
+            from repro.runtime.profiles import ChurnSchedule
+            ChurnSchedule.from_string(self.churn)    # ValueError on bad spec
         return self
 
     # ------------------------------------------------------------------
@@ -135,6 +149,11 @@ class TrialSpec:
             parts.append(f"mu={self.prox_mu:g}")
         if self.compression:
             parts.append(f"comp={self.compression}")
+        # fault axes append only when enabled: pre-existing keys stay stable
+        if self.failure_rate:
+            parts.append(f"fail={self.failure_rate:g}")
+        if self.churn:
+            parts.append(f"churn={self.churn}")
         return "|".join(parts)
 
     def baseline_key(self) -> str:

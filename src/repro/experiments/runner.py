@@ -87,8 +87,8 @@ from repro.runtime.batched import (_pow2, _stack_streams, bucket_by_steps,
                                    cohort_scan, make_client_step,
                                    materialize_streams, note_pack_metrics)
 from repro.runtime.engine import EventDrivenRuntime, RuntimeConfig
-from repro.runtime.events import MergedEventQueue, TrialQueueView
-from repro.runtime.profiles import sample_fleet
+from repro.runtime.events import FAILURE, MergedEventQueue, TrialQueueView
+from repro.runtime.profiles import ChurnSchedule, sample_fleet
 
 ENGINES = ("vectorized", "sequential")
 PACKS = ("batched", "sharded")
@@ -144,8 +144,19 @@ def build_server(spec: TrialSpec) -> FLServer:
     tuner = (FedTune(FedTuneConfig(preference=Preference(*spec.preference)),
                      HyperParams(spec.m0, spec.e0))
              if spec.tuner == "fedtune" else FixedTuner())
-    fleet = (None if spec.het == "homogeneous"
-             else sample_fleet(spec.het, ds.n_clients, seed=spec.seed))
+    # a fleet exists iff the trial has any system heterogeneity OR a
+    # failure/churn model to hang onto it — a plain homogeneous trial keeps
+    # fleet=None so its selector/est_times behavior (and thus bit-parity
+    # with every earlier PR) is untouched
+    needs_fleet = (spec.het != "homogeneous" or spec.failure_rate > 0.0
+                   or spec.churn is not None)
+    fleet = (sample_fleet(spec.het, ds.n_clients, seed=spec.seed)
+             if needs_fleet else None)
+    if fleet is not None and spec.failure_rate > 0.0:
+        fleet.failure = np.full(ds.n_clients, spec.failure_rate)
+        fleet.failure_seed = spec.seed
+    if fleet is not None and spec.churn is not None:
+        fleet.churn = ChurnSchedule.from_string(spec.churn, seed=spec.seed)
     return FLServer(
         model, ds, get_aggregator(spec.aggregator), _optimizer_for(spec),
         CostModel(flops_per_example=flops, param_count=n_params),
@@ -833,6 +844,10 @@ class _EventEngine:
         self.merged = MergedEventQueue()
         self.by_ord: Dict[int, _EventTrial] = {}
         self.n_steps = 0
+        # ordinals are handed out monotonically and never reused — a
+        # snapshot restore repopulates by_ord with only the live ordinals,
+        # so len(by_ord) would hand a recycled ordinal to the next admit
+        self.next_ord = 0
 
     def admit(self, spec: TrialSpec) -> _EventTrial:
         """Bring one async/buffered trial live on the merged queue (its
@@ -842,7 +857,8 @@ class _EventEngine:
                 f"trial {spec.key()!r} is not an event-driven trial "
                 "(the merged-queue engine covers the async/buffered modes; "
                 "sync trials pack per round via run_vectorized)")
-        trial_ord = len(self.by_ord)
+        trial_ord = self.next_ord
+        self.next_ord += 1
         tr = _make_event_live(spec, self.merged, trial_ord)
         self.by_ord[trial_ord] = tr
         return tr
@@ -905,6 +921,11 @@ class _EventEngine:
                     stash.append(ev)   # defer: this trial already packed
                     continue
                 tr.eng.clock.advance_to(ev.time)
+                if ev.kind == FAILURE:  # hard failure: retry inline, refill
+                    tr.eng.handle_failure(tr.st, ev, queue=tr.view)
+                    tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,
+                                                  queue=tr.view)
+                    continue
                 fl = tr.eng.plan_event(tr.st, ev)
                 if fl is None:         # dropout: refill and keep collecting
                     tr.eng.fill_event_concurrency(tr.st, tr.eng.clock.now,

@@ -254,12 +254,16 @@ class TrialScheduler:
     def __init__(self, queue: TrialQueue, *, max_lanes: int = 4,
                  store=None, pack: str = "batched",
                  on_result: Optional[Callable[[TrialResult], None]] = None,
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 snapshot_path: Optional[str] = None,
+                 snapshot_every: int = 1):
         self.queue = queue
         self.pool = LanePool(max_lanes)
         self.store = store
         self.on_result = on_result
         self.verbose = verbose
+        self.snapshot_path = snapshot_path
+        self.snapshot_every = max(1, int(snapshot_every))
         self._pack, self._mesh = _resolve_sync_pack(pack)
         self._ev = _EventEngine()
         self._sync_live: List = []
@@ -267,6 +271,7 @@ class TrialScheduler:
         self._sync_steps = 0
         self.stats = ServeStats()
         self.results: List[TrialResult] = []
+        self.duplicates_suppressed = 0
         self._sync_engine = f"serve-sync/{self._pack}"
         self._event_engine = "serve-events/batched"
 
@@ -308,7 +313,13 @@ class TrialScheduler:
                        lane=lane, step=self.stats.steps,
                        reached=result.reached, rounds=result.rounds)
         if self.store is not None:
-            self.store.append(result.to_record())
+            if self.store.is_completed(spec.key()):
+                # restored-and-replayed macro-step: this trial retired
+                # during the replayed step BEFORE the kill, so its row is
+                # already in the store — appending again would duplicate it
+                self.duplicates_suppressed += 1
+            else:
+                self.store.append(result.to_record())
         self.results.append(result)
         if self.on_result is not None:
             self.on_result(result)
@@ -348,18 +359,78 @@ class TrialScheduler:
                     self._event_engine)
                 self._retire(tr.spec, res)
 
-    def drain(self, max_results: Optional[int] = None) -> List[TrialResult]:
+    # -- crash-safe snapshots -------------------------------------------
+    def snapshot(self, path: Optional[str] = None) -> Optional[str]:
+        """Serialize the full scheduler state (live trials, merged event
+        queue, lane table, trial queue, counters) at the current macro-
+        step boundary through the hardened two-slot checkpointer.  Call
+        only between steps — mid-step state (packed cohorts) is not
+        serialized.  Returns the written npz path."""
+        path = path or self.snapshot_path
+        if path is None:
+            return None
+        from repro.experiments.snapshot import snapshot_scheduler
+        with obs.span("snapshot", phase="snapshot", step=self.stats.steps,
+                      n_live=self.pool.n_live):
+            return snapshot_scheduler(self, path)
+
+    @classmethod
+    def restore(cls, path: str, *, store=None, pack: str = "batched",
+                on_result: Optional[Callable[[TrialResult], None]] = None,
+                watch_path: Optional[str] = None,
+                verbose: bool = False,
+                snapshot_every: int = 1) -> "TrialScheduler":
+        """A scheduler resumed from the newest valid snapshot at ``path``:
+        live trials replay the interrupted macro-step (at most one) and
+        the drain continues bit-identically to an uninterrupted serve.
+        The lane capacity comes from the snapshot.  Rows re-retired
+        during the replay are suppressed against ``store``
+        (``duplicates_suppressed`` counts them)."""
+        from repro.experiments.snapshot import restore_scheduler
+        queue = TrialQueue(watch_path=watch_path)
+        sched = cls(queue, store=store, pack=pack,
+                    on_result=on_result, verbose=verbose,
+                    snapshot_path=path, snapshot_every=snapshot_every)
+        with obs.span("restore", phase="snapshot"):
+            restore_scheduler(sched, path)
+        if verbose:
+            print(f"  serve: restored {sched.pool.n_live} live trials at "
+                  f"macro-step {sched.stats.steps} from {path}", flush=True)
+        return sched
+
+    def _maybe_snapshot(self):
+        if (self.snapshot_path is not None
+                and self.stats.steps % self.snapshot_every == 0):
+            self.snapshot()
+
+    def drain(self, max_results: Optional[int] = None,
+              max_steps: Optional[int] = None) -> List[TrialResult]:
         """Admit + step until the queue and the pool are both empty (or
-        ``max_results`` trials retired this invocation — the kill-mid-
-        drain hook).  Returns every result retired by THIS call."""
+        ``max_results`` trials retired / ``max_steps`` macro-steps run
+        this invocation — the kill-mid-drain hooks).  Returns every
+        result retired by THIS call.  With ``snapshot_path`` set, a
+        snapshot is written before every ``snapshot_every``-th step and
+        once after the drain completes — a kill at any instant loses at
+        most the macro-steps since the last boundary snapshot.  A
+        ``max_steps`` exit IS the simulated kill, so it deliberately
+        skips the final snapshot (resume must replay from the last
+        boundary, exactly as after a real crash)."""
         n0 = len(self.results)
+        steps0 = self.stats.steps
+        killed = False
         while True:
             if max_results is not None and len(self.results) - n0 >= max_results:
+                break
+            if max_steps is not None and self.stats.steps - steps0 >= max_steps:
+                killed = True      # simulated crash: no final snapshot
                 break
             self.admit_pending()
             if not self._sync_live and not self._event_live:
                 break
+            self._maybe_snapshot()
             self.step()
+        if not killed:
+            self.snapshot()  # final boundary (no-op without snapshot_path)
         return self.results[n0:]
 
 
@@ -367,15 +438,21 @@ def serve(trials: Union[TrialQueue, Sequence[TrialSpec]], *,
           max_lanes: int = 4, store=None, pack: str = "batched",
           on_result: Optional[Callable[[TrialResult], None]] = None,
           max_results: Optional[int] = None,
+          max_steps: Optional[int] = None,
+          snapshot_path: Optional[str] = None,
+          snapshot_every: int = 1,
           verbose: bool = False) -> List[TrialResult]:
     """Drain ``trials`` (a ``TrialQueue`` or a plain spec list) through a
     continuous-batching ``TrialScheduler`` with ``max_lanes`` lanes.  With
     a spec list and a ``store``, already-completed keys are skipped
     (resume).  Results come back in retirement order; each is appended to
-    the store as it retires."""
+    the store as it retires.  ``snapshot_path`` arms boundary snapshots
+    (see ``TrialScheduler.drain``)."""
     if not isinstance(trials, TrialQueue):
         completed = store.completed_keys() if store is not None else ()
         trials = TrialQueue(specs=trials, completed=completed)
     sched = TrialScheduler(trials, max_lanes=max_lanes, store=store,
-                           pack=pack, on_result=on_result, verbose=verbose)
-    return sched.drain(max_results=max_results)
+                           pack=pack, on_result=on_result, verbose=verbose,
+                           snapshot_path=snapshot_path,
+                           snapshot_every=snapshot_every)
+    return sched.drain(max_results=max_results, max_steps=max_steps)

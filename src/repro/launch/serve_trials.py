@@ -40,25 +40,29 @@ import json
 import time
 
 
-def serve_smoke_specs():
+def serve_smoke_specs(failure_rate: float = 0.0, churn: str | None = None):
     """The CI serve-smoke queue: 12 tiny trials whose round budgets are
     staggered (1..3) across sync, async, and buffered modes, so lanes
     retire at different times — exactly the drain shape continuous
     batching exists for (a fixed pack would idle up to 2/3 of its lanes
-    by the last round)."""
+    by the last round).  ``failure_rate``/``churn`` perturb every trial
+    with the fleet fault model (the chaos-smoke CI job serves the same
+    queue at 10% failures with churn)."""
     from repro.experiments import TrialSpec
     specs = []
     for i in range(6):
         specs.append(TrialSpec(
             dataset="emnist", aggregator="fedavg", seed=i, tuner="fedtune",
             m0=3, e0=1.0, rounds=1 + i % 3, target_accuracy=0.99,
-            batch_size=5, eval_points=128, mode="sync"))
+            batch_size=5, eval_points=128, mode="sync",
+            failure_rate=failure_rate, churn=churn))
     for i in range(6):
         specs.append(TrialSpec(
             dataset="emnist", aggregator="fedavg", seed=i, tuner="fedtune",
             m0=3, e0=1.0, rounds=1 + i % 3, target_accuracy=0.99,
             batch_size=5, eval_points=128,
-            mode="async" if i % 2 == 0 else "buffered"))
+            mode="async" if i % 2 == 0 else "buffered",
+            failure_rate=failure_rate, churn=churn))
     return specs
 
 
@@ -99,13 +103,34 @@ def main():
                          "JSON + metrics JSONL, paths derived from --out) "
                          "— shows the admit/retire drain and the "
                          "pool_occupancy gauge; bit-parity-neutral")
+    ap.add_argument("--failure-rate", type=float, default=0.0,
+                    metavar="P",
+                    help="per-dispatch hard-failure hazard applied to "
+                         "preset specs (coordinator retries/reassigns; "
+                         "0 = fault-free)")
+    ap.add_argument("--churn", default=None, metavar="SPEC",
+                    help="fleet churn schedule 'period:rate[:min_active]' "
+                         "applied to preset specs")
+    ap.add_argument("--snapshot", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="arm crash-safe boundary snapshots (two-slot, "
+                         "torn-write tolerant; PATH defaults to "
+                         "<out>.snap).  If a valid snapshot exists the "
+                         "daemon RESUMES from it, replaying at most one "
+                         "macro-step with duplicate store rows suppressed")
+    ap.add_argument("--snapshot-every", type=int, default=1, metavar="N",
+                    help="snapshot every N macro-steps (1 = every step)")
+    ap.add_argument("--kill-after-steps", type=int, default=0, metavar="K",
+                    help="exit abruptly (code 3, NO final snapshot) after "
+                         "K macro-steps — the chaos-smoke crash injector")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
     from repro.experiments import ResultStore
     from repro.experiments.scheduler import TrialQueue, TrialScheduler
 
-    specs = serve_smoke_specs() if args.preset == "serve-smoke" else []
+    specs = (serve_smoke_specs(args.failure_rate, args.churn)
+             if args.preset == "serve-smoke" else [])
     if not specs and not args.watch:
         ap.error("nothing to serve: give --preset and/or --watch "
                  "(or --submit to produce a submissions file)")
@@ -121,23 +146,58 @@ def main():
     store = ResultStore(args.out)
     if args.no_resume:
         store.clear()
-    queue = TrialQueue(specs=specs, watch_path=args.watch,
-                       completed=store.completed_keys())
-    queue.poll()
-    n_done = queue.n_skipped
-    print(f"serve: {queue.n_submitted} trial(s) queued; resume: skipping "
-          f"{n_done} completed/duplicate", flush=True)
+    snap_path = None
+    if args.snapshot is not None:
+        snap_path = (args.out + ".snap" if args.snapshot == "auto"
+                     else args.snapshot)
 
     if args.trace is not None:
         from repro import obs
         obs.enable()
 
-    sched = TrialScheduler(queue, max_lanes=args.max_lanes, store=store,
-                           pack=args.pack, verbose=args.verbose)
+    sched = None
+    if snap_path is not None and not args.no_resume:
+        try:
+            sched = TrialScheduler.restore(
+                snap_path, store=store, pack=args.pack,
+                watch_path=args.watch, verbose=args.verbose,
+                snapshot_every=args.snapshot_every)
+        except FileNotFoundError:
+            pass           # no valid slot yet: cold start below
+    if sched is not None:
+        # resume: the snapshot's queue/lane/trial state is authoritative;
+        # preset specs are re-offered (deduped against its seen/done sets)
+        # and the store's completed keys merged for duplicate suppression
+        for k in store.completed_keys():
+            sched.queue.mark_done(k)
+        for s in specs:
+            sched.queue.submit(s)
+        print(f"serve: resumed from {snap_path} at macro-step "
+              f"{sched.stats.steps} ({sched.pool.n_live} live trial(s), "
+              f"{len(sched.queue)} queued)", flush=True)
+    else:
+        queue = TrialQueue(specs=specs, watch_path=args.watch,
+                           completed=store.completed_keys())
+        queue.poll()
+        print(f"serve: {queue.n_submitted} trial(s) queued; resume: "
+              f"skipping {queue.n_skipped} completed/duplicate", flush=True)
+        sched = TrialScheduler(queue, max_lanes=args.max_lanes, store=store,
+                               pack=args.pack, verbose=args.verbose,
+                               snapshot_path=snap_path,
+                               snapshot_every=args.snapshot_every)
     t0 = time.perf_counter()
     try:
         while True:
-            sched.drain(max_results=args.limit or None)
+            steps_before = sched.stats.steps
+            sched.drain(max_results=args.limit or None,
+                        max_steps=args.kill_after_steps or None)
+            if (args.kill_after_steps and sched.stats.steps - steps_before
+                    >= args.kill_after_steps):
+                print(f"serve: simulated crash after "
+                      f"{args.kill_after_steps} macro-step(s); re-invoke "
+                      f"with --snapshot to resume from the last boundary",
+                      flush=True)
+                raise SystemExit(3)
             if not args.daemon or (args.limit
                                    and sched.stats.retired >= args.limit):
                 break
@@ -150,9 +210,12 @@ def main():
         print(f"  done {res.spec.key()}  acc={res.final_accuracy:.3f} "
               f"rounds={res.rounds} engine={res.engine}", flush=True)
     st = sched.stats
+    dupes = (f"; {sched.duplicates_suppressed} replayed row(s) suppressed"
+             if sched.duplicates_suppressed else "")
     print(f"serve: retired {st.retired} trial(s) in {wall:.1f}s over "
           f"{st.steps} step(s); mean occupancy={st.mean_occupancy:.2f} "
-          f"({args.max_lanes} lanes); store={args.out}", flush=True)
+          f"({sched.pool.capacity} lanes); store={args.out}{dupes}",
+          flush=True)
 
     if args.trace is not None:
         from repro import obs

@@ -57,7 +57,8 @@ from repro.federated.aggregation import (FedBuffAggregator,
 from repro.federated.compression import upload_factor
 from repro.federated.evaluation import eval_due
 from repro.federated.server import FLResult, FLServer, RoundRecord
-from repro.runtime.events import ARRIVAL, DROPOUT, EventQueue, VirtualClock
+from repro.runtime.events import (ARRIVAL, DROPOUT, FAILURE, EventQueue,
+                                  VirtualClock)
 from repro.runtime.profiles import Fleet, homogeneous_fleet
 
 
@@ -90,6 +91,14 @@ class RuntimeConfig:
     client_exec: str = "sequential"    # sync client-execution backend:
                                        # sequential | batched | sharded
     system_seed: int = 0               # availability/dropout stream
+    # failure policy (only exercised when the fleet has a failure model —
+    # Fleet.has_failures() gates every code path, so fault-free runs stay
+    # bit-identical to the pre-failure runtime):
+    max_retries: int = 2               # retries after a hard-failed dispatch
+    retry_backoff: float = 0.25        # virtual-time backoff before a retry,
+                                       # as a fraction of the failed
+                                       # attempt's comp+trans time (scale-
+                                       # free: backoff tracks device speed)
 
     def __post_init__(self):
         # fail at construction time (e.g. sweep-grid expansion), not rounds
@@ -102,6 +111,10 @@ class RuntimeConfig:
             raise ValueError(
                 f"unknown client_exec {self.client_exec!r}; valid backends: "
                 + ", ".join(CLIENT_EXECS))
+        if self.max_retries < 0 or self.retry_backoff < 0.0:
+            raise ValueError(
+                f"bad failure policy (max_retries={self.max_retries}, "
+                f"retry_backoff={self.retry_backoff}); both must be >= 0")
 
 
 class SyncRoundPlan(NamedTuple):
@@ -117,6 +130,14 @@ class SyncRoundPlan(NamedTuple):
     trans: List[float]      # per-client simulated transfer time
     included: List[int]     # indices into ``active`` that aggregate
     round_time: float       # virtual-clock advance for the round
+    # failure/retry extension (PR 9) — empty tuples unless the fleet has a
+    # failure model, so fault-free plans are unchanged:
+    offsets: Tuple[float, ...] = ()       # per-slot dispatch delay (a retry
+                                          # slot starts after its failed
+                                          # predecessor's detection+backoff)
+    failed: Tuple[int, ...] = ()          # indices into active that failed
+    failed_trans: Tuple[float, ...] = ()  # their down-only transfer time
+                                          # (the upload never happened)
 
     @property
     def train_cids(self) -> List[int]:
@@ -132,6 +153,7 @@ class _InFlight:
     n_examples: int
     comp_time: float
     trans_time: float
+    attempt: int = 0       # 0 = first dispatch; bumps per failure retry
 
 
 @dataclass
@@ -249,6 +271,31 @@ class EventDrivenRuntime:
         d = float(self.fleet.dropout[cid])
         return d > 0.0 and self.sys_rng.random() < d
 
+    def _is_active(self, cid: int, t: float) -> bool:
+        """Churn membership at virtual time ``t``.  Checked BEFORE any
+        availability draw so inactive clients consume no rng — churn-free
+        fleets short-circuit to True and the rng stream is untouched."""
+        return self.fleet.is_active(cid, t)
+
+    def _pick_replacement(self, tried: set, t: float) -> Optional[int]:
+        """Select a fresh client for a failed slot's retry: not yet tried
+        this round, active under churn, and passing an availability draw.
+        Same bounded-retry shape as the sync availability loop; consumes
+        the selector/server rng and the system rng ONLY on the gated
+        failure path."""
+        srv = self.srv
+        for _ in range(5):
+            if len(tried) >= srv.dataset.n_clients:
+                return None
+            k = min(srv.dataset.n_clients, len(tried) + 1)
+            for cid in (int(c) for c in srv.selector.select(k)):
+                if cid in tried:
+                    continue
+                tried.add(cid)
+                if self._is_active(cid, t) and self._available(cid):
+                    return cid
+        return None
+
     # ------------------------------------------------------------------
     def run(self, params=None) -> FLResult:
         """Run the trial to target accuracy or the round budget under the
@@ -274,9 +321,13 @@ class EventDrivenRuntime:
         round — the single source of randomness ordering for the engine's
         sync loop AND the multi-trial sweep runner."""
         srv, rt = self.srv, self.rt
+        t0 = self.clock.now
+        if obs.enabled() and self.fleet.churn is not None:
+            obs.registry.sample("fleet_size", self.fleet.n_active(t0))
         m = min(hp.m, srv.dataset.n_clients)
         participants = [int(c) for c in srv.selector.select(m)]
-        active = [c for c in participants if self._available(c)]
+        active = [c for c in participants
+                  if self._is_active(c, t0) and self._available(c)]
         # replace unavailable clients (bounded retries) so sync rounds
         # run at the same effective M as the async modes hold in flight
         tried = set(participants)
@@ -290,7 +341,7 @@ class EventDrivenRuntime:
                 if cid in tried:
                     continue
                 tried.add(cid)
-                if self._available(cid):
+                if self._is_active(cid, t0) and self._available(cid):
                     active.append(cid)
 
         # inclusion is a pure function of fleet timing, client sizes,
@@ -302,6 +353,60 @@ class EventDrivenRuntime:
         trans = [self._trans_time(c) for c in active]
         total = [c + t for c, t in zip(comp, trans)]
         survived = [not self._drops(c) for c in active]
+
+        # hard failures + retry/reassignment (gated: zero rng draws and an
+        # unchanged plan when the fleet has no failure model).  A failed
+        # dispatch is detected at its would-be arrival (offset+comp+trans);
+        # within the retry budget a FRESH client is selected and dispatched
+        # after a backoff, its slot offset by the detection time — chained
+        # failures walk the attempt counter until max_retries.  Like
+        # dropouts, failed slots do not extend round_time themselves (only
+        # through their replacements); their wasted work IS charged, in
+        # account_sync_round.
+        offsets = [0.0] * len(active)
+        attempts = [0] * len(active)
+        failed: List[int] = []
+        failed_trans: List[float] = []
+        if self.fleet.has_failures():
+            i = 0
+            while i < len(active):
+                cid = active[i]
+                if self.fleet.fails(cid, t0 + offsets[i], attempts[i]):
+                    survived[i] = False
+                    failed.append(i)
+                    failed_trans.append(
+                        self.fleet.trans_time(cid, self._down, 0.0))
+                    detect = offsets[i] + comp[i] + trans[i]
+                    if obs.enabled():
+                        obs.registry.inc("client_failures")
+                        obs.record("failure", phase="failure",
+                                   trial=self.trace_label,
+                                   virtual=(t0 + offsets[i], t0 + detect),
+                                   cid=int(cid), attempt=attempts[i])
+                    if attempts[i] < rt.max_retries:
+                        backoff = rt.retry_backoff * (comp[i] + trans[i])
+                        rep = self._pick_replacement(tried, t0)
+                        if rep is not None:
+                            n = int(srv.dataset.client_sizes[rep])
+                            active.append(rep)
+                            sizes.append(n)
+                            comp.append(self._comp_time(rep, n, hp.e))
+                            trans.append(self._trans_time(rep))
+                            offsets.append(detect + backoff)
+                            attempts.append(attempts[i] + 1)
+                            survived.append(not self._drops(rep))
+                            if obs.enabled():
+                                obs.registry.inc("retries_scheduled")
+                                obs.record(
+                                    "retry", phase="failure",
+                                    trial=self.trace_label,
+                                    virtual=(t0 + detect,
+                                             t0 + detect + backoff),
+                                    cid=int(rep),
+                                    attempt=attempts[i] + 1)
+                i += 1
+            total = [o + c + t
+                     for o, c, t in zip(offsets, comp, trans)]
 
         # deadline: absolute budget or completion quantile over the cohort
         deadline = np.inf
@@ -330,23 +435,36 @@ class EventDrivenRuntime:
                 max(total) if total else 0.0)
         if obs.enabled():
             obs.registry.inc("sync_dispatched", len(active))
-            obs.registry.inc("sync_dropouts", len(active) - sum(survived))
+            obs.registry.inc("sync_dropouts",
+                             len(active) - sum(survived) - len(failed))
             obs.registry.inc("sync_stragglers_cut",
                              sum(survived) - len(included))
         return SyncRoundPlan(active=active, sizes=sizes, comp=comp,
                              trans=trans, included=included,
-                             round_time=round_time)
+                             round_time=round_time,
+                             offsets=tuple(offsets), failed=tuple(failed),
+                             failed_trans=tuple(failed_trans))
 
     @obs.traced("account_sync_round", phase="account")
     def account_sync_round(self, plan: SyncRoundPlan,
                            hp: HyperParams):
         """Charge one planned sync round to the cost model: critical-path
         times over the included arrivals, exact work/traffic sums over the
-        dispatched cohort."""
+        dispatched cohort.  Failed attempts charge their wasted work too:
+        their compute extends the CompT critical path, their down-link
+        transfer (the dispatch WAS consumed; the upload never happened)
+        extends TransT, and their load is already covered by the
+        dispatched-cohort sums (sizes include failed slots; down counts
+        every active slot, up only included ones)."""
+        comp_time = max((plan.comp[i] for i in plan.included), default=0.0)
+        trans_time = max((plan.trans[i] for i in plan.included), default=0.0)
+        if plan.failed:
+            comp_time = max([comp_time]
+                            + [plan.comp[i] for i in plan.failed])
+            trans_time = max([trans_time] + list(plan.failed_trans))
         return self.srv.cost_model.add_timed_round(
-            comp_time=max((plan.comp[i] for i in plan.included), default=0.0),
-            trans_time=max((plan.trans[i] for i in plan.included),
-                           default=0.0),
+            comp_time=comp_time,
+            trans_time=trans_time,
             comp_load=self._c1 * hp.e * float(sum(plan.sizes)),
             trans_load=(self._down * len(plan.active)
                         + self._up * len(plan.included)),
@@ -463,23 +581,68 @@ class EventDrivenRuntime:
         return st
 
     def dispatch_event(self, st: EventLoopState, cid: int, now: float,
-                       queue=None):
+                       queue=None, attempt: int = 0):
         """Send the current global model to one client: snapshot
         ``st.params``/``st.version`` into an ``_InFlight`` record, draw the
         client's mid-round dropout (system rng), and schedule its
-        arrival/dropout event at ``now + comp + trans``."""
+        arrival/dropout/failure event at ``now + comp + trans``.
+
+        The dropout draw is kept even when the fleet's failure model then
+        overrides the outcome — the system rng stream must stay aligned
+        with the failure-free run (bit-parity contract); the failure draw
+        itself is stateless (hash of seed/cid/time/attempt) and consumes
+        nothing.  ``attempt`` counts retries of the same logical dispatch
+        (handle_failure re-dispatches with attempt+1)."""
         queue = self.queue if queue is None else queue
         srv = self.srv
         n = int(srv.dataset.client_sizes[cid])
         comp = self._comp_time(cid, n, st.hp.e)
         trans = self._trans_time(cid)
         st.inflight[cid] = _InFlight(cid, st.params, st.version, st.hp.e,
-                                     n, comp, trans)
+                                     n, comp, trans, attempt=attempt)
         st.dispatch_log.append((float(now), int(cid), st.version))
         kind = DROPOUT if self._drops(cid) else ARRIVAL
+        if self.fleet.has_failures() and self.fleet.fails(cid, now, attempt):
+            kind = FAILURE
         if obs.enabled():
             obs.registry.inc("event_dispatched")
         queue.push(now + comp + trans, kind, client_id=cid)
+
+    def handle_failure(self, st: EventLoopState, ev, queue=None):
+        """Coordinator half of a FAILURE event: the dispatch was consumed
+        (download + the client's compute happened) but the update never
+        came back.  Charge the wasted work into the pending window —
+        down-link traffic and compute load like a dropout, plus the failed
+        attempt's comp time and its down-only transfer into the window's
+        comp/trans split (a failure is detected at its would-be arrival,
+        so its whole span sits on the window's critical path) — then, if
+        the retry budget allows, re-dispatch the SAME client after a
+        virtual-time backoff proportional to the failed attempt.  The
+        refill pass that follows (caller's fill_event_concurrency) is what
+        reassigns the slot to a fresh client when the retry budget is
+        spent."""
+        queue = self.queue if queue is None else queue
+        fl = st.inflight.pop(ev.client_id)
+        down_trans = self.fleet.trans_time(fl.client_id, self._down, 0.0)
+        st.pend_comp_load += self._c1 * fl.e * fl.n_examples
+        st.pend_trans_load += self._down
+        st.pend_comp.append(fl.comp_time)
+        st.pend_trans.append(down_trans)
+        if obs.enabled():
+            obs.registry.inc("client_failures")
+            obs.record("failure", phase="failure", trial=self.trace_label,
+                       virtual=(ev.time - fl.comp_time - fl.trans_time,
+                                ev.time),
+                       cid=fl.client_id, attempt=fl.attempt)
+        if fl.attempt < self.rt.max_retries:
+            backoff = self.rt.retry_backoff * (fl.comp_time + fl.trans_time)
+            if obs.enabled():
+                obs.registry.inc("retries_scheduled")
+                obs.record("retry", phase="failure", trial=self.trace_label,
+                           virtual=(ev.time, ev.time + backoff),
+                           cid=fl.client_id, attempt=fl.attempt + 1)
+            self.dispatch_event(st, fl.client_id, ev.time + backoff,
+                                queue, attempt=fl.attempt + 1)
 
     def fill_event_concurrency(self, st: EventLoopState, now: float,
                                queue=None):
@@ -491,6 +654,8 @@ class EventDrivenRuntime:
         queue = self.queue if queue is None else queue
         srv = self.srv
         target = min(st.hp.m, srv.dataset.n_clients)
+        if obs.enabled() and self.fleet.churn is not None:
+            obs.registry.sample("fleet_size", self.fleet.n_active(now))
         for _ in range(5):               # availability retry passes
             need = target - len(st.inflight)
             if need <= 0:
@@ -501,6 +666,10 @@ class EventDrivenRuntime:
             for cid in candidates:
                 if len(st.inflight) >= target:
                     return
+                # churn membership first — an absent client consumes no
+                # availability draw, keeping the rng stream churn-free
+                if not self._is_active(cid, now):
+                    continue
                 if self._available(cid):
                     self.dispatch_event(st, cid, now, queue)
         # deadlock guard: nothing in flight and nothing queued means the
@@ -651,6 +820,10 @@ class EventDrivenRuntime:
                 and not st.reached:
             ev = self.queue.pop()
             self.clock.advance_to(ev.time)
+            if ev.kind == FAILURE:           # hard failure: retry, refill
+                self.handle_failure(st, ev)
+                self.fill_event_concurrency(st, self.clock.now)
+                continue
             fl = self.plan_event(st, ev)
             if fl is None:                   # dropout: refill and move on
                 self.fill_event_concurrency(st, self.clock.now)

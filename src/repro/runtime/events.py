@@ -33,6 +33,12 @@ from typing import Dict, List
 # event kinds
 ARRIVAL = "arrival"          # a client's update reaches the server
 DROPOUT = "dropout"          # a client died mid-round; its work is lost
+FAILURE = "failure"          # the dispatch was consumed but the update never
+                             # returns: the client (or its link) hard-failed.
+                             # Distinct from DROPOUT — a dropout's work is
+                             # merely lost at the cutoff, a failure triggers
+                             # the coordinator's retry/reassignment policy
+                             # (EventDrivenRuntime.handle_failure).
 
 
 @dataclass(order=True)

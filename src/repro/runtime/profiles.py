@@ -21,9 +21,95 @@ Named profiles (``--het <name>``):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from functools import lru_cache
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
+
+
+def hash01(*ints: int) -> float:
+    """Stateless uniform draw in [0, 1) from a tuple of non-negative ints.
+
+    Failure and churn decisions must be pure functions of the virtual
+    clock: the sync planner, the async event loop, and the buffered event
+    loop all ask "does client k fail at time t?" at DIFFERENT points in
+    their sequential rng streams, so consuming the shared ``sys_rng``
+    would desynchronize the engines (and break the failure-rate-0
+    bit-parity contract the moment a rate goes nonzero).  A seeded-hash
+    draw keyed on (seed, cid, time, attempt) gives every engine the same
+    answer with zero stream consumption."""
+    seq = np.random.SeedSequence(list(ints))  # noqa: REPRO004 -- entropy is the explicit int tuple, not process state
+    return float(seq.generate_state(1)[0] / 2**32)
+
+
+def _time_bits(t: float) -> int:
+    """The virtual instant as hashable entropy (exact float64 bits, so two
+    engines asking about the same instant agree to the last ulp)."""
+    return int(np.float64(t).view(np.uint64))
+
+
+@dataclass(frozen=True)
+class ChurnSchedule:
+    """Deterministic fleet membership over virtual time (clients joining
+    and leaving between rounds).
+
+    Time is cut into epochs of ``period`` virtual seconds; within an
+    epoch membership is frozen (churn happens BETWEEN rounds, not inside
+    a client's dispatch->arrival window).  Epoch 0 is full — a trial's
+    first round sees the whole fleet, so a schedule only perturbs later
+    rounds.  In every later epoch each client is away with probability
+    ``rate``, drawn by the stateless ``hash01`` on (seed, cid, epoch) —
+    a pure function of virtual time, consuming no rng stream, so sync
+    and event engines agree bit-for-bit.  ``min_active`` clients are
+    guaranteed present (the lowest absent ids are forced back in) so a
+    harsh schedule can never empty the fleet under the selector."""
+    period: float
+    rate: float
+    seed: int = 0
+    min_active: int = 1
+
+    def __post_init__(self):
+        assert self.period > 0, "churn period must be positive"
+        assert 0.0 <= self.rate < 1.0, "churn rate must be in [0, 1)"
+
+    def epoch_of(self, t: float) -> int:
+        return int(t // self.period)
+
+    def active_mask(self, n_clients: int, t: float) -> np.ndarray:
+        return _churn_mask(self, n_clients, self.epoch_of(t))
+
+    @classmethod
+    def from_string(cls, text: str, *, seed: int = 0) -> "ChurnSchedule":
+        """Parse the TrialSpec encoding ``"period:rate[:min_active]"``
+        (e.g. ``"5000:0.3"``)."""
+        parts = str(text).split(":")
+        if len(parts) not in (2, 3):
+            raise ValueError(
+                f"bad churn spec {text!r}; expected 'period:rate' or "
+                "'period:rate:min_active'")
+        period, rate = float(parts[0]), float(parts[1])
+        min_active = int(parts[2]) if len(parts) == 3 else 1
+        if period <= 0 or not 0.0 <= rate < 1.0 or min_active < 1:
+            raise ValueError(
+                f"bad churn spec {text!r}; need period > 0, "
+                "0 <= rate < 1, min_active >= 1")
+        return cls(period=period, rate=rate, seed=seed,
+                   min_active=min_active)
+
+
+@lru_cache(maxsize=512)
+def _churn_mask(schedule: ChurnSchedule, n_clients: int,
+                epoch: int) -> np.ndarray:
+    if epoch == 0:
+        return np.ones(n_clients, dtype=bool)
+    mask = np.array([hash01(schedule.seed, cid, epoch) >= schedule.rate
+                     for cid in range(n_clients)])
+    need = schedule.min_active - int(mask.sum())
+    if need > 0:
+        absent = np.flatnonzero(~mask)
+        mask[absent[:need]] = True
+    mask.setflags(write=False)     # cached: callers must not mutate
+    return mask
 
 
 @dataclass(frozen=True)
@@ -42,6 +128,8 @@ class HeterogeneityProfile:
     speed_jitter: float = 0.0     # lognormal sigma multiplied onto speed
     availability: float = 1.0     # P(client answers a dispatch)
     dropout: float = 0.0          # P(client dies mid-round; work lost)
+    failure: float = 0.0          # P(a dispatch hard-fails; update never
+                                  # returns — triggers coordinator retry)
 
     def __post_init__(self):
         total = sum(c.weight for c in self.classes)
@@ -87,10 +175,54 @@ class Fleet:
     dropout: np.ndarray       # (K,) P(dies mid-round)
     ref_flops_per_s: float = 1.0   # unit rates keep times in cost units
     ref_bytes_per_s: float = 1.0
+    # --- failure/churn model (PR 9: fault-tolerant elastic serving) -----
+    failure: Optional[np.ndarray] = None     # (K,) per-dispatch hazard
+    failure_seed: int = 0                    # hash01 domain separation
+    failure_fn: Optional[Callable[[int, float, int], bool]] = None
+    #   scripted override (tests/faultlib.py): fails(cid, t, attempt)
+    churn: Optional[ChurnSchedule] = None    # membership over virtual time
 
     @property
     def n_clients(self) -> int:
         return len(self.speed)
+
+    # -- failure model --------------------------------------------------
+    def has_failures(self) -> bool:
+        """Gate: every failure code path in the engines is skipped — and
+        draws nothing — unless this is true, which is what keeps the
+        fault-free path bit-identical to the pre-failure runtime."""
+        if self.failure_fn is not None:
+            return True
+        return self.failure is not None and bool(np.any(self.failure > 0.0))
+
+    def fails(self, cid: int, t: float, attempt: int = 0) -> bool:
+        """Does attempt ``attempt`` dispatched to ``cid`` at virtual time
+        ``t`` hard-fail?  Stateless (hash01 on the exact float64 time
+        bits) so every engine consuming the same dispatch instant agrees
+        without touching any sequential rng stream."""
+        if self.failure_fn is not None:
+            return bool(self.failure_fn(int(cid), float(t), int(attempt)))
+        if self.failure is None:
+            return False
+        p = float(self.failure[cid])
+        if p <= 0.0:
+            return False
+        return hash01(self.failure_seed, int(cid), _time_bits(t),
+                      int(attempt)) < p
+
+    # -- churn ----------------------------------------------------------
+    def is_active(self, cid: int, t: float) -> bool:
+        """Is ``cid`` a fleet member at virtual time ``t``?  Engines check
+        this BEFORE any availability draw so inactive clients consume no
+        rng (churn-free runs stay bit-identical)."""
+        if self.churn is None:
+            return True
+        return bool(self.churn.active_mask(self.n_clients, t)[cid])
+
+    def n_active(self, t: float) -> int:
+        if self.churn is None:
+            return self.n_clients
+        return int(self.churn.active_mask(self.n_clients, t).sum())
 
     def comp_time(self, cid: int, flops: float) -> float:
         """Virtual seconds to run ``flops`` on client ``cid``."""
@@ -139,6 +271,9 @@ def sample_fleet(profile: "HeterogeneityProfile | str", n_clients: int,
         down_bw=bw.astype(np.float64),
         availability=np.full(n_clients, profile.availability),
         dropout=np.full(n_clients, profile.dropout),
+        failure=(np.full(n_clients, profile.failure)
+                 if profile.failure > 0.0 else None),
+        failure_seed=seed,
     )
 
 

@@ -1,0 +1,206 @@
+"""Deterministic fault scripting for the chaos tests (tests only).
+
+A ``FaultPlan`` scripts WHAT goes wrong and WHEN, entirely on the virtual
+clock and the scheduler's macro-step counter, so every chaos interleaving
+is a pure function of its seed:
+
+  * client failures — either a hazard rate (the production stateless-hash
+    model, reached through ``TrialSpec.failure_rate``) or an exact script
+    installed as ``Fleet.failure_fn`` ("client c's dispatches hard-fail
+    while t is inside [lo, hi), for its first k attempts");
+  * fleet churn — a ``ChurnSchedule`` spec string (``"period:rate"``);
+  * coordinator kills — a sequence of per-incarnation macro-step budgets
+    after which the serving daemon dies mid-drain (the same
+    ``drain(max_steps=...)`` break the CLI's ``--kill-after-steps`` uses,
+    which deliberately skips the final boundary snapshot).
+
+``serve_with_kills`` is the harness: it drains one queue through as many
+scheduler incarnations as the plan has kills, restoring each successor
+from the two-slot snapshot, and returns the final store rows for parity
+asserts against a single uninterrupted serve.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.experiments import ResultStore, TrialSpec
+from repro.experiments.scheduler import TrialQueue, TrialScheduler
+from repro.runtime.profiles import Fleet
+
+
+# ---------------------------------------------------------------------------
+# scripted per-client failure windows (engine-level tests)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FailureWindow:
+    """Client ``cid`` hard-fails any dispatch whose failure check lands in
+    ``[lo, hi)`` virtual seconds, but only for attempts < ``max_attempt``
+    (so a retry can be scripted to succeed)."""
+    cid: int
+    lo: float = 0.0
+    hi: float = np.inf
+    max_attempt: int = 10**9
+
+    def matches(self, cid: int, t: float, attempt: int) -> bool:
+        return (cid == self.cid and self.lo <= t < self.hi
+                and attempt < self.max_attempt)
+
+
+def scripted_failure_fn(windows: Sequence[FailureWindow]):
+    """A ``Fleet.failure_fn`` that fails exactly the scripted windows."""
+    ws = tuple(windows)
+
+    def fn(cid: int, t: float, attempt: int) -> bool:
+        return any(w.matches(cid, t, attempt) for w in ws)
+
+    return fn
+
+
+def install_failures(fleet: Fleet, windows: Sequence[FailureWindow]) -> Fleet:
+    """Mutate ``fleet`` in place to fail exactly the scripted windows
+    (``failure_fn`` overrides any hazard array) and return it."""
+    fleet.failure_fn = scripted_failure_fn(windows)
+    return fleet
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+_CHURN_MENU = (None, "8:0.2", "15:0.3", "12:0.4:2", "20:0.15")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """One seeded chaos scenario over a served queue.
+
+    ``kill_steps`` are PER-INCARNATION macro-step budgets: ``(3, 5)``
+    means the first coordinator dies after 3 macro-steps, its restored
+    successor dies after 5 more, and the third incarnation drains to
+    completion.  A zero budget is skipped (a coordinator that dies before
+    stepping never wrote a newer snapshot, so it is indistinguishable
+    from the previous kill)."""
+    failure_rate: float = 0.0
+    churn: Optional[str] = None
+    kill_steps: Tuple[int, ...] = ()
+    snapshot_every: int = 1
+    seed: int = 0
+
+    @classmethod
+    def random(cls, seed: int, *, max_kills: int = 3,
+               max_budget: int = 8) -> "FaultPlan":
+        """A plan drawn deterministically from ``seed`` — the fallback
+        "strategy" when hypothesis is unavailable, and the scenario
+        decoder when it is (hypothesis supplies the seed)."""
+        rng = np.random.default_rng(seed)
+        rate = float(rng.choice([0.0, 0.05, 0.1, 0.2, 0.3]))
+        churn = _CHURN_MENU[int(rng.integers(len(_CHURN_MENU)))]
+        n_kills = int(rng.integers(0, max_kills + 1))
+        kills = tuple(int(k) for k in rng.integers(1, max_budget + 1,
+                                                   size=n_kills))
+        every = int(rng.choice([1, 1, 2, 3]))
+        return cls(failure_rate=rate, churn=churn, kill_steps=kills,
+                   snapshot_every=every, seed=seed)
+
+    def perturb(self, spec: TrialSpec) -> TrialSpec:
+        """The spec with this plan's failure/churn knobs applied."""
+        return replace(spec, failure_rate=self.failure_rate,
+                       churn=self.churn)
+
+
+# ---------------------------------------------------------------------------
+# the kill/restore harness
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ChaosOutcome:
+    """What one ``serve_with_kills`` run produced."""
+    store: ResultStore
+    sched: TrialScheduler                 # the final incarnation
+    incarnations: int = 1
+    duplicates_suppressed: int = 0
+    rows: List[dict] = field(default_factory=list)
+    steps_executed: List[int] = field(default_factory=list)  # per incarnation
+
+    def rows_sans_wall(self) -> List[dict]:
+        """Store rows with the volatile wall-clock field dropped — the
+        bit-parity comparison unit."""
+        out = []
+        for d in self.rows:
+            d = dict(d)
+            d.pop("wall", None)
+            out.append(d)
+        return out
+
+
+def _read_rows(path: str) -> List[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def serve_with_kills(specs: Sequence[TrialSpec], plan: FaultPlan,
+                     tmp_path, *, max_lanes: int = 3,
+                     pack: str = "batched") -> ChaosOutcome:
+    """Drain ``specs`` through ``len(plan.kill_steps) + 1`` scheduler
+    incarnations, each successor restored from the two-slot snapshot the
+    previous one left at its last boundary.  The store accumulates across
+    incarnations exactly as the JSONL file would across real daemon
+    restarts."""
+    store = ResultStore(str(tmp_path / f"chaos_{plan.seed}.jsonl"))
+    snap = str(tmp_path / f"chaos_{plan.seed}.snap")
+    sched = TrialScheduler(
+        TrialQueue(specs=list(specs), completed=store.completed_keys()),
+        max_lanes=max_lanes, store=store, pack=pack,
+        snapshot_path=snap, snapshot_every=plan.snapshot_every)
+    executed: List[int] = []
+    dead: List[TrialScheduler] = []      # incarnations that were killed
+    for budget in plan.kill_steps:
+        if budget <= 0:
+            continue
+        before = sched.stats.steps
+        sched.drain(max_steps=budget)
+        executed.append(sched.stats.steps - before)
+        if not sched.pool.n_live and not sched.queue:
+            break            # fully drained (final snapshot written)
+        # the coordinator dies HERE — no final snapshot was written for a
+        # max_steps exit, so the successor replays from the last boundary
+        dead.append(sched)
+        sched = TrialScheduler.restore(snap, store=store, pack=pack,
+                                       snapshot_every=plan.snapshot_every)
+        for key in store.completed_keys():
+            sched.queue.mark_done(key)
+    before = sched.stats.steps
+    sched.drain()
+    executed.append(sched.stats.steps - before)
+    dupes = (sum(s.duplicates_suppressed for s in dead)
+             + sched.duplicates_suppressed)
+    return ChaosOutcome(store=store, sched=sched,
+                        incarnations=len(dead) + 1,
+                        duplicates_suppressed=dupes,
+                        rows=_read_rows(store.path),
+                        steps_executed=executed)
+
+
+def serve_uninterrupted(specs: Sequence[TrialSpec], tmp_path, *,
+                        max_lanes: int = 3, pack: str = "batched",
+                        tag: str = "ref") -> ChaosOutcome:
+    """The fault-free-coordinator reference: same queue, same lane count,
+    no kills, no snapshots (snapshots must be write-only observers)."""
+    store = ResultStore(str(tmp_path / f"{tag}.jsonl"))
+    sched = TrialScheduler(
+        TrialQueue(specs=list(specs), completed=store.completed_keys()),
+        max_lanes=max_lanes, store=store, pack=pack)
+    sched.drain()
+    return ChaosOutcome(store=store, sched=sched,
+                        rows=_read_rows(store.path))

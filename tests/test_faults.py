@@ -1,0 +1,427 @@
+"""Fault model + hardened checkpointer (PR 9: fault-tolerant serving).
+
+Pins the fault subsystem's contracts below the scheduler:
+
+  * the failure/churn draws are STATELESS pure functions of the virtual
+    clock (``hash01``) — a fleet with the fault model armed but never
+    firing is bit-identical to one without it (zero rng consumption);
+  * sync retry/reassignment — a failed cohort slot is detected at its
+    virtual arrival instant, backed off, reassigned to a fresh client
+    (which can itself fail, chaining), and its wasted CompT/TransT is
+    charged to the round cost;
+  * event retry — a FAILURE event charges the wasted work and
+    re-dispatches the SAME client after backoff with attempt+1;
+  * churn — epoch-based membership on the virtual clock, epoch 0 full,
+    ``min_active`` floor, inactive clients invisible to selection;
+  * ``TrialSpec`` knobs — key stability at defaults, validation;
+  * the two-slot snapshot checkpointer — dtype-exact round-trips
+    (bfloat16 included), torn-write fallback to the previous generation.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:   # only the property tests need hypothesis; unit tests always run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from faultlib import FailureWindow, install_failures, scripted_failure_fn
+from repro.checkpoint import load_snapshot, restore_tree, save_snapshot
+from repro.configs.paper_models import MLPConfig
+from repro.core import CostModel
+from repro.data.synthetic import DataSpec, make_dataset
+from repro.experiments import TrialSpec, run_trial, serve
+from repro.federated import FLConfig, FLServer, get_aggregator
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime import RuntimeConfig, sample_fleet
+from repro.runtime.profiles import ChurnSchedule, hash01
+
+
+def small_dataset(seed=1):
+    return make_dataset(DataSpec(
+        name="ft_test", n_classes=4, shape=(12,), n_train_clients=24,
+        n_test_clients=8, size_log_mean=2.5, size_log_std=0.5, seed=seed))
+
+
+def mk_server(*, rt=None, fleet=None, max_rounds=3, m=5, e=2.0):
+    ds = small_dataset()
+    model = build_model(MLPConfig(name="mlp_ft", in_dim=12, hidden=(16,),
+                                  n_classes=4))
+    n_params = sum(p.size for p in jax.tree.leaves(
+        model.init(jax.random.PRNGKey(0))))
+    return FLServer(
+        model, ds, get_aggregator("fedavg"),
+        get_optimizer("sgd", 0.05, momentum=0.9),
+        CostModel(flops_per_example=2 * n_params, param_count=n_params),
+        FLConfig(m=m, e=e, batch_size=4, target_accuracy=0.99,
+                 max_rounds=max_rounds, eval_points=128),
+        fleet=fleet, runtime_config=rt)
+
+
+def tiny_spec(**kw):
+    base = dict(dataset="emnist", aggregator="fedavg", seed=0,
+                tuner="fedtune", m0=3, e0=1.0, rounds=2,
+                target_accuracy=0.99, batch_size=5, eval_points=128)
+    base.update(kw)
+    return TrialSpec(**base)
+
+
+def assert_result_parity(a, b):
+    assert a.reached_target == b.reached_target
+    assert a.rounds == b.rounds
+    assert a.final_accuracy == b.final_accuracy
+    assert a.total_cost.as_tuple() == b.total_cost.as_tuple()
+    assert [r.accuracy for r in a.history] == [r.accuracy for r in b.history]
+    assert a.sim_time == b.sim_time
+    assert a.dispatch_log == b.dispatch_log
+    assert a.staleness_log == b.staleness_log
+
+
+FAIL_FIRST = [FailureWindow(cid=c, max_attempt=1) for c in range(24)]
+
+
+# ---------------------------------------------------------------------------
+# the stateless draw
+# ---------------------------------------------------------------------------
+
+def test_hash01_deterministic_and_uniform():
+    assert hash01(1, 2, 3) == hash01(1, 2, 3)
+    assert hash01(1, 2, 3) != hash01(1, 2, 4)
+    draws = [hash01(0, i) for i in range(2000)]
+    assert all(0.0 <= d < 1.0 for d in draws)
+    assert 0.4 < float(np.mean(draws)) < 0.6
+
+
+def test_fleet_failure_draw_is_stateless():
+    fleet = sample_fleet("homogeneous", 8, seed=3)
+    assert not fleet.has_failures()
+    assert not fleet.fails(0, 1.0)               # unarmed: never fails
+    fleet.failure = np.full(8, 0.5)
+    assert fleet.has_failures()
+    # same (cid, t, attempt) always agrees; different attempt re-draws
+    draws = [fleet.fails(2, 3.75, 0) for _ in range(5)]
+    assert len(set(draws)) == 1
+    hits = sum(fleet.fails(c, t * 0.1, a)
+               for c in range(8) for t in range(100) for a in range(2))
+    assert 0.35 < hits / 1600 < 0.65             # ~the armed hazard
+    fleet.failure = np.zeros(8)
+    assert not fleet.has_failures()              # rate 0 == unarmed
+    fleet.failure_fn = scripted_failure_fn(
+        [FailureWindow(cid=1, lo=2.0, hi=4.0)])
+    assert fleet.has_failures()                  # script overrides hazard
+    assert fleet.fails(1, 3.0) and not fleet.fails(1, 4.0)
+    assert not fleet.fails(0, 3.0)
+
+
+def test_churn_schedule_membership():
+    sch = ChurnSchedule(period=10.0, rate=0.5, seed=7, min_active=2)
+    assert sch.active_mask(16, 3.0).all()        # epoch 0: everyone
+    m1 = sch.active_mask(16, 15.0)
+    assert m1.sum() >= 2                         # min_active floor
+    np.testing.assert_array_equal(m1, sch.active_mask(16, 19.9))  # frozen
+    assert ChurnSchedule(period=10.0, rate=0.5, seed=8,
+                         min_active=2).active_mask(16, 15.0).sum() != 16
+    # brutal rate: the floor forces the lowest absent ids back in
+    harsh = ChurnSchedule(period=5.0, rate=0.999, seed=0, min_active=3)
+    assert harsh.active_mask(10, 12.0).sum() == 3
+
+
+def test_churn_from_string():
+    sch = ChurnSchedule.from_string("12:0.4:2", seed=5)
+    assert (sch.period, sch.rate, sch.seed, sch.min_active) == (12.0, 0.4, 5, 2)
+    assert ChurnSchedule.from_string("8:0.2").min_active == 1
+    for bad in ("12", "0:0.5", "10:1.5", "10:0.5:0", "a:b"):
+        with pytest.raises(ValueError):
+            ChurnSchedule.from_string(bad)
+
+
+def test_runtime_config_retry_validation():
+    assert RuntimeConfig().max_retries == 2
+    with pytest.raises(ValueError):
+        RuntimeConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        RuntimeConfig(retry_backoff=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# armed-but-silent fault model must not move a float
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async", "buffered"])
+def test_never_firing_failure_fn_is_bit_identical(mode):
+    """``has_failures()`` is true (the failure code paths all run) but no
+    dispatch ever fails: the result must be bit-identical to a fleet with
+    no fault model at all — the checks consume zero rng."""
+    base = mk_server(rt=RuntimeConfig(mode=mode),
+                     fleet=sample_fleet("stragglers", 24, seed=3)).run()
+    armed_fleet = install_failures(sample_fleet("stragglers", 24, seed=3),
+                                   [])           # empty script: never fires
+    assert armed_fleet.has_failures()
+    armed = mk_server(rt=RuntimeConfig(mode=mode), fleet=armed_fleet).run()
+    assert_result_parity(base, armed)
+
+
+def test_zero_rate_spec_parity_and_key_stability():
+    """failure_rate=0.0 / churn=None are the defaults: same trial key, and
+    the run is bit-identical to a spec that never heard of faults."""
+    plain, explicit = tiny_spec(), tiny_spec(failure_rate=0.0, churn=None)
+    assert plain.key() == explicit.key()
+    assert "fail=" not in plain.key() and "churn=" not in plain.key()
+    a, b = run_trial(plain), run_trial(explicit)
+    assert a.history_acc == b.history_acc
+    np.testing.assert_allclose(a.cost, b.cost, rtol=0, atol=0)
+    # non-default knobs DO enter the key (distinct trials in the store)
+    assert "fail=0.2" in tiny_spec(failure_rate=0.2).key()
+    assert "churn=8:0.1" in tiny_spec(churn="8:0.1").key()
+
+
+def test_spec_fault_knob_validation():
+    with pytest.raises(ValueError):
+        tiny_spec(failure_rate=1.0).validate()
+    with pytest.raises(ValueError):
+        tiny_spec(failure_rate=-0.1).validate()
+    with pytest.raises(ValueError):
+        tiny_spec(churn="nope").validate()
+    tiny_spec(failure_rate=0.5, churn="10:0.2").validate()
+
+
+# ---------------------------------------------------------------------------
+# sync retry/reassignment
+# ---------------------------------------------------------------------------
+
+def test_sync_failure_retries_and_charges_cost():
+    """Every selected client's first attempt fails; each failed slot is
+    reassigned to a fresh client whose attempt-1 dispatch succeeds.  The
+    round completes with a full cohort and the wasted work is charged."""
+    rt = RuntimeConfig(mode="sync")
+    base = mk_server(rt=rt, fleet=sample_fleet("homogeneous", 24,
+                                               seed=3)).run()
+    fleet = install_failures(sample_fleet("homogeneous", 24, seed=3),
+                             FAIL_FIRST)
+    failed = mk_server(rt=rt, fleet=fleet).run()
+    assert failed.rounds == base.rounds          # rounds survive failures
+    assert len(failed.history) == len(base.history)
+    # wasted dispatches cost load and virtual time on top of the baseline
+    # (the critical-path maxima are over a DIFFERENT replacement cohort,
+    # so only the additive load sums are strictly ordered)
+    assert failed.total_cost.comp_l > base.total_cost.comp_l
+    assert failed.total_cost.trans_l > base.total_cost.trans_l
+    assert failed.sim_time > base.sim_time
+    for rec in failed.history:
+        assert rec.m == 5                        # cohort refilled every round
+
+
+def test_sync_failure_without_retries_shrinks_cohort():
+    """max_retries=0: a failed slot is simply lost (still charged), the
+    round aggregates the survivors."""
+    fleet = install_failures(sample_fleet("homogeneous", 24, seed=3),
+                             [FailureWindow(cid=c) for c in range(24)])
+    res = mk_server(rt=RuntimeConfig(mode="sync", max_retries=0),
+                    fleet=fleet, max_rounds=2).run()
+    assert res.rounds == 2                       # round survives 100% failure
+    assert all(r.n_updates == 0 for r in res.history)
+
+
+def test_sync_chained_retries_give_up_at_max():
+    """Clients fail unconditionally: each slot chains retries until
+    max_retries is exhausted, then the round proceeds without it."""
+    fleet = install_failures(sample_fleet("homogeneous", 24, seed=3),
+                             [FailureWindow(cid=c) for c in range(24)])
+    res = mk_server(rt=RuntimeConfig(mode="sync", max_retries=2),
+                    fleet=fleet, max_rounds=1).run()
+    base = mk_server(rt=RuntimeConfig(mode="sync"),
+                     fleet=sample_fleet("homogeneous", 24, seed=3),
+                     max_rounds=1).run()
+    assert res.history[0].n_updates == 0         # nobody ever survived
+    # 5 initial + 5*2 chained retries all charged their compute
+    assert res.total_cost.comp_l > 2 * base.total_cost.comp_l
+
+
+# ---------------------------------------------------------------------------
+# event-loop retry (async / buffered)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["async", "buffered"])
+def test_event_failure_redispatches_same_client(mode):
+    rt = RuntimeConfig(mode=mode)
+    base = mk_server(rt=rt,
+                     fleet=sample_fleet("homogeneous", 24, seed=3)).run()
+    fleet = install_failures(sample_fleet("homogeneous", 24, seed=3),
+                             FAIL_FIRST)
+    failed = mk_server(rt=rt, fleet=fleet).run()
+    assert failed.rounds == base.rounds
+    # every first dispatch died and was re-dispatched: the log doubles
+    assert len(failed.dispatch_log) > len(base.dispatch_log)
+    first_cids = [c for _, c, _ in base.dispatch_log[:5]]   # initial M=5
+    retried = [c for _, c, _ in failed.dispatch_log]
+    for cid in first_cids:                       # same client retried
+        assert retried.count(cid) >= 2
+    assert failed.total_cost.comp_l > base.total_cost.comp_l
+    assert failed.sim_time > base.sim_time
+
+
+def test_event_failure_gives_up_at_max_retries():
+    """Every dispatch before virtual t=40000 (past the fault-free run's
+    whole horizon) dies: retry chains are abandoned at max_retries and
+    the slots reassigned, until the outage window closes and arrivals
+    resume."""
+    outage = 40000.0
+    fleet = install_failures(sample_fleet("homogeneous", 24, seed=3),
+                             [FailureWindow(cid=c, hi=outage)
+                              for c in range(24)])
+    base = mk_server(rt=RuntimeConfig(mode="async"),
+                     fleet=sample_fleet("homogeneous", 24, seed=3),
+                     max_rounds=2).run()
+    res = mk_server(rt=RuntimeConfig(mode="async", max_retries=1),
+                    fleet=fleet, max_rounds=2).run()
+    assert res.rounds == 2                       # outage survived
+    # the outage burned many dispatches before the first one could land
+    assert len(res.dispatch_log) > len(base.dispatch_log)
+    assert res.sim_time > outage > base.sim_time
+    assert len(res.staleness_log) == len(base.staleness_log)
+
+
+# ---------------------------------------------------------------------------
+# churn through the engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async", "buffered"])
+def test_churn_runs_and_preserves_round_structure(mode):
+    fleet = sample_fleet("homogeneous", 24, seed=3)
+    fleet.churn = ChurnSchedule(period=5.0, rate=0.5, seed=1, min_active=4)
+    res = mk_server(rt=RuntimeConfig(mode=mode), fleet=fleet).run()
+    assert res.rounds == 3
+    assert len(res.history) == 3
+
+
+def test_serve_parity_under_faults():
+    """The tentpole contract: trials with failures AND churn drained
+    through the scheduler are bit-identical to standalone runs."""
+    specs = [tiny_spec(seed=s, rounds=1 + s % 2, failure_rate=0.25,
+                       churn="15:0.4",
+                       mode=("sync", "async", "buffered")[s % 3])
+             for s in range(4)]
+    base = {s.key(): run_trial(s) for s in specs}
+    for got in serve(specs, max_lanes=2):
+        b = base[got.spec.key()]
+        assert b.history_acc == got.history_acc
+        assert b.final_accuracy == got.final_accuracy
+        np.testing.assert_allclose(b.cost, got.cost, rtol=0, atol=0)
+        assert b.dispatch_log == got.dispatch_log
+        assert b.staleness_log == got.staleness_log
+
+
+# ---------------------------------------------------------------------------
+# hardened checkpointer: dtype-exact round-trip, torn-write fallback
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(4, 3)), dtype=jnp.bfloat16),
+        "b": jnp.asarray(rng.normal(size=(3,)), dtype=jnp.float32),
+        "n64": rng.normal(size=(2, 2)),              # np float64
+        "step": int(rng.integers(1000)),
+        "lr": float(rng.normal()),
+        "acc": np.float64(rng.normal()),
+    }
+
+
+def assert_tree_roundtrip(tree, arrays):
+    back = restore_tree(arrays, tree)
+    for k, v in tree.items():
+        r = back[k]
+        assert type(r) is type(v), (k, type(r), type(v))
+        if isinstance(v, (jnp.ndarray, np.ndarray)):
+            assert r.dtype == v.dtype, k
+            np.testing.assert_array_equal(np.asarray(r, np.float64),
+                                          np.asarray(v, np.float64))
+        else:
+            assert r == v, k
+
+
+def test_snapshot_roundtrip_preserves_dtypes(tmp_path):
+    tree = _tree()
+    save_snapshot(str(tmp_path / "s"), tree, step=1, metadata={"tag": "x"})
+    arrays, meta = load_snapshot(str(tmp_path / "s"))
+    assert (meta["step"], meta["tag"]) == (1, "x")
+    assert arrays["w"].dtype.name == "bfloat16"      # not void bytes
+    assert_tree_roundtrip(tree, arrays)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10**6))
+    def test_snapshot_roundtrip_property(tmp_path_factory, seed):
+        tmp = tmp_path_factory.mktemp("snapprop")
+        tree = _tree(seed)
+        save_snapshot(str(tmp / f"s{seed}"), tree, step=seed)
+        arrays, _ = load_snapshot(str(tmp / f"s{seed}"))
+        assert_tree_roundtrip(tree, arrays)
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_snapshot_roundtrip_property(tmp_path, seed):
+        tree = _tree(seed)
+        save_snapshot(str(tmp_path / "s"), tree, step=seed)
+        arrays, _ = load_snapshot(str(tmp_path / "s"))
+        assert_tree_roundtrip(tree, arrays)
+
+
+def test_snapshot_two_slots_keep_previous_generation(tmp_path):
+    base = str(tmp_path / "s")
+    save_snapshot(base, {"v": np.arange(3)}, step=1)
+    save_snapshot(base, {"v": np.arange(3) + 10}, step=2)
+    arrays, meta = load_snapshot(base)
+    assert meta["step"] == 2                         # newest wins
+    np.testing.assert_array_equal(arrays["v"], np.arange(3) + 10)
+    # both generations exist on disk: gen 1 was never touched by save 2
+    slots = sorted(p.name for p in tmp_path.iterdir())
+    assert slots == ["s.a.json", "s.a.npz", "s.b.json", "s.b.npz"]
+
+
+def test_snapshot_torn_npz_falls_back(tmp_path):
+    base = str(tmp_path / "s")
+    save_snapshot(base, {"v": np.arange(3)}, step=1)
+    newest = save_snapshot(base, {"v": np.arange(3) + 10}, step=2)
+    # tear the newest npz mid-write (truncate to half)
+    raw = open(newest, "rb").read()
+    open(newest, "wb").write(raw[:len(raw) // 2])
+    arrays, meta = load_snapshot(base)
+    assert meta["step"] == 1                         # previous generation
+    np.testing.assert_array_equal(arrays["v"], np.arange(3))
+    # the NEXT save overwrites the torn slot, not the surviving one
+    save_snapshot(base, {"v": np.arange(3) + 20}, step=3)
+    arrays, meta = load_snapshot(base)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(arrays["v"], np.arange(3) + 20)
+
+
+def test_snapshot_nonce_mismatch_falls_back(tmp_path):
+    """A kill between the two renames publishes a new npz with the OLD
+    json: the nonce check rejects the mismatched pair."""
+    base = str(tmp_path / "s")
+    save_snapshot(base, {"v": np.arange(3)}, step=1)
+    npz2 = save_snapshot(base, {"v": np.arange(3) + 10}, step=2)
+    meta_path = npz2[:-len(".npz")] + ".json"
+    meta = json.loads(open(meta_path).read())
+    meta["nonce"] = "00" * 8
+    open(meta_path, "w").write(json.dumps(meta))
+    assert load_snapshot(base)[1]["step"] == 1
+
+
+def test_snapshot_no_valid_slot_raises(tmp_path):
+    base = str(tmp_path / "s")
+    with pytest.raises(FileNotFoundError):
+        load_snapshot(base)
+    save_snapshot(base, {"v": np.arange(3)}, step=1)
+    npz = str(tmp_path / "s.a.npz")
+    open(npz, "wb").write(b"junk")
+    with pytest.raises(FileNotFoundError):
+        load_snapshot(base)
