@@ -1,38 +1,187 @@
 """Kernel micro-benchmarks: wall time of the jnp reference paths (the CPU
 executable analogues; the Pallas kernels themselves target TPU and are
-validated in interpret mode by tests)."""
+validated in interpret mode by tests).
+
+The fed_reduce section is the PR-10 contract check: the fused
+normalize+quantize+segment-sum+base dispatch vs the pre-fusion
+separate-call sequence (per-trial int8 round trip, per-trial T=1 reduce)
+over the same packed cohort, verified bit-identical, timed, and compared
+against the ``roofline.kernels`` analytic byte model — at a measured host
+stream bandwidth and analytically for TPU_V5E.  It also quotes the cost
+model's CompT/TransT for an M=1,000,000 cohort drawn from a K=10,000,000
+``VirtualFleet`` (no (K,) array ever exists — the point of client-state
+virtualization).  Emits one ``BENCH {json}`` line (sweep_engine.py's
+convention) that CI asserts on and uploads.
+
+Run standalone:  PYTHONPATH=src:. python benchmarks/kernel_bench.py
+                 [--json kernel_bench.json]
+"""
 
 from __future__ import annotations
 
+import functools
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import BenchSettings, emit
+from repro.kernels import ops as kernel_ops
 from repro.kernels import ref
+from repro.roofline.hardware import TPU_V5E
+from repro.roofline.kernels import fed_reduce_traffic
 
 KEY = jax.random.PRNGKey(0)
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    jax.block_until_ready(fn(*args))          # one warmup, all leaves
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn(*args)
-        jax.tree.leaves(out)[0].block_until_ready()
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main(settings: BenchSettings):
-    # fed_aggregate: the per-round server reduction
+@functools.partial(jax.jit, static_argnames=("leaf_sizes",))
+def _roundtrip_rows(rows, gref, leaf_sizes):
+    """The pre-fusion standalone quantize round trip over one trial's
+    rows (what ``compress_delta_lanes`` dispatched per lane group)."""
+    seg = jnp.zeros(rows.shape[0], jnp.int32)
+    return ref._quant_rows(rows, seg, gref[None, :], None, leaf_sizes)
+
+
+def _measure_stream_gbs() -> float:
+    """Effective host stream bandwidth: read+write of a 64MB f32 array."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        16 * 1024 * 1024).astype(np.float32))
+    add = jax.jit(lambda v: v + 1.0)
+    us = _time(add, x, n=10)
+    return (2 * x.nbytes) / (us * 1e-6) / 1e9
+
+
+def bench_fed_reduce(t: int = 8, per: int = 16, n: int = 4096,
+                     json_path=None) -> dict:
+    """Fused vs separate-call sequence at T lanes x per rows/lane.
+
+    The default N matches the production regime (flattened model params
+    are a few thousand floats), where the 2T-dispatch separate sequence
+    pays per-call overhead the single fused dispatch amortizes.  At very
+    large N the comparison inverts on CPU hosts — the separate path's
+    per-trial slices fit in cache while the fused working set streams
+    from RAM — which is a host-cache artifact, not the TPU roofline
+    story (``roofline.kernels``)."""
+    m = t * per
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    base = jnp.asarray(rng.standard_normal((t, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(1.0, 100.0, m).astype(np.float32))
+    seg = jnp.asarray(np.repeat(np.arange(t), per).astype(np.int32))
+    leaf_sizes = (n // 2, n - n // 2)
+    seg1 = jnp.zeros(per, jnp.int32)
+
+    def fused():
+        return kernel_ops.fed_reduce(
+            w, rows, seg, t, base, normalize=True, leaf_sizes=leaf_sizes,
+            quant_ref=base, quant_enabled=jnp.ones(m, bool))
+
+    def separate():
+        # the pre-fusion sequence: per-trial round trip + per-trial reduce
+        outs = []
+        for i in range(t):
+            sl = slice(i * per, (i + 1) * per)
+            rt = _roundtrip_rows(rows[sl], base[i], leaf_sizes)
+            outs.append(kernel_ops.fed_reduce(
+                w[sl], rt, seg1, 1, base[i][None], normalize=True)[0])
+        return jnp.stack(outs)
+
+    bitmatch = bool(
+        (np.asarray(fused()) == np.asarray(separate())).all())
+    fused_us = _time(fused)
+    separate_us = _time(separate)
+    emit(f"kernel/fed_reduce_fused_{t}x{per}x{n}", fused_us,
+         f"bitmatch={bitmatch}")
+    emit(f"kernel/fed_reduce_separate_{t}x{per}x{n}", separate_us,
+         f"speedup={separate_us / fused_us:.2f}")
+
+    traffic = fed_reduce_traffic(m, n, t, quant=True, base=True)
+    stream_gbs = _measure_stream_gbs()
+    fused_s = fused_us * 1e-6
+    bound_s = traffic.bound_s_at(stream_gbs * 1e9)
+
+    payload = {
+        "bench": "fed_reduce",
+        "t": t, "m": m, "n": n,
+        "fused_us": fused_us,
+        "separate_us": separate_us,
+        "speedup": separate_us / fused_us,
+        "bitmatch": bitmatch,
+        "bytes": traffic.bytes_hbm,
+        "stream_gbs": stream_gbs,
+        "achieved_gbs": traffic.bytes_hbm / fused_s / 1e9,
+        "bound_fraction": bound_s / fused_s,
+        "tpu_v5e_bound_us": traffic.bound_s(TPU_V5E) * 1e6,
+        "virtual_fleet_m1e6": _quote_million_clients(),
+    }
+    print("BENCH " + json.dumps(payload), flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f)
+    return payload
+
+
+def _quote_million_clients(m: int = 1_000_000,
+                           k: int = 10_000_000) -> dict:
+    """CompT/TransT quote for an M=1e6 cohort out of a K=1e7 VirtualFleet:
+    memory stays cohort-sized (the fleet never materializes (K,) arrays),
+    and the times follow ``account_sync_round`` semantics — the round's
+    critical path is the slowest included client's compute / transfer."""
+    from repro.core import CostModel
+    from repro.runtime.profiles import virtual_fleet
+
+    n_params = 25_000
+    cm = CostModel(flops_per_example=50_000, param_count=n_params)
+    c1 = cm.train_flops_per_example
+    down, up = cm.traffic_halves()
+    e = 2.0
+    fleet = virtual_fleet("mobile", k, seed=0)
+    rng = np.random.default_rng(0)
+    cids = rng.integers(0, k, m)
+    sizes = rng.integers(10, 100, m).astype(np.float64)
+
+    t0 = time.perf_counter()
+    flops = (c1 * e) * sizes
+    comp = flops / (fleet.ref_flops_per_s * fleet.speeds(cids))
+    bw = fleet.bws(cids)
+    trans = (down / (fleet.ref_bytes_per_s * bw)
+             + up / (fleet.ref_bytes_per_s * bw))
+    round_cost = cm.add_timed_round(
+        comp_time=float(comp.max()), trans_time=float(trans.max()),
+        comp_load=c1 * e * float(sizes.sum()),
+        trans_load=float(n_params) * m)
+    quote_s = time.perf_counter() - t0
+    emit("kernel/virtual_fleet_quote_m1e6", quote_s * 1e6,
+         f"k={k}")
+    return {
+        "m": m, "k": k,
+        "comp_t": round_cost.comp_t, "trans_t": round_cost.trans_t,
+        "comp_l": round_cost.comp_l, "trans_l": round_cost.trans_l,
+        "quote_s": quote_s,
+    }
+
+
+def main(settings: BenchSettings, json_path=None):
+    # fed_aggregate: the legacy single-lane server reduction
     m, n = 20, 1_000_000
     w = jnp.full((m,), 1.0 / m)
     d = jax.random.normal(KEY, (m, n))
     agg = jax.jit(ref.fed_aggregate_ref)
     emit("kernel/fed_aggregate_ref_20x1M", _time(agg, w, d),
          f"bytes={d.nbytes}")
+
+    # fed_reduce: fused segment aggregation vs the separate-call sequence
+    bench_fed_reduce(json_path=json_path)
 
     # flash attention reference at a prefill-ish shape
     q = jax.random.normal(KEY, (1, 8, 1024, 64))
@@ -48,3 +197,17 @@ def main(settings: BenchSettings):
     rg = jax.jit(ref.rglru_scan_ref)
     emit("kernel/rglru_scan_ref_4x2048x512", _time(rg, a, b),
          f"bytes={a.nbytes * 2}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--full-suite", action="store_true",
+                    help="also run the flash/rglru/fed_aggregate rows")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.full_suite:
+        main(BenchSettings(), json_path=args.json)
+    else:
+        bench_fed_reduce(json_path=args.json)

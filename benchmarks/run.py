@@ -9,7 +9,7 @@ suite completes on one CPU core; ``--full`` uses paper-scale datasets.
   table5       FedTune x datasets         (paper Table 5)
   table6       FedTune x aggregators      (paper Table 6)
   fig8/fig9    penalty mechanism          (paper Fig. 8 / 9)
-  kernel       kernel micro-benchmarks
+  kernels      kernel micro-benchmarks (incl. fused fed_reduce BENCH json)
   roofline     dry-run roofline table     (EXPERIMENTS.md source)
   runtime      heterogeneous runtime: batched cohorts + mode sweep
   sharded_cohort  client-exec backends (sequential|batched|sharded) at

@@ -20,24 +20,33 @@ PR 1-2 and runs all of them per virtual round:
               each trial's M.  One ``cohort_scan`` per bucket trains clients
               of MANY trials side by side — each vmap lane carries its own
               trial's global params (``global_in_axis=0``).
-  3. REDUCE — per-trial aggregation.  The default packing hands each trial's
-              per-client params (device arrays) to its own aggregator —
-              bit-identical to a standalone run.  The ``sharded`` packing
-              lays the flat cohort over the ``clients`` mesh axis
-              (runtime/sharded.py's mesh) and computes per-trial FedAvg
-              partial sums on device — a segment-sum by trial id completed
-              by a psum — so per-client params never reach the host.
+  3. REDUCE — aggregation.  Every FedAvg trial's weighted mean runs as ONE
+              fused ``fed_reduce`` dispatch per model group over the packed
+              flat cohort (segment ids = trial slots, raw example counts
+              normalized in-kernel, the int8 upload round trip of
+              compressed trials fused in against each trial's dispatch-time
+              globals) — bit-identical per lane to a standalone run because
+              the kernel folds each segment's rows left-to-right in pack
+              order (see kernels/ref.py).  Non-FedAvg trials hand their
+              per-client pytrees to their own aggregator, which itself
+              reduces through a T=1 ``fed_reduce``.  The ``sharded``
+              packing lays the flat cohort over the ``clients`` mesh axis
+              (runtime/sharded.py's mesh) and runs the same fused segment
+              sum per device slice, completed by a psum — so per-client
+              params never reach the host.
   4. STEP   — every due trial's evaluation runs as ONE stacked dispatch
               per (model, dataset) group (federated/evaluation.py's
               ``StackedEvaluator``), then each trial's own FedTune
               controller sees its round cost and accuracy and steps its
               (M, E) independently; finished trials drop out of the pack.
 
-  Upload-compressed trials are packed like any others: the quantize->
-  dequantize round trip runs as a per-lane transform on the packed rows
+  Upload-compressed trials are packed like any others: FedAvg lanes defer
+  the quantize->dequantize round trip into the fused reduce (one dispatch
+  covers roundtrip + weighting + segment sum), other aggregators' lanes
+  run it as a per-lane transform on the packed rows
   (``compress_delta_lanes``, masked per lane by each trial's
-  ``TrialSpec.compression``), bit-identical to the sequential path's
-  per-client ``compress_delta``.
+  ``TrialSpec.compression``) — both bit-identical to the sequential
+  path's per-client ``compress_delta``.
 
 Async/buffered trials vectorize through a second path (``run_vectorized_
 events``) built on ONE merged virtual-clock event queue spanning all live
@@ -77,8 +86,7 @@ from repro.data import cifar100_like, emnist_like, speech_command_like
 from repro.experiments.grid import TrialSpec
 from repro.federated import FLConfig, FLServer, get_aggregator
 from repro.federated.aggregation import ClientUpdate, _flatten, _unflatten
-from repro.federated.compression import (compress_delta_lanes, lane_mask,
-                                         lane_roundtrip)
+from repro.federated.compression import compress_delta_lanes, lane_mask
 from repro.federated.evaluation import eval_due, evaluate_stacked
 from repro.federated.server import FLResult, RoundRecord
 from repro.models import build_model
@@ -274,18 +282,18 @@ def _flatten_cohort(params_b):
     return jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
 
 
-def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh,
-                      compressed: bool = False):
+def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh, n_seg: int,
+                      leaf_sizes: tuple, compressed: bool = False):
     """Packed cohort over the ``clients`` mesh axis with per-trial FedAvg
     fused on device: each device trains its slice of the flat cohort,
-    applies the per-lane upload round trip where ``enabled`` (compressed
-    trials' lanes — the segment sum must aggregate what the server would
-    reconstruct), forms the (T, N) segment partial sum (w_i *
-    onehot_trial_i outer the flat params), and a psum across the axis
-    completes every trial's weighted mean at once.  Per-client params
-    never reach the host."""
+    then ONE ``fed_reduce`` call per slice fuses the int8 upload round
+    trip of compressed lanes (against ``qref[seg]``, the lane's trial
+    globals) with the (T, N) segment partial sum, and a psum across the
+    axis completes every trial's weighted mean at once.  Per-client
+    params never reach the host."""
+    from repro.kernels import ops as kernel_ops
     from repro.sharding.specs import clients_spec
-    key = (id(model), id(optimizer), prox_mu, id(mesh), compressed)
+    key = (id(model), id(optimizer), prox_mu, id(mesh), n_seg, compressed)
     if key in _sharded_multi_cache:
         return _sharded_multi_cache[key]
     from jax.experimental.shard_map import shard_map
@@ -294,20 +302,22 @@ def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh,
     one_client = make_client_step(model, optimizer, prox_mu)
     axis = mesh.axis_names[0]
 
-    def shard_body(global_b, xs, ys, masks, active, weights, onehot,
+    def shard_body(global_b, xs, ys, masks, active, weights, seg, qref,
                    enabled):
         opt_b = jax.vmap(optimizer.init)(global_b)
         params_b, last_loss = cohort_scan(
             one_client, global_b, opt_b, xs, ys, masks, active, global_b,
             global_in_axis=0)
-        if compressed:
-            params_b = lane_roundtrip(global_b, params_b, enabled)
         flat = _flatten_cohort(params_b)                  # (M_loc, N)
-        partial = (weights[:, None] * onehot).T @ flat    # (T, N) segment sum
+        partial = kernel_ops.fed_reduce(                  # (T, N) segment sum
+            weights, flat, seg, n_seg,
+            leaf_sizes=leaf_sizes if compressed else None,
+            quant_ref=qref if compressed else None,
+            quant_enabled=enabled if compressed else None)
         return jax.lax.psum(partial, axis), last_loss
 
     @jax.jit
-    def run(global_b, xs, ys, masks, active, weights, onehot, enabled):
+    def run(global_b, xs, ys, masks, active, weights, seg, qref, enabled):
         in_specs = (jax.tree.map(lambda l: clients_spec(l.ndim, 0, axis),
                                  global_b),
                     clients_spec(xs.ndim, 1, axis),
@@ -315,12 +325,13 @@ def _sharded_multi_fn(model, optimizer, prox_mu: float, mesh,
                     clients_spec(masks.ndim, 1, axis),
                     clients_spec(active.ndim, 1, axis),
                     clients_spec(1, 0, axis),
-                    clients_spec(2, 0, axis),
+                    clients_spec(1, 0, axis),
+                    P(),                                  # qref replicated
                     clients_spec(1, 0, axis))
         return shard_map(shard_body, mesh=mesh, in_specs=in_specs,
                          out_specs=(P(), clients_spec(1, 0, axis)))(
                              global_b, xs, ys, masks, active, weights,
-                             onehot, enabled)
+                             seg, qref, enabled)
 
     _sharded_multi_cache[key] = run
     return run
@@ -378,15 +389,18 @@ _note_pack = note_pack_metrics      # pack-shape metrics, see batched.py
 def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
     """Train one model-group's packed entries; results land back in each
     trial's cohort.  FedAvg trials keep their clients as rows of the
-    bucket's flat (M, N) matrix (their aggregation runs straight through
-    ``fed_aggregate`` on those rows); other aggregators get per-client
-    pytree slices.  Each trial's global params enter the pack through ONE
-    per-round stack + an on-device gather per bucket, so host-side tree
-    work stays O(trials), not O(clients).  Lanes of upload-compressed
-    trials go through the quantize->dequantize round trip against their
-    trial's global params (``compress_delta_lanes``) before unpacking —
-    bit-identical per lane to the sequential path's ``compress_delta``,
-    and masked off for uncompressed lanes so mixed grids pack together."""
+    bucket's flat (M, N) matrix (their aggregation runs as one fused
+    ``fed_reduce`` over those rows in ``_fused_sync_reduce``); other
+    aggregators get per-client pytree slices.  Each trial's global params
+    enter the pack through ONE per-round stack + an on-device gather per
+    bucket, so host-side tree work stays O(trials), not O(clients).
+    Upload-compressed lanes of non-FedAvg trials go through the
+    quantize->dequantize round trip against their trial's global params
+    (``compress_delta_lanes``) before unpacking — bit-identical per lane
+    to the sequential path's ``compress_delta``, and masked off for
+    uncompressed lanes so mixed grids pack together.  Compressed FedAvg
+    lanes are masked off too: their round trip is fused into the segment
+    reduce (same bits, one fewer dispatch)."""
     tr0 = ents[0][0]
     model, opt = tr0.srv.model, tr0.srv.optimizer
     bs = tr0.srv.config.batch_size
@@ -415,7 +429,9 @@ def _run_group_batched(ents: List[Tuple[_LiveTrial, int]]):
         global_b = jax.tree.map(lambda s: s[slots], stacked)
         params_b, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
                                   jnp.asarray(masks), jnp.asarray(active))
-        mask = lane_mask([tr.srv.config.compression for tr, _ in sel]
+        mask = lane_mask([tr.srv.config.compression
+                          if tr.srv.aggregator.name != "fedavg" else None
+                          for tr, _ in sel]
                          + [None] * (m_pad - len(sel)))
         if mask is not None:
             params_b = compress_delta_lanes(global_b, params_b, mask)
@@ -440,8 +456,6 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
     n_dev = int(np.prod(mesh.devices.shape))
     compressed = any(tr.srv.config.compression not in (None, "none")
                      for tr, _ in ents)
-    run = _sharded_multi_fn(model, opt, tr0.srv.config.prox_mu, mesh,
-                            compressed)
 
     trials: List[_LiveTrial] = []
     slot: Dict[int, int] = {}
@@ -454,6 +468,12 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
     totals = [float(sum(tr.cohort.sizes)) for tr in trials]
 
     flat0, meta = _flatten(trials[0].params)
+    t_seg = _pow2(n_t)     # segment count padded pow2: bounded shape set
+    run = _sharded_multi_fn(model, opt, tr0.srv.config.prox_mu, mesh,
+                            t_seg, tuple(meta[2]), compressed)
+    # each lane's quant reference = its trial's dispatch-time globals
+    qref = jnp.stack([_flatten(tr.params)[0] for tr in trials]
+                     + [jnp.zeros_like(flat0)] * (t_seg - n_t))
     agg = jnp.zeros((n_t, flat0.shape[0]), flat0.dtype)
     n_steps = [tr.cohort.n_steps[j] for tr, j in ents]
     for t_pad, idx in sorted(bucket_by_steps(n_steps).items()):
@@ -469,18 +489,22 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
         global_b = _tree_stack([tr.params for tr, _ in sel]
                                + [sel[0][0].params] * pad)
         w = np.zeros(m_pad, np.float32)
-        onehot = np.zeros((m_pad, n_t), np.float32)
+        seg = np.zeros(m_pad, np.int32)    # pad lanes: seg 0, weight 0
         enabled = np.zeros(m_pad, bool)
         for k, (tr, j) in enumerate(sel):
             s = slot[id(tr)]
             w[k] = tr.cohort.sizes[j] / totals[s]
-            onehot[k, s] = 1.0
+            seg[k] = s
             enabled[k] = tr.srv.config.compression not in (None, "none")
+        if obs.enabled():
+            obs.registry.inc("reduce_fused_dispatches")
+            obs.registry.sample("reduce_rows", m_pad)
+            obs.registry.sample("reduce_lanes", n_t)
         partial, last_loss = run(global_b, jnp.asarray(xs), jnp.asarray(ys),
                                  jnp.asarray(masks), jnp.asarray(active),
-                                 jnp.asarray(w), jnp.asarray(onehot),
+                                 jnp.asarray(w), jnp.asarray(seg), qref,
                                  jnp.asarray(enabled))
-        agg = agg + partial
+        agg = agg + partial[:n_t]
         ll = np.asarray(last_loss)
         for k, (tr, j) in enumerate(sel):
             tr.cohort.losses[j] = float(ll[k])
@@ -496,20 +520,88 @@ def _run_group_sharded(ents: List[Tuple[_LiveTrial, int]], mesh):
 
 
 def _fedavg_from_rows(tr: _LiveTrial) -> Any:
-    """FedAvg straight from the packed cohort's flat rows: the identical
-    (weights, stacked rows) inputs ``FedAvg.__call__`` would build from
-    per-client pytrees, without the per-client tree flattening."""
+    """FedAvg straight from the packed cohort's flat rows, as a T=1
+    ``fed_reduce`` (raw counts normalized in-kernel, the int8 round trip
+    fused when the trial compresses uploads) — the single-trial fallback
+    with the exact bits of one lane of ``_fused_sync_reduce``."""
     from repro.kernels import ops as kernel_ops
     co = tr.cohort
+    gflat, meta = _flatten(tr.params)
     if tr._meta is None:
-        tr._meta = _flatten(tr.params)[1]
-    rows = [r if r is not None else _flatten(tr.params)[0]
+        tr._meta = meta
+    rows = [r if r is not None else gflat
             for r in co.flat_rows]     # zero-step clients stay at global
-    n = float(sum(co.sizes))
-    w = np.array([s / n for s in co.sizes], np.float32)
-    out = kernel_ops.fed_aggregate(jnp.asarray(w, jnp.float32),
-                                   jnp.stack(rows))
-    return _unflatten(out, tr._meta)
+    w = jnp.asarray(np.asarray(co.sizes, np.float32))
+    seg = jnp.zeros(len(rows), jnp.int32)
+    comp = tr.srv.config.compression not in (None, "none")
+    out = kernel_ops.fed_reduce(
+        w, jnp.stack(rows), seg, 1, normalize=True,
+        leaf_sizes=tuple(meta[2]) if comp else None,
+        quant_ref=gflat[None, :] if comp else None,
+        quant_enabled=jnp.ones(len(rows), bool) if comp else None)
+    return _unflatten(out[0], tr._meta)
+
+
+def _fused_sync_reduce(live: List[_LiveTrial]):
+    """ONE ``fed_reduce`` dispatch per model group covering every FedAvg
+    trial's aggregation: each trial is a segment (lane) of the packed
+    (M, N) row matrix, raw example counts are normalized per segment
+    in-kernel, and compressed trials' int8 upload round trips run against
+    their own stacked global params inside the same dispatch.  Fills
+    ``cohort.agg_params``; ``_reduce_round`` consumes it.  Bit-identical
+    per trial to the standalone ``FedAvg.__call__`` path because the
+    kernel's per-segment fold only ever sees that trial's rows, in the
+    same client order (kernels/ref.py's packing-invariance contract)."""
+    from repro.kernels import ops as kernel_ops
+    todo = [tr for tr in live
+            if tr.cohort is not None and tr.cohort.cids
+            and tr.cohort.agg_params is None
+            and tr.srv.aggregator.name == "fedavg"]
+    groups: Dict[int, List[_LiveTrial]] = {}
+    for tr in todo:
+        groups.setdefault(id(tr.srv.model), []).append(tr)
+    for grp in groups.values():
+        t_pad = _pow2(len(grp))
+        rows, w, seg, en, qrefs = [], [], [], [], []
+        meta = None
+        for s, tr in enumerate(grp):
+            co = tr.cohort
+            gflat, meta = _flatten(tr.params)
+            if tr._meta is None:
+                tr._meta = meta
+            qrefs.append(gflat)
+            comp = tr.srv.config.compression not in (None, "none")
+            for j in range(len(co.cids)):
+                r = co.flat_rows[j]
+                rows.append(r if r is not None else gflat)
+                w.append(co.sizes[j])
+                seg.append(s)
+                en.append(comp)
+        m_pad = _pow2(len(rows))
+        n = rows[0].shape[0]
+        rows += [jnp.zeros(n, rows[0].dtype)] * (m_pad - len(rows))
+        pad = m_pad - len(w)
+        w += [0.0] * pad                  # zero-weight rows are bit-neutral
+        seg += [0] * pad
+        en += [False] * pad
+        quant = any(en)
+        if quant:
+            qrefs += [jnp.zeros(n, qrefs[0].dtype)] * (t_pad - len(qrefs))
+        if obs.enabled():
+            obs.registry.inc("reduce_fused_dispatches")
+            obs.registry.sample("reduce_rows", m_pad)
+            obs.registry.sample("reduce_lanes", len(grp))
+        with obs.span("REDUCE", phase="apply", n_lanes=len(grp),
+                      n_rows=m_pad):
+            out = kernel_ops.fed_reduce(
+                jnp.asarray(np.asarray(w, np.float32)), jnp.stack(rows),
+                jnp.asarray(np.asarray(seg, np.int32)), t_pad,
+                normalize=True,
+                leaf_sizes=tuple(meta[2]) if quant else None,
+                quant_ref=jnp.stack(qrefs) if quant else None,
+                quant_enabled=jnp.asarray(np.asarray(en)) if quant else None)
+        for s, tr in enumerate(grp):
+            tr.cohort.agg_params = _unflatten(out[s], tr._meta)
 
 
 def _reduce_round(tr: _LiveTrial):
@@ -522,7 +614,7 @@ def _reduce_round(tr: _LiveTrial):
         co = tr.cohort
         for j, cid in enumerate(co.cids):
             srv.selector.update(int(cid), co.losses[j], co.sizes[j])
-        if co.agg_params is not None:      # fused on device (sharded pack)
+        if co.agg_params is not None:   # fused reduce (or sharded pack)
             tr.params = co.agg_params
         elif srv.aggregator.name == "fedavg":
             tr.params = _fedavg_from_rows(tr)
@@ -661,6 +753,7 @@ def _sync_round_step(live: List[_LiveTrial], *, pack: str = "batched",
     #    every due trial (grouped by model/dataset), then per-trial
     #    record + controller step
     with obs.span("APPLY", phase="apply", n_trials=len(live)):
+        _fused_sync_reduce(live)       # one dispatch per model group
         for tr in live:
             _reduce_round(tr)
     due = [tr for tr in live

@@ -3,8 +3,16 @@
 All aggregators consume per-participant results
   ClientUpdate(params, n_examples, n_steps)
 and produce the new global params.  The weighted sums run through the
-``fed_aggregate`` kernel path (Pallas on TPU, jnp reference elsewhere) on
-flattened parameter vectors.
+fused ``fed_reduce`` kernel path (Pallas on TPU, jnp reference elsewhere)
+on flattened parameter vectors, as a single-segment (T=1) call — which is
+exactly what makes the multi-trial sweep engines' ONE-dispatch packed
+reduce bit-identical per lane to this standalone path (the fold over a
+lane's rows is invariant to what else is packed; see kernels/ref.py).
+
+FedAvg passes RAW example counts with ``normalize=True`` so the weight
+normalization happens inside the kernel with the same op sequence the
+fused multi-trial reduce uses; host-side pre-normalization would differ
+by an ulp and break the vectorized-vs-standalone parity pins.
 
 Implemented: FedAvg [McMahan'17], FedNova [Wang'20], and the adaptive
 server optimizers FedAdagrad / FedAdam / FedYogi [Reddi'21].  FedProx is a
@@ -50,18 +58,21 @@ def _unflatten(flat, meta):
 
 
 def _weighted_combine(weights: np.ndarray, param_list: List[Any],
-                      base: Optional[Any] = None):
-    """sum_k w_k * params_k (+ base), via the fed_aggregate kernel."""
+                      base: Optional[Any] = None, *,
+                      normalize: bool = False):
+    """sum_k w_k * params_k (+ base), one fused fed_reduce call (T=1)."""
     flats = []
     meta = None
     for p in param_list:
         f, meta = _flatten(p)
         flats.append(f)
-    deltas = jnp.stack(flats)                     # (M, N)
+    rows = jnp.stack(flats)                       # (M, N)
     w = jnp.asarray(weights, jnp.float32)
-    base_flat = _flatten(base)[0] if base is not None else None
-    out = kernel_ops.fed_aggregate(w, deltas, base_flat)
-    return _unflatten(out, meta)
+    seg = jnp.zeros(rows.shape[0], jnp.int32)
+    base_flat = _flatten(base)[0][None, :] if base is not None else None
+    out = kernel_ops.fed_reduce(w, rows, seg, 1, base_flat,
+                                normalize=normalize)
+    return _unflatten(out[0], meta)
 
 
 # ---------------------------------------------------------------------------
@@ -79,9 +90,11 @@ class FedAvg(Aggregator):
     name = "fedavg"
 
     def __call__(self, global_params, updates):
-        n = float(sum(u.n_examples for u in updates))
-        w = np.array([u.n_examples / n for u in updates], np.float32)
-        return _weighted_combine(w, [u.params for u in updates])
+        # raw counts; the n_k / sum(n) division runs inside fed_reduce so
+        # the fused multi-trial engines normalize with the same op sequence
+        w = np.array([u.n_examples for u in updates], np.float32)
+        return _weighted_combine(w, [u.params for u in updates],
+                                 normalize=True)
 
 
 class FedNova(Aggregator):
@@ -189,7 +202,7 @@ class FedBuffAggregator:
     """FedBuff [Nguyen'22]: the server buffers K client *deltas* (each taken
     against the params the client was dispatched with) and applies their
     staleness-discounted average ``(server_lr / K) * sum_i s(tau_i) d_i``
-    in one shot through the ``fed_aggregate`` kernel.  The discount is
+    in one shot through the ``fed_reduce`` kernel.  The discount is
     ABSOLUTE (divide by K, not by the weight sum): a buffer of uniformly
     stale updates takes a proportionally smaller step, as in the cited
     FedAsync/FedBuff scaling.  Unlike the synchronous ``Aggregator``s this

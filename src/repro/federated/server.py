@@ -104,10 +104,13 @@ class FLServer:
             c1 = cost_model.train_flops_per_example
             down, up = cost_model.traffic_halves(
                 upload_factor(config.compression))
-            est_times = np.array([
-                fleet.est_round_time(k, float(dataset.client_sizes[k]),
-                                     config.e, c1, down, up)
-                for k in range(dataset.n_clients)])
+            # one vectorized pass (bit-identical per element to the scalar
+            # est_round_time loop it replaced; works for VirtualFleet too,
+            # where per-cid scalar indexing would draw one hash at a time)
+            est_times = np.asarray(fleet.est_round_times(
+                np.arange(dataset.n_clients),
+                np.asarray(dataset.client_sizes, np.float64),
+                config.e, c1, down, up))
         self.selector = get_selector(config.selection, dataset.n_clients,
                                      self.rng,
                                      client_sizes=dataset.client_sizes,

@@ -1,1 +1,2 @@
-from repro.kernels.ops import fed_aggregate, flash_attention, rglru_scan  # noqa: F401
+from repro.kernels.ops import (fed_aggregate, fed_reduce,  # noqa: F401
+                               flash_attention, rglru_scan)

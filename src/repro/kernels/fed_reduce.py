@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused segment aggregation over a packed cohort.
+
+    out[t] = base[t] + sum_{m : seg[m] == t} w_m * roundtrip(row_m)
+
+This is the server-side hot path of the multi-trial sweep engines: every
+lane (trial slot) of the packed flat cohort reduces to its own (N,)
+parameter vector in ONE dispatch, where the pre-fusion code issued a
+jitted call per lane (per-trial ``fed_aggregate``) plus separate jitted
+weight-normalization and int8-dequant round trips.
+
+Layout mirrors ``fed_aggregate``: the parameter axis is cut into
+lane-aligned VMEM column blocks; each grid step loads the (M, BLOCK_N)
+row tile, the (M, 1) weight/segment columns and the (T, BLOCK_N) base
+tile, and folds the M rows into a (T, BLOCK_N) accumulator in VREGs.
+Arithmetic intensity is ~1 FLOP / 2 bytes — HBM-bandwidth-bound, so the
+kernel's one job is to stream the rows exactly once (see
+``roofline/kernels.py`` for the analytic byte model the benchmark checks
+against).
+
+Bit-exactness: the in-kernel fold adds rows one at a time in pack order
+(``jnp.where`` lane select over a precomputed ``w * x``), the exact op
+sequence of ``ref.fed_reduce_ref``'s scan — so Pallas output matches the
+reference bitwise, and lane t of a fused call matches a standalone T=1
+call.  The quantization round trip and weight normalization are shared
+jnp pre-passes from ``kernels/ref.py`` inside the same jit: per-leaf
+quant scales are a full-row reduction, which cannot be formed inside a
+column-blocked grid step, so they are computed once up front and the
+whole program still lowers to a single XLA dispatch around the
+pallas_call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+BLOCK_N = 2048  # lane-aligned (16 x 128) f32 tile per cohort row
+
+
+def _kernel(seg_ref, w_ref, base_ref, x_ref, o_ref):
+    # seg: (M, 1) i32, w: (M, 1) f32 (normalized), base: (T, BLOCK_N),
+    # x: (M, BLOCK_N), o: (T, BLOCK_N)
+    x = x_ref[...].astype(jnp.float32)
+    wx = w_ref[...].astype(jnp.float32) * x          # before the fold: no
+    seg = seg_ref[...]                               # mul+add to contract
+    t, block = o_ref.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)
+
+    def fold(m, acc):
+        row = jax.lax.dynamic_slice_in_dim(wx, m, 1, 0)      # (1, BLOCK_N)
+        s = jax.lax.dynamic_slice_in_dim(seg, m, 1, 0)[0, 0]
+        return jnp.where(lanes == s, acc + row, acc)
+
+    acc = jax.lax.fori_loop(0, x.shape[0], fold,
+                            jnp.zeros((t, block), jnp.float32))
+    o_ref[...] = (acc + base_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "normalize", "leaf_sizes", "block_n", "interpret"))
+def fed_reduce(weights, rows, segments, num_segments, base=None, *,
+               normalize: bool = False, leaf_sizes=None, quant_ref=None,
+               quant_enabled=None, block_n: int = BLOCK_N,
+               interpret: bool = False):
+    """weights: (M,); rows: (M, N); segments: (M,) -> (num_segments, N).
+    Same contract as ``ref.fed_reduce_ref`` (its bit-matching oracle)."""
+    m, n = rows.shape
+    t = num_segments
+    seg = segments.astype(jnp.int32)
+    x = rows.astype(jnp.float32)
+    if quant_ref is not None:
+        x = _ref._quant_rows(x, seg, quant_ref, quant_enabled, leaf_sizes)
+    w = _ref._norm_weights(weights, seg, t, normalize)
+    if base is None:
+        base = jnp.zeros((t, n), rows.dtype)
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        base = jnp.pad(base, ((0, 0), (0, pad)))
+    n_pad = n + pad
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((t, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((t, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, n_pad), rows.dtype),
+        interpret=interpret,
+    )(seg.reshape(m, 1), w.reshape(m, 1), base, x)
+    return out[:, :n]

@@ -17,6 +17,109 @@ def fed_aggregate_ref(weights, deltas, base=None):
     return out.astype(deltas.dtype)
 
 
+# ---------------------------------------------------------------------------
+# fed_reduce: fused segment aggregation over a packed multi-trial cohort
+# ---------------------------------------------------------------------------
+#
+# The bit-exactness contract of fed_reduce is *packing invariance*: lane t
+# of a T-segment call must equal the same rows reduced through a T=1 call,
+# bit for bit, because the sweep engines aggregate T trials in one dispatch
+# while the standalone `FLServer.run()` they are parity-pinned against
+# reduces one trial at a time.  Three design rules make that hold by
+# construction rather than by compiler luck:
+#
+#   * per-segment results are a strict left-to-right fold over that
+#     segment's rows in pack order (a lax.scan of one-row scatter-adds, not
+#     an einsum/segment_sum whose tree reduction re-associates when other
+#     segments' rows are interleaved);
+#   * the weight multiply is materialized BEFORE the fold (``wx = w * x``),
+#     so the fold body is a pure f32 add of precomputed values and XLA has
+#     no mul+add pair to contract into an FMA differently per shape;
+#   * the quantization round trip and weight normalization are row/segment
+#     elementwise (and max is order-insensitive and exact), so they cannot
+#     see what else is packed.
+
+def _quant_rows(rows, segments, quant_ref, quant_enabled, leaf_sizes):
+    """The int8 upload round trip on flat (M, N) rows, bit-identical to
+    ``compression._roundtrip_leaf`` applied per (row, leaf).
+
+    quant_ref: (T, N) per-segment reference vectors (each trial's global
+    params, flattened); row m is quantized against ``quant_ref[seg[m]]``.
+    leaf_sizes: static tuple of per-leaf column widths (the scale is
+    per-leaf, exactly like the tree round trip).  quant_enabled: optional
+    (M,) bool — disabled rows pass through untouched."""
+    x = rows.astype(jnp.float32)
+    g = quant_ref.astype(jnp.float32)[segments]          # (M, N) gather
+    d = x - g
+    scales = []
+    off = 0
+    for size in leaf_sizes:
+        leaf_max = jnp.max(jnp.abs(d[:, off:off + size]), axis=1)
+        scales.append(jnp.maximum(leaf_max / 127.0, 1e-12))
+        off += size
+    col_scale = jnp.concatenate(
+        [jnp.broadcast_to(s[:, None], (rows.shape[0], size))
+         for s, size in zip(scales, leaf_sizes)], axis=1)   # (M, N)
+    q = jnp.clip(jnp.round(d / col_scale), -127, 127).astype(jnp.int8)
+    rec = g + q.astype(jnp.float32) * col_scale
+    if quant_enabled is None:
+        return rec
+    return jnp.where(quant_enabled[:, None], rec, x)
+
+
+def _seg_fold(values, segments, num_segments):
+    """Left-to-right fold of rows into per-segment f32 accumulators.
+    values: (M,) or (M, N); returns (num_segments,) or (num_segments, N).
+    Each accumulator element only ever sees its own segment's rows, in
+    their pack order — which is what makes the result invariant to what
+    ELSE is packed alongside them."""
+    acc0 = jnp.zeros((num_segments,) + values.shape[1:], jnp.float32)
+
+    def step(acc, xs):
+        row, s = xs
+        return acc.at[s].add(row), None
+
+    acc, _ = jax.lax.scan(step, acc0, (values.astype(jnp.float32),
+                                       segments))
+    return acc
+
+
+def _norm_weights(weights, segments, num_segments, normalize):
+    """f32 weights, divided by their per-segment totals when asked.  The
+    totals are the same sequential fold, so a lane's normalizer equals the
+    standalone run's regardless of packing.  Empty (padding) segments
+    divide by 1 instead of 0 — their rows carry weight 0 anyway."""
+    w = weights.astype(jnp.float32)
+    if not normalize:  # noqa: REPRO003 -- static_argnames kwarg of every jit of this path: a Python bool at trace time
+        return w
+    tot = _seg_fold(w, segments, num_segments)
+    tot = jnp.where(tot > 0, tot, 1.0)
+    return w / tot[segments]
+
+
+def fed_reduce_ref(weights, rows, segments, num_segments, base=None, *,
+                   normalize=False, leaf_sizes=None, quant_ref=None,
+                   quant_enabled=None):
+    """Fused segment aggregation over a packed multi-trial flat cohort.
+
+    weights: (M,), rows: (M, N), segments: (M,) int32 trial slots ->
+    (num_segments, N).  Optionally fuses weight normalization (divide by
+    per-segment weight totals), the int8 upload round trip against
+    ``quant_ref`` (see ``_quant_rows``), and a per-segment ``base`` add
+    ((num_segments, N)).  ``num_segments`` and ``leaf_sizes`` are static.
+    """
+    seg = segments.astype(jnp.int32)
+    x = rows.astype(jnp.float32)
+    if quant_ref is not None:
+        x = _quant_rows(x, seg, quant_ref, quant_enabled, leaf_sizes)
+    w = _norm_weights(weights, seg, num_segments, normalize)
+    wx = w[:, None] * x
+    out = _seg_fold(wx, seg, num_segments)
+    if base is not None:
+        out = out + base.astype(jnp.float32)
+    return out.astype(rows.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
                         cap: Optional[float] = None):
     """q: (B, H, S, D); k, v: (B, Kh, T, D) with H % Kh == 0 -> (B, H, S, D)."""

@@ -1,4 +1,8 @@
 from repro.roofline.analysis import RooflineReport, analyze_compiled
 from repro.roofline.hardware import TPU_V5E
+from repro.roofline.kernels import (KernelTraffic, fed_reduce_traffic,
+                                    fed_reduce_separate_traffic)
 
-__all__ = ["RooflineReport", "analyze_compiled", "TPU_V5E"]
+__all__ = ["RooflineReport", "analyze_compiled", "TPU_V5E",
+           "KernelTraffic", "fed_reduce_traffic",
+           "fed_reduce_separate_traffic"]

@@ -14,5 +14,6 @@ from repro.runtime.events import (EventQueue, MergedEventQueue,  # noqa: F401
 from repro.runtime.sharded import (ShardedRound,  # noqa: F401
                                    sharded_fedavg_train)
 from repro.runtime.profiles import (PROFILES, DeviceClass, Fleet,  # noqa: F401
-                                    HeterogeneityProfile, get_profile,
-                                    homogeneous_fleet, sample_fleet)
+                                    HeterogeneityProfile, VirtualFleet,
+                                    get_profile, homogeneous_fleet,
+                                    sample_fleet, virtual_fleet)

@@ -48,6 +48,45 @@ def _time_bits(t: float) -> int:
     return int(np.float64(t).view(np.uint64))
 
 
+# -- vectorized stateless draws (client-state virtualization) ---------------
+#
+# ``hash01`` pays a SeedSequence construction per draw (~10us) — fine for
+# the engines' per-dispatch failure checks, hopeless for deriving a
+# million-client cohort's device parameters.  ``_hash01_many`` is the bulk
+# counterpart: a numpy-vectorized splitmix64 finalizer over client ids, so
+# a VirtualFleet can gather any cohort's draws in one array pass.  It is a
+# DIFFERENT hash domain from ``hash01`` (virtual-fleet device draws never
+# have to match a materialized sample_fleet's rng sequence — determinism
+# and K-independence per cid are the contract, pinned in test_runtime.py);
+# the failure model keeps ``hash01`` itself so a VirtualFleet's ``fails``
+# answers bit-match a materialized Fleet's.
+
+_SM64 = dict(gamma=np.uint64(0x9E3779B97F4A7C15),
+             m1=np.uint64(0xBF58476D1CE4E5B9),
+             m2=np.uint64(0x94D049BB133111EB))
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer (Steele et al.), elementwise over uint64."""
+    with np.errstate(over="ignore"):
+        x = (x ^ (x >> np.uint64(30))) * _SM64["m1"]
+        x = (x ^ (x >> np.uint64(27))) * _SM64["m2"]
+    return x ^ (x >> np.uint64(31))
+
+
+def _hash01_many(seed: int, salt: int, cids) -> np.ndarray:
+    """Uniform [0, 1) per client id, vectorized: hash(seed, salt, cid) via
+    splitmix64.  A given (seed, salt, cid) always maps to the same draw —
+    independent of how many other clients exist or which cohort asks."""
+    c = np.asarray(cids, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        stream = _mix64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
+                        + np.uint64(salt) * _SM64["gamma"])
+        x = _mix64((c + stream) * _SM64["gamma"])
+    # top 53 bits -> float64 mantissa: strictly < 1.0
+    return (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+
+
 @dataclass(frozen=True)
 class ChurnSchedule:
     """Deterministic fleet membership over virtual time (clients joining
@@ -244,6 +283,22 @@ class Fleet:
         return (self.comp_time(cid, flops_per_example * passes * n_examples)
                 + self.trans_time(cid, down_units, up_units))
 
+    def est_round_times(self, cids, n_examples, passes: float,
+                        flops_per_example: float, down_units: float,
+                        up_units: float) -> np.ndarray:
+        """Bulk ``est_round_time`` over a cohort in one vectorized float64
+        pass, elementwise bit-identical to the scalar method (same op
+        sequence: (fpe * passes) * n, divide, add)."""
+        cids = np.asarray(cids)
+        n = np.asarray(n_examples, np.float64)
+        flops = flops_per_example * passes * n
+        comp = flops / (self.ref_flops_per_s * self.speed[cids])
+        trans = (float(down_units) / (self.ref_bytes_per_s
+                                      * self.down_bw[cids])
+                 + float(up_units) / (self.ref_bytes_per_s
+                                      * self.up_bw[cids]))
+        return comp + trans
+
     def is_homogeneous(self) -> bool:
         return (np.all(self.speed == self.speed[0])
                 and np.all(self.up_bw == self.up_bw[0])
@@ -275,6 +330,179 @@ def sample_fleet(profile: "HeterogeneityProfile | str", n_clients: int,
                  if profile.failure > 0.0 else None),
         failure_seed=seed,
     )
+
+
+class _PerClient:
+    """A (K,)-array-shaped lazy view: ``view[cid]`` / ``view[cid_array]``
+    computes the draw on demand (scalar index -> float, array index ->
+    array), so a VirtualFleet exposes the exact attribute surface the
+    engines index (``fleet.availability[cid]``…) with O(cohort) work and
+    O(1) resident memory regardless of K."""
+
+    def __init__(self, n: int, fn):
+        self._n = int(n)
+        self._fn = fn
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, idx):
+        arr = np.asarray(idx)
+        if arr.ndim == 0:
+            return float(self._fn(arr.reshape(1))[0])
+        return self._fn(arr)
+
+
+@dataclass
+class VirtualFleet:
+    """A fleet whose per-client device parameters are DERIVED, not stored:
+    speed/bandwidth tier and jitter for client ``cid`` come from the
+    stateless ``_hash01_many`` draws on (seed, salt, cid), availability
+    and dropout are the profile's constants, and the failure model is the
+    same ``hash01`` draw a materialized ``Fleet`` uses — so no (K,) array
+    ever exists and ``n_clients`` can be 10^6+ while the cost model only
+    ever gathers the selected cohort.  ``materialize()`` builds the
+    equivalent array-backed Fleet (same draws per cid; feasible only for
+    small K), which is how tests pin virtual==materialized engine
+    behavior.  Churn schedules need population-wide masks, so they stay a
+    materialized-Fleet feature."""
+    profile: HeterogeneityProfile
+    n: int
+    seed: int = 0
+    ref_flops_per_s: float = 1.0
+    ref_bytes_per_s: float = 1.0
+    failure_rate: float = 0.0
+    failure_seed: int = 0
+    failure_fn: Optional[Callable[[int, float, int], bool]] = None
+    churn: None = None            # see class docstring
+
+    def __post_init__(self):
+        self._cum = np.cumsum(
+            [c.weight for c in self.profile.classes]).astype(np.float64)
+        self._cls_speed = np.array(
+            [c.speed for c in self.profile.classes], np.float64)
+        self._cls_bw = np.array(
+            [c.bandwidth for c in self.profile.classes], np.float64)
+        self.speed = _PerClient(self.n, self.speeds)
+        self.up_bw = _PerClient(self.n, self.bws)
+        self.down_bw = _PerClient(self.n, self.bws)
+        self.availability = _PerClient(
+            self.n, lambda c: np.full(len(c), self.profile.availability))
+        self.dropout = _PerClient(
+            self.n, lambda c: np.full(len(c), self.profile.dropout))
+        self.failure = (_PerClient(
+            self.n, lambda c: np.full(len(c), self.failure_rate))
+            if self.failure_rate > 0.0 else None)
+
+    @property
+    def n_clients(self) -> int:
+        return self.n
+
+    # -- bulk draws (cohort-sized gathers, the virtualization point) -----
+    def _tiers(self, cids) -> np.ndarray:
+        u = _hash01_many(self.seed, 0, cids)
+        return np.minimum(np.searchsorted(self._cum, u, side="right"),
+                          len(self._cum) - 1)
+
+    def speeds(self, cids) -> np.ndarray:
+        """(len(cids),) relative FLOP/s: tier speed x lognormal jitter."""
+        s = self._cls_speed[self._tiers(cids)]
+        if self.profile.speed_jitter > 0:
+            u1 = _hash01_many(self.seed, 1, cids)
+            u2 = _hash01_many(self.seed, 2, cids)
+            z = (np.sqrt(-2.0 * np.log1p(-u1))
+                 * np.cos(2.0 * np.pi * u2))          # Box-Muller
+            s = s * np.exp(self.profile.speed_jitter * z)
+        return s
+
+    def bws(self, cids) -> np.ndarray:
+        return self._cls_bw[self._tiers(cids)]
+
+    # -- the Fleet method surface the engines/cost model consume ---------
+    def has_failures(self) -> bool:
+        return self.failure_fn is not None or self.failure_rate > 0.0
+
+    def fails(self, cid: int, t: float, attempt: int = 0) -> bool:
+        # exact Fleet.fails draw path: a virtual fleet and its
+        # materialization answer identically at every (cid, t, attempt)
+        if self.failure_fn is not None:
+            return bool(self.failure_fn(int(cid), float(t), int(attempt)))
+        if self.failure_rate <= 0.0:
+            return False
+        return hash01(self.failure_seed, int(cid), _time_bits(t),
+                      int(attempt)) < self.failure_rate
+
+    def is_active(self, cid: int, t: float) -> bool:
+        return True
+
+    def n_active(self, t: float) -> int:
+        return self.n
+
+    def comp_time(self, cid: int, flops: float) -> float:
+        return float(flops) / (self.ref_flops_per_s * float(self.speed[cid]))
+
+    def trans_time(self, cid: int, down_units: float,
+                   up_units: float) -> float:
+        return (float(down_units) / (self.ref_bytes_per_s
+                                     * float(self.down_bw[cid]))
+                + float(up_units) / (self.ref_bytes_per_s
+                                     * float(self.up_bw[cid])))
+
+    def est_round_time(self, cid: int, n_examples: float, passes: float,
+                       flops_per_example: float, down_units: float,
+                       up_units: float) -> float:
+        return (self.comp_time(cid, flops_per_example * passes * n_examples)
+                + self.trans_time(cid, down_units, up_units))
+
+    def est_round_times(self, cids, n_examples, passes: float,
+                        flops_per_example: float, down_units: float,
+                        up_units: float) -> np.ndarray:
+        """Bulk ``est_round_time`` over a cohort: one vectorized pass with
+        the scalar method's exact op sequence (elementwise float64), so
+        ``est_round_times(cids, ...)[i] == est_round_time(cids[i], ...)``
+        to the bit."""
+        cids = np.asarray(cids)
+        n = np.asarray(n_examples, np.float64)
+        flops = flops_per_example * passes * n
+        comp = flops / (self.ref_flops_per_s * self.speeds(cids))
+        bw = self.bws(cids)
+        trans = (float(down_units) / (self.ref_bytes_per_s * bw)
+                 + float(up_units) / (self.ref_bytes_per_s * bw))
+        return comp + trans
+
+    def is_homogeneous(self) -> bool:
+        return (len(self.profile.classes) == 1
+                and self.profile.speed_jitter == 0.0
+                and self.profile.availability >= 1.0
+                and self.profile.dropout <= 0.0)
+
+    def materialize(self) -> Fleet:
+        """The equivalent (K,)-array Fleet — same per-cid draws."""
+        cids = np.arange(self.n)
+        return Fleet(
+            profile=self.profile,
+            speed=self.speeds(cids),
+            up_bw=self.bws(cids),
+            down_bw=self.bws(cids),
+            availability=np.full(self.n, self.profile.availability),
+            dropout=np.full(self.n, self.profile.dropout),
+            ref_flops_per_s=self.ref_flops_per_s,
+            ref_bytes_per_s=self.ref_bytes_per_s,
+            failure=(np.full(self.n, self.failure_rate)
+                     if self.failure_rate > 0.0 else None),
+            failure_seed=self.failure_seed,
+            failure_fn=self.failure_fn)
+
+
+def virtual_fleet(profile: "HeterogeneityProfile | str", n_clients: int,
+                  *, seed: int = 0) -> VirtualFleet:
+    """A VirtualFleet over a named or explicit profile (deterministic in
+    seed; memory independent of ``n_clients``)."""
+    if isinstance(profile, str):
+        profile = get_profile(profile)
+    return VirtualFleet(profile=profile, n=int(n_clients), seed=seed,
+                        failure_rate=float(profile.failure),
+                        failure_seed=seed)
 
 
 def homogeneous_fleet(n_clients: int) -> Fleet:

@@ -7,9 +7,10 @@ size-bucketed cohort is laid out along a 1-D ``clients`` mesh axis
 (launch/mesh.py: ``make_clients_mesh``) under ``shard_map``: every device
 holds M/D client slots, runs the identical ``cohort_scan`` body (shared
 with batched.py) on its slice, reduces its slots' trained params to a
-weighted partial sum through the ``fed_aggregate`` kernel path, and a
-``lax.psum`` over the ``clients`` axis completes the FedAvg weighted mean
-ON DEVICE.  The host only ever receives the aggregated (N,) parameter
+weighted partial sum through the fused ``fed_reduce`` kernel path (the
+int8 upload round trip of compressed cohorts runs inside the same
+dispatch), and a ``lax.psum`` over the ``clients`` axis completes the
+FedAvg weighted mean ON DEVICE.  The host only ever receives the aggregated (N,) parameter
 vector plus per-client scalar losses — a round never materializes (M, N)
 per-client params off-device, so cohort size scales with device count.
 
@@ -90,11 +91,11 @@ def _make_sharded_cohort_fn(model: Model, optimizer: Optimizer,
 
     def shard_body(xs, ys, masks, active, weights, global_params):
         """Runs on one device with its slice of the cohort: the shared
-        scan/vmap body over the local client slots, the per-lane upload
-        round trip when compression is on (the aggregate must be formed
-        from what the server would reconstruct), then the local weighted
-        partial sum through the fed_aggregate kernel path, completed by a
-        psum across the clients axis."""
+        scan/vmap body over the local client slots, then ONE ``fed_reduce``
+        call fusing the upload round trip when compression is on (the
+        aggregate must be formed from what the server would reconstruct)
+        with the local weighted partial sum, completed by a psum across
+        the clients axis."""
         m_loc = active.shape[1]
         global_b = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (m_loc,) + p.shape), global_params)
@@ -102,12 +103,18 @@ def _make_sharded_cohort_fn(model: Model, optimizer: Optimizer,
         params_b, last_loss = cohort_scan(
             one_client, global_b, opt_b, xs, ys, masks, active,
             global_params)
-        if compressed:
-            from repro.federated.compression import lane_roundtrip
-            params_b = lane_roundtrip(global_b, params_b)
         flat = _flatten_cohort(params_b)                   # (M_loc, N)
-        partial = kernel_ops.fed_aggregate(weights, flat)  # (N,)
-        return jax.lax.psum(partial, axis), last_loss
+        seg = jnp.zeros(m_loc, jnp.int32)
+        # static at trace time: per-leaf widths for the fused quant scales
+        leaf_sizes = tuple(int(np.prod(p.shape))
+                           for p in jax.tree.leaves(global_params))
+        qref = _flatten_cohort(jax.tree.map(
+            lambda p: p[None], global_params))             # (1, N)
+        partial = kernel_ops.fed_reduce(                   # (1, N)
+            weights, flat, seg, 1,
+            leaf_sizes=leaf_sizes if compressed else None,
+            quant_ref=qref if compressed else None)
+        return jax.lax.psum(partial[0], axis), last_loss
 
     @jax.jit
     def run(xs, ys, masks, active, weights, global_params):

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels import ops as kernel_ops
 from repro.kernels.fed_aggregate import fed_aggregate
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rglru_scan import rglru_scan
@@ -91,3 +92,200 @@ def test_rglru_scan_decay_property():
     out2 = rglru_scan(jnp.zeros_like(b), b, chunk_t=32, block_b=1,
                       block_w=128, interpret=True)
     np.testing.assert_allclose(np.asarray(out2), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fed_reduce: fused segment aggregation (normalize + int8 round trip +
+# segment-sum + base), PR-10.  The contract under test is twofold:
+#   * Pallas kernel == the jitted jnp reference, bit for bit (both are
+#     production dispatch targets of kernels/ops.fed_reduce);
+#   * packing invariance — lane t of a T-segment call equals a standalone
+#     T=1 call over that lane's rows, bit for bit (what lets the sweep
+#     engines fuse T trials into one dispatch while staying parity-pinned
+#     against the one-trial-at-a-time FLServer).
+# ---------------------------------------------------------------------------
+
+def _reduce_case(m, n, t, seed, *, interleave=False, zero_w=0):
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(1.0, 100.0, m).astype(np.float32))
+    if zero_w:
+        w = w.at[jnp.asarray(rng.choice(m, zero_w, replace=False))].set(0.0)
+    if interleave:
+        seg = jnp.asarray(rng.integers(0, t, m).astype(np.int32))
+    else:
+        seg = jnp.asarray(np.sort(rng.integers(0, t, m)).astype(np.int32))
+    base = jnp.asarray(rng.standard_normal((t, n)).astype(np.float32))
+    return w, rows, seg, base
+
+
+@pytest.mark.parametrize("m,n,t", [(1, 256, 1), (7, 300, 3), (16, 1024, 4),
+                                   (33, 4097, 8)])
+@pytest.mark.parametrize("mode", ["plain", "normalize", "base", "quant"])
+def test_fed_reduce_pallas_matches_ref_bitwise(m, n, t, mode):
+    """Interpret-mode Pallas == jitted reference, bit for bit, in every
+    fusion mode — including non-pow2 row counts and column tails (the
+    kernel pads N to its block and M/T to pow2 internally)."""
+    w, rows, seg, base = _reduce_case(m, n, t, seed=m * 1000 + n)
+    kw = {}
+    if mode == "normalize":
+        kw["normalize"] = True
+    if mode == "base":
+        kw = {"normalize": True}
+    if mode == "quant":
+        kw = {"normalize": True, "leaf_sizes": (n // 3, n - n // 3),
+              "quant_ref": base, "quant_enabled": jnp.ones(m, bool)}
+    b = base if mode in ("base", "quant") else None
+    got = kernel_ops.fed_reduce(w, rows, seg, t, b,
+                                force_pallas=True, interpret=True, **kw)
+    want = kernel_ops.fed_reduce(w, rows, seg, t, b, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("interleave", [False, True])
+@pytest.mark.parametrize("quant", [False, True])
+def test_fed_reduce_packing_invariance(interleave, quant):
+    """Lane t of a fused T-segment call == a standalone T=1 call over that
+    lane's rows in pack order, bit for bit — even when segments are
+    interleaved rather than contiguous."""
+    m, n, t = 24, 513, 5
+    w, rows, seg, base = _reduce_case(m, n, t, seed=42,
+                                      interleave=interleave)
+    kw = dict(normalize=True)
+    if quant:
+        kw.update(leaf_sizes=(200, n - 200), quant_ref=base,
+                  quant_enabled=jnp.ones(m, bool))
+    fused = kernel_ops.fed_reduce(w, rows, seg, t, base, **kw)
+    segs = np.asarray(seg)
+    for s in range(t):
+        idx = np.nonzero(segs == s)[0]
+        kw1 = dict(normalize=True)
+        if quant:
+            kw1.update(leaf_sizes=(200, n - 200),
+                       quant_ref=base[s][None],
+                       quant_enabled=jnp.ones(len(idx), bool))
+        if len(idx) == 0:
+            # empty segment: base passes through untouched
+            np.testing.assert_array_equal(np.asarray(fused[s]),
+                                          np.asarray(base[s]))
+            continue
+        alone = kernel_ops.fed_reduce(
+            w[idx], rows[idx], jnp.zeros(len(idx), jnp.int32), 1,
+            base[s][None], **kw1)
+        np.testing.assert_array_equal(np.asarray(fused[s]),
+                                      np.asarray(alone[0]))
+
+
+def test_fed_reduce_singleton_and_empty_segments():
+    """T=4 with one singleton lane, one empty lane: the singleton reduces
+    to its (normalized) row + base, the empty lane passes base through."""
+    n = 128
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(rng.standard_normal((3, n)).astype(np.float32))
+    base = jnp.asarray(rng.standard_normal((4, n)).astype(np.float32))
+    w = jnp.asarray([5.0, 2.0, 3.0], jnp.float32)
+    seg = jnp.asarray([0, 0, 2], jnp.int32)       # lane 1 and 3 empty
+    out = kernel_ops.fed_reduce(w, rows, seg, 4, base, normalize=True)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(base[1]))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(base[3]))
+    # singleton lane: w/tot == 1 exactly, so lane 2 is row + base
+    one = kernel_ops.fed_reduce(w[2:], rows[2:],
+                                jnp.zeros(1, jnp.int32), 1, base[2][None],
+                                normalize=True)
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(one[0]))
+
+
+def test_fed_reduce_zero_weight_rows_are_bit_neutral():
+    """Padding rows with weight 0 (what the engines append to reach pow2
+    lane counts) leave every lane bit-identical — the fold adds +/-0.0."""
+    m, n, t = 12, 257, 3
+    w, rows, seg, base = _reduce_case(m, n, t, seed=7)
+    out = kernel_ops.fed_reduce(w, rows, seg, t, base, normalize=True)
+    rng = np.random.default_rng(8)
+    pad = jnp.asarray(rng.standard_normal((5, n)).astype(np.float32))
+    w2 = jnp.concatenate([w, jnp.zeros(5, jnp.float32)])
+    rows2 = jnp.concatenate([rows, pad])
+    seg2 = jnp.concatenate([seg, jnp.asarray([0, 1, 2, 0, 1], jnp.int32)])
+    out2 = kernel_ops.fed_reduce(w2, rows2, seg2, t, base, normalize=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_fed_reduce_per_lane_quant_mask():
+    """quant_enabled gates the round trip per ROW: disabled rows pass
+    through untouched, and a mixed-mask call equals quantizing exactly the
+    enabled rows up front, bit for bit."""
+    m, n, t = 10, 300, 2
+    w, rows, seg, base = _reduce_case(m, n, t, seed=11)
+    ls = (100, n - 100)
+    en = jnp.asarray(np.arange(m) % 2 == 0)
+    mixed = kernel_ops.fed_reduce(w, rows, seg, t, base, normalize=True,
+                                  leaf_sizes=ls, quant_ref=base,
+                                  quant_enabled=en)
+    pre = jax.jit(ref._quant_rows, static_argnames=("leaf_sizes",))(
+        rows, seg, base, en, ls)
+    want = kernel_ops.fed_reduce(w, pre, seg, t, base, normalize=True)
+    np.testing.assert_array_equal(np.asarray(mixed), np.asarray(want))
+
+
+def test_fed_reduce_quant_matches_tree_roundtrip():
+    """The fused in-kernel round trip == the per-tree compress_delta path
+    (both jitted — the production oracle pair), bit for bit through the
+    weighted reduce."""
+    from repro.federated.aggregation import _flatten, _unflatten
+    from repro.federated.compression import _tree_roundtrip
+
+    rng = np.random.default_rng(21)
+    gtree = {"w": jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32)),
+             "b": jnp.asarray(rng.standard_normal(16).astype(np.float32))}
+    gflat, meta = _flatten(gtree)
+    leaf_sizes = tuple(meta[2])
+    m = 6
+    rows = jnp.stack([
+        gflat + jnp.asarray(
+            rng.standard_normal(gflat.size).astype(np.float32)) * 0.1
+        for _ in range(m)])
+    w = jnp.asarray(rng.uniform(1, 50, m).astype(np.float32))
+    seg = jnp.zeros(m, jnp.int32)
+
+    fused = kernel_ops.fed_reduce(
+        w, rows, seg, 1, gflat[None], normalize=True,
+        leaf_sizes=leaf_sizes, quant_ref=gflat[None],
+        quant_enabled=jnp.ones(m, bool))
+
+    rt_rows = jnp.stack([
+        _flatten(_tree_roundtrip(gtree, _unflatten(rows[i], meta)))[0]
+        for i in range(m)])
+    want = kernel_ops.fed_reduce(w, rt_rows, seg, 1, gflat[None],
+                                 normalize=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+def test_fed_reduce_packing_invariance_property():
+    """Property form of the packing-invariance contract over random
+    segment layouts, weights (including zeros), and row counts."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 20), st.integers(1, 6), st.integers(0, 3),
+           st.randoms(use_true_random=False))
+    def prop(m, t, zero_w, rnd):
+        seed = rnd.randint(0, 2**31 - 1)
+        w, rows, seg, base = _reduce_case(
+            m, 65, t, seed, interleave=True, zero_w=min(zero_w, m - 1))
+        fused = kernel_ops.fed_reduce(w, rows, seg, t, base,
+                                      normalize=True)
+        segs = np.asarray(seg)
+        for s in range(t):
+            idx = np.nonzero(segs == s)[0]
+            if len(idx) == 0:
+                np.testing.assert_array_equal(np.asarray(fused[s]),
+                                              np.asarray(base[s]))
+                continue
+            alone = kernel_ops.fed_reduce(
+                w[idx], rows[idx], jnp.zeros(len(idx), jnp.int32), 1,
+                base[s][None], normalize=True)
+            np.testing.assert_array_equal(np.asarray(fused[s]),
+                                          np.asarray(alone[0]))
+
+    prop()

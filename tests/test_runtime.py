@@ -358,3 +358,89 @@ def test_async_deadline_selection_uses_multiple_clients():
     srv._client_update = spy
     srv.run()
     assert len(set(seen)) > 1, f"only client(s) {set(seen)} ever trained"
+
+
+# ---------------------------------------------------------------------------
+# VirtualFleet: derived (hash-drawn) client state, memory independent of K
+# ---------------------------------------------------------------------------
+
+def test_virtual_fleet_draws_independent_of_population_size():
+    """Client cid's device parameters depend only on (seed, cid) — never on
+    how many other clients exist — so a cohort drawn from a K=10^6 fleet
+    equals the same cids drawn from a K=10^3 fleet, bit for bit.  (This is
+    the property a (K,)-array rng sample CANNOT have, and why VirtualFleet
+    scales to million-client populations with cohort-sized memory.)"""
+    from repro.runtime import virtual_fleet
+    small = virtual_fleet("mobile", 1_000, seed=5)
+    huge = virtual_fleet("mobile", 1_000_000, seed=5)
+    cids = np.array([0, 1, 17, 999])
+    np.testing.assert_array_equal(small.speeds(cids), huge.speeds(cids))
+    np.testing.assert_array_equal(small.bws(cids), huge.bws(cids))
+
+
+def test_virtual_fleet_scalar_index_matches_bulk():
+    """The (K,)-array-shaped lazy views (``fleet.speed[cid]``…) answer the
+    exact bulk draw, so engine code indexing one cid at a time agrees with
+    the vectorized cost path."""
+    from repro.runtime import virtual_fleet
+    vf = virtual_fleet("stragglers", 10_000, seed=2)
+    for cid in (0, 77, 9_999):
+        assert vf.speed[cid] == vf.speeds(np.array([cid]))[0]
+        assert vf.up_bw[cid] == vf.bws(np.array([cid]))[0]
+        assert vf.down_bw[cid] == vf.bws(np.array([cid]))[0]
+    assert len(vf.speed) == 10_000
+    assert vf.availability[3] == vf.profile.availability
+    assert vf.dropout[3] == vf.profile.dropout
+
+
+def test_virtual_fleet_materialize_roundtrip():
+    """materialize() builds the array-backed Fleet with the same per-cid
+    draws, and both fleets answer fails()/time queries identically."""
+    from repro.runtime import virtual_fleet
+    vf = virtual_fleet("mobile", 200, seed=9)
+    fl = vf.materialize()
+    cids = np.arange(200)
+    np.testing.assert_array_equal(fl.speed, vf.speeds(cids))
+    np.testing.assert_array_equal(fl.up_bw, vf.bws(cids))
+    np.testing.assert_array_equal(fl.availability, vf.availability[cids])
+    assert vf.has_failures() == fl.has_failures()
+    for cid in (0, 13, 199):
+        for t in (0.0, 1.5, 333.25):
+            assert vf.fails(cid, t) == fl.fails(cid, t)
+            assert vf.comp_time(cid, 1000.0) == fl.comp_time(cid, 1000.0)
+            assert vf.trans_time(cid, 10.0, 5.0) == fl.trans_time(
+                cid, 10.0, 5.0)
+
+
+@pytest.mark.parametrize("make", ["sampled", "virtual"])
+def test_est_round_times_bulk_matches_scalar(make):
+    """The vectorized est_round_times (what FLServer.__init__ consumes) is
+    elementwise bit-identical to the scalar est_round_time loop it
+    replaced — for both fleet flavors."""
+    from repro.runtime import virtual_fleet
+    if make == "sampled":
+        fleet = sample_fleet("stragglers", 50, seed=7)
+    else:
+        fleet = virtual_fleet("stragglers", 50, seed=7)
+    cids = np.arange(50)
+    sizes = np.linspace(5, 200, 50)
+    bulk = fleet.est_round_times(cids, sizes, 2.0, 100.0, 10.0, 5.0)
+    for i, cid in enumerate(cids):
+        assert bulk[i] == fleet.est_round_time(int(cid), float(sizes[i]),
+                                               2.0, 100.0, 10.0, 5.0)
+
+
+def test_virtual_fleet_engine_parity_with_materialized():
+    """A full sync-runtime FL run over a VirtualFleet == the same run over
+    its materialized Fleet: same accuracies, costs, and virtual clock."""
+    from repro.runtime import virtual_fleet
+    vf = virtual_fleet("stragglers", 24, seed=3)
+    rt = RuntimeConfig(mode="sync", deadline_quantile=0.8)
+    a = mk_server(rt=rt, fleet=vf, selection="deadline").run()
+    b = mk_server(rt=rt, fleet=vf.materialize(), selection="deadline").run()
+    assert [h.accuracy for h in a.history] == [h.accuracy for h in b.history]
+    assert [h.sim_time for h in a.history] == [h.sim_time for h in b.history]
+    assert [h.n_updates for h in a.history] == [h.n_updates
+                                                for h in b.history]
+    np.testing.assert_array_equal(np.array(a.total_cost.as_tuple()),
+                                  np.array(b.total_cost.as_tuple()))
